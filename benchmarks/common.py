@@ -1,0 +1,85 @@
+"""Shared benchmark scaffolding: a trained reduced encoder + memo engine,
+cached across benchmark modules (building once keeps `-m benchmarks.run`
+tractable on 1 CPU core)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.engine import MemoConfig, MemoEngine
+from repro.data import TemplateCorpus
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update
+
+SEQ = 64
+VOCAB = 512
+
+
+def timeit_ms(fn, *args, reps=3):
+    fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+@functools.lru_cache(maxsize=4)
+def trained_encoder(arch: str = "bert_base", n_layers: int = 4,
+                    train_steps: int = 50, slot_fraction: float = 0.25,
+                    seq_len: int = SEQ):
+    """Returns (model, params, corpus): a classifier trained on the template
+    corpus — the reduced analogue of the paper's BERT/SST-2 setup."""
+    cfg = get_reduced(arch).replace(n_classes=4, n_layers=n_layers)
+    model = build_model(cfg, layer_loop="unroll")
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=seq_len, n_templates=8,
+                            slot_fraction=slot_fraction, seed=0)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(model.classify_loss)(p, b)
+        p, o = adamw_update(p, g, o, lr=3e-4)
+        return loss, p, o
+
+    for b in corpus.batches(train_steps, 32):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        loss, params, opt = step(params, opt, b)
+    return model, params, corpus
+
+
+@functools.lru_cache(maxsize=4)
+def built_engine(threshold: float = 0.8, mode: str = "select",
+                 calib_batches: int = 6, arch: str = "bert_base",
+                 seq: int = SEQ, n_layers: int = 4):
+    model, params, corpus = trained_encoder(arch, n_layers=n_layers,
+                                            seq_len=seq)
+    eng = MemoEngine(model, params,
+                     MemoConfig(threshold=threshold, mode=mode,
+                                embed_steps=150))
+    batches = [{"tokens": jnp.asarray(corpus.sample(32)[0])}
+               for _ in range(calib_batches)]
+    eng.build(jax.random.PRNGKey(1), batches)
+    # per-model threshold levels (paper Table 2 / §5.4 autotuner)
+    eng.levels = eng.suggest_levels(
+        [{"tokens": jnp.asarray(corpus.sample(16)[0])}])
+    return eng, corpus
+
+
+def accuracy(model, params, toks, labels):
+    logits = model.classify(params, {"tokens": jnp.asarray(toks)})
+    return float((np.argmax(np.asarray(logits), -1) == labels).mean())
+
+
+def accuracy_memo(eng, toks, labels, threshold=None, active=None):
+    logits, st = eng.infer({"tokens": jnp.asarray(toks)},
+                           threshold=threshold, active_layers=active)
+    return (float((np.argmax(np.asarray(logits), -1) == labels).mean()), st)

@@ -1,0 +1,43 @@
+"""Paper Fig. 10 — end-to-end inference speedup vs batch size and
+memoization level (bucket mode: the latency win is real, not simulated)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import built_engine
+
+def _lat(eng, toks, **kw):
+    eng.infer({"tokens": toks}, **kw)                  # warm/compile
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        logits, st = eng.infer({"tokens": toks}, **kw)
+        jax.block_until_ready(logits)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), st
+
+
+def run():
+    rows = []
+    # longer sequences: attention is what memoization replaces, so the win
+    # scales with S (paper uses 512/1024)
+    eng, corpus = built_engine(mode="bucket", seq=192)
+    eng.mc.mode = "bucket"
+    levels = eng.levels
+    rows.append(("fig10/levels", 0.0,
+                 ";".join(f"{k}={v:.3f}" for k, v in levels.items())))
+    for B in (1, 16, 32):
+        toks = jnp.asarray(corpus.sample(B)[0])
+        t_base, _ = _lat(eng, toks, use_memo=False)
+        rows.append((f"fig10/B{B}_baseline", t_base * 1e6, "no memo"))
+        for name, thr in levels.items():
+            t, st = _lat(eng, toks, threshold=thr)
+            rows.append((f"fig10/B{B}_{name}", t * 1e6,
+                         f"speedup={(t_base / t - 1) * 100:+.1f}%;"
+                         f"memo_rate={st.memo_rate:.2f}"))
+    eng.mc.mode = "select"
+    return rows

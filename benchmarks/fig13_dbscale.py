@@ -1,0 +1,28 @@
+"""Paper Fig. 13 — bigger attention database => higher memo rate (the
+big-memory trade)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import MemoConfig, MemoEngine
+from benchmarks.common import trained_encoder
+
+
+def run():
+    rows = []
+    model, params, corpus = trained_encoder()
+    toks = jnp.asarray(corpus.sample(48)[0])
+    for n_calib in (2, 4, 8):
+        eng = MemoEngine(model, params,
+                         MemoConfig(threshold=0.85, embed_steps=100))
+        batches = [{"tokens": jnp.asarray(corpus.sample(32)[0])}
+                   for _ in range(n_calib)]
+        eng.build(jax.random.PRNGKey(1), batches)
+        thr = eng.suggest_levels(
+            [{"tokens": jnp.asarray(corpus.sample(16)[0])}])["moderate"]
+        _, st = eng.infer({"tokens": toks}, threshold=thr)
+        rows.append((f"fig13/db{len(eng.db)}", 0.0,
+                     f"db_mb={eng.db.nbytes/1e6:.1f};"
+                     f"memo_rate={st.memo_rate:.2f}"))
+    return rows

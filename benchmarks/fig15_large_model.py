@@ -1,0 +1,36 @@
+"""Paper Fig. 15 / §6.9 — memoization potential in a larger decoder LLM:
+per-layer top-1 similarity at layer 0 vs a mid layer (the paper reports
+layer 0 ≫ layer 15 on LLaMA-7B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.similarity import pairwise_similarity
+from repro.data import TemplateCorpus
+from repro.models import build_model
+
+
+def run():
+    rows = []
+    # deepseek-7b family reduced, deeper than the bench encoder
+    cfg = get_reduced("deepseek_7b").replace(n_layers=8)
+    model = build_model(cfg, layer_loop="unroll")
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=64, seed=4)
+
+    def apms(toks):
+        _, caps, _ = model.forward(params, {"tokens": jnp.asarray(toks)},
+                                   capture=True)
+        return {li: jnp.asarray(c["apm"]) for li, c in caps.items()}
+
+    db = apms(corpus.sample(64)[0])
+    q = apms(corpus.sample(16)[0])
+    for li in (0, len(db) // 2, len(db) - 1):
+        best = np.asarray(jnp.max(pairwise_similarity(q[li], db[li]), 1))
+        rows.append((f"fig15/deepseek_layer{li}", 0.0,
+                     f"mean_top1_sim={best.mean():.3f};"
+                     f"frac_ge_0.5={float((best >= 0.5).mean()):.2f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Paper Fig. 1 — self-attention share of total inference time.
+
+Measures the attention fraction for encoder/decoder reduced models at two
+sequence lengths (the paper reports 43-83%, growing with length)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_ms
+from repro.configs import get_reduced
+from repro.data import TemplateCorpus
+from repro.models import backbone as bb
+from repro.models import build_model
+
+
+def run():
+    rows = []
+    for arch in ("bert_base", "gpt2_small"):
+        cfg = get_reduced(arch).replace(n_layers=4)
+        model = build_model(cfg, layer_loop="unroll")
+        params = model.init(jax.random.PRNGKey(0))
+        for seq in (64, 256):
+            corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=seq, seed=0)
+            toks = jnp.asarray(corpus.sample(16)[0])
+            fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+            total = timeit_ms(fwd, params, toks)
+
+            positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                         toks.shape)
+            from repro.models import attention as attn_mod
+            mask = "causal" if cfg.causal else "bidir"
+
+            def attn_all(p, t):
+                h = bb.embed_tokens(p, t, cfg)
+                outs = []
+                for li, kind, lp in bb.iter_layers(p, cfg):
+                    x = bb.norm_apply(lp["norm1"], h, cfg.norm)
+                    y, _ = attn_mod.gqa_apply(lp["mix"], x, cfg,
+                                              positions=positions,
+                                              mask_kind=mask)
+                    outs.append(y)
+                return outs
+            attn_ms = timeit_ms(jax.jit(attn_all), params, toks)
+            frac = attn_ms / total
+            rows.append((f"fig1/{arch}_seq{seq}", total * 1e3,
+                         f"attn_frac={frac:.2f}"))
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig. 4 + Tables 2/5 — memoization threshold sweep: memo rate vs
+inference accuracy at conservative/moderate/aggressive levels."""
+from __future__ import annotations
+
+from benchmarks.common import accuracy, accuracy_memo, built_engine
+
+def run():
+    rows = []
+    eng, corpus = built_engine()
+    toks, labels = corpus.sample(96)
+    base = accuracy(eng.model, eng.params, toks, labels)
+    rows.append(("fig4/baseline", 0.0, f"acc={base:.3f};memo_rate=0.00"))
+    thresholds = dict(eng.levels)          # paper Table 2, autotuned
+    thresholds["all"] = -1.0
+    for name, thr in thresholds.items():
+        acc, st = accuracy_memo(eng, toks, labels, threshold=thr)
+        rows.append((f"fig4/{name}", 0.0,
+                     f"acc={acc:.3f};memo_rate={st.memo_rate:.2f};"
+                     f"acc_delta={acc - base:+.3f}"))
+    return rows

@@ -1,0 +1,107 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch × shape) on the single-pod mesh:
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+(cost_analysis is per-device on the SPMD-partitioned module; scan bodies
+are corrected via the unrolled 1/2-unit diff — see launch/dryrun.py.)
+
+Also reports MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the
+usefulness ratio MODEL_FLOPS / (HLO_FLOPs × devices).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+HBM_CAP = 16e9               # B / chip
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def analyze(rec) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    dev = rec["devices"]
+    corr = rec["corrected"]
+    full_coll = rec.get("full", {}).get("collectives", {}).get("total", 0)
+    t_comp = corr["flops"] / PEAK_FLOPS
+    t_mem = corr["bytes"] / HBM_BW
+    # the unroll-diff can go slightly negative when XLA fuses collectives
+    # differently between the 1- and 2-unit lowerings; clamp to the static
+    # count from the full compile
+    t_coll = max(corr["collective_bytes"], full_coll) / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = corr["flops"] * dev
+    peak = rec.get("full", {}).get("peak_bytes", 0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "peak_gb": peak / 1e9,
+        "fits_hbm": bool(peak and peak <= HBM_CAP),
+        "step_lower_bound_s": max(terms.values()),
+    }
+
+
+def load_records(dirpath="experiments/dryrun", mesh="pod256"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, f"*_{mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def table(dirpath="experiments/dryrun") -> str:
+    rows = [analyze(r) for r in load_records(dirpath)]
+    hdr = (f"{'arch':18s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>10s} {'useful':>7s} {'peakGB':>7s} "
+           f"{'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for a in rows:
+        lines.append(
+            f"{a['arch']:18s} {a['shape']:12s} {a['compute_s']:10.3e} "
+            f"{a['memory_s']:10.3e} {a['collective_s']:10.3e} "
+            f"{a['bottleneck']:>10s} {a['useful_ratio']:7.2f} "
+            f"{a['peak_gb']:7.2f} {str(a['fits_hbm']):>5s}")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for rec in load_records():
+        a = analyze(rec)
+        rows.append((
+            f"roofline/{a['arch']}_{a['shape']}",
+            a["step_lower_bound_s"] * 1e6,
+            f"bound={a['bottleneck']};compute_s={a['compute_s']:.3e};"
+            f"memory_s={a['memory_s']:.3e};"
+            f"collective_s={a['collective_s']:.3e};"
+            f"useful={a['useful_ratio']:.2f};peak_gb={a['peak_gb']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,57 @@
+"""Benchmark harness (deliverable d) — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig10,table6]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig1_breakdown",      # Fig 1: attention share of inference
+    "fig3_similarity",     # Fig 3 + Fig 12: similarity distributions
+    "fig4_threshold",      # Fig 4 + Tables 2/5: threshold/accuracy
+    "table4_breakdown",    # Table 4: memo step breakdown
+    "table6_gather",       # Table 6: copy vs mapping gather
+    "fig10_speedup",       # Fig 10: e2e speedup x batch x level
+    "table7_selective",    # Table 7: selective memoization
+    "fig11_reuse",         # Fig 11: APM reuse histogram
+    "fig13_dbscale",       # Fig 13: DB-size scaling
+    "fig15_large_model",   # Fig 15: larger-model potential
+    "ablations",           # beyond-paper: similarity knob + index ablation
+    "roofline",            # deliverable (g): from the dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.2f},{derived}", flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 4 — single memoized self-attention breakdown: embedding,
+search, fetch (the mmap analogue), and remaining compute, vs the plain
+attention path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import built_engine, timeit_ms
+from repro.core.engine import MemoStats
+
+
+def run():
+    rows = []
+    eng, corpus = built_engine()
+    toks = jnp.asarray(corpus.sample(32)[0])
+    st = MemoStats()
+    eng.infer({"tokens": toks}, stats=st)           # warm
+    st = MemoStats()
+    logits, st = eng.infer({"tokens": toks}, stats=st)
+    n = len(eng.layers)
+    per = 1e3 / n
+    rows.append(("table4/embed_ms_per_layer", st.t_embed * per,
+                 f"total_s={st.t_embed:.3f}"))
+    rows.append(("table4/search_ms_per_layer", st.t_search * per,
+                 f"total_s={st.t_search:.3f}"))
+    rows.append(("table4/fetch_ms_per_layer", st.t_fetch * per,
+                 f"total_s={st.t_fetch:.3f}"))
+    rows.append(("table4/layer_compute_ms", st.t_attn * per,
+                 f"total_s={st.t_attn:.3f}"))
+    # plain attention reference (what memoization replaces)
+    from repro.models import backbone as bb
+    li, kind, lp = next(bb.iter_layers(eng.params, eng.cfg))
+    h = bb.embed_tokens(eng.params, toks, eng.cfg)
+    x = bb.norm_apply(lp["norm1"], h, eng.cfg.norm)
+    pos = jnp.broadcast_to(jnp.arange(toks.shape[1], dtype=jnp.int32),
+                           toks.shape)
+    t_attn = timeit_ms(lambda: eng._attn_only(lp, x, kind, pos))
+    t_memo = timeit_ms(lambda: eng._memo_only(
+        lp, x, kind, jnp.asarray(eng.db.get([0] * toks.shape[0],
+                                            count_reuse=False),
+                                 jnp.float32)))
+    rows.append(("table4/attn_full_ms", t_attn * 1e3, "QKt+softmax+AV"))
+    rows.append(("table4/attn_memo_only_ms", t_memo * 1e3,
+                 f"AV_only;saving={(1 - t_memo / t_attn) * 100:.0f}%"))
+    return rows

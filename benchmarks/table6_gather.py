@@ -1,0 +1,46 @@
+"""Paper Table 6 — APM gathering: per-entry copy (the PyTorch strawman) vs
+arena fancy-index gather (host zero-copy analogue) vs fused device gather
+(DeviceDB / the memo_attention BlockSpec gather)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.database import AttentionDB, DeviceDB
+
+
+def _time(fn, reps=5):
+    fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for L, B in ((64, 32), (128, 32), (128, 64)):
+        H, N = 4, 256
+        db = AttentionDB((H, L, L), capacity=N)
+        db.add(rng.random((N, H, L, L)).astype(np.float16))
+        ids = rng.integers(0, N, B)
+        t_naive = _time(lambda: db.get_naive(ids))
+        t_arena = _time(lambda: db.get(ids, count_reuse=False))
+        ddb = DeviceDB(jnp.asarray(db._arena[:N], jnp.float16))
+        idx = jnp.asarray(ids)
+        gather = jax.jit(ddb.gather)
+        t_dev = _time(lambda: gather(idx))
+        rows.append((f"table6/L{L}_B{B}_copy", t_naive * 1e3, "per-entry copy"))
+        rows.append((f"table6/L{L}_B{B}_arena", t_arena * 1e3,
+                     f"speedup={t_naive / max(t_arena, 1e-9):.1f}x"))
+        rows.append((f"table6/L{L}_B{B}_device", t_dev * 1e3,
+                     f"speedup={t_naive / max(t_dev, 1e-9):.1f}x"))
+    return rows

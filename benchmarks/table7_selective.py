@@ -1,0 +1,43 @@
+"""Paper Table 7 — selective memoization: apply memo only at layers with
+positive predicted benefit (Eq. 3); report latency + memo-rate deltas."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import built_engine
+
+
+def _lat(eng, toks, **kw):
+    eng.infer({"tokens": toks}, **kw)
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        logits, st = eng.infer({"tokens": toks}, **kw)
+        jax.block_until_ready(logits)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), st
+
+
+def run():
+    rows = []
+    eng, corpus = built_engine(mode="bucket")
+    eng.mc.mode = "bucket"
+    toks = jnp.asarray(corpus.sample(32)[0])
+    pm = eng.profile({"tokens": toks})
+    active = pm.active_layers()
+    rows.append(("table7/active_layers", 0.0,
+                 f"{len(active)}/{len(eng.layers)}:{active}"))
+    t_all, st_all = _lat(eng, toks, threshold=eng.levels["moderate"])
+    t_sel, st_sel = _lat(eng, toks, threshold=eng.levels["moderate"],
+                         active_layers=active)
+    rows.append(("table7/all_layers", t_all * 1e6,
+                 f"memo_rate={st_all.memo_rate:.2f}"))
+    rows.append(("table7/selective", t_sel * 1e6,
+                 f"memo_rate={st_sel.memo_rate:.2f};"
+                 f"time_delta={(1 - t_sel / t_all) * 100:+.1f}%"))
+    eng.mc.mode = "select"
+    return rows

@@ -1,0 +1,72 @@
+"""Quickstart: AttMemo in ~60 lines.
+
+Train a small encoder on the template corpus, build the attention +
+index databases, and compare plain vs memoized inference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.engine import MemoConfig, MemoEngine
+from repro.data import TemplateCorpus
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update
+
+# 1. a small BERT-family classifier (the paper's primary evaluation model)
+cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=4)
+model = build_model(cfg, layer_loop="unroll")
+params = model.init(jax.random.PRNGKey(0))
+corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=64, n_templates=8,
+                        slot_fraction=0.25)
+
+# 2. brief training
+opt = adamw_init(params)
+
+@jax.jit
+def step(p, o, b):
+    loss, g = jax.value_and_grad(model.classify_loss)(p, b)
+    p, o = adamw_update(p, g, o, lr=3e-4)
+    return loss, p, o
+
+print("training ...")
+for batch in corpus.batches(40, 32):
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    loss, params, opt = step(params, opt, batch)
+print(f"  final loss {float(loss):.4f}")
+
+# 3. build the memoization databases from a calibration stream
+engine = MemoEngine(model, params,
+                    MemoConfig(threshold=0.8, mode="bucket"))
+calib = [{"tokens": jnp.asarray(corpus.sample(32)[0])} for _ in range(5)]
+engine.build(jax.random.PRNGKey(1), calib, verbose=True)
+print(f"attention DB: {len(engine.db)} APMs, {engine.db.nbytes/1e6:.1f} MB")
+
+# per-model threshold calibration (paper Table 2 / §5.4 autotuner)
+levels = engine.suggest_levels([{"tokens": jnp.asarray(corpus.sample(16)[0])}])
+engine.mc.threshold = levels["aggressive"]
+print(f"calibrated thresholds: {levels}")
+
+# 4. plain vs memoized inference
+toks, labels = corpus.sample(64)
+batchd = {"tokens": jnp.asarray(toks)}
+
+logits, _ = engine.infer(batchd, use_memo=False)      # warm both paths
+logits_m, _ = engine.infer(batchd)
+
+t0 = time.perf_counter()
+logits, _ = engine.infer(batchd, use_memo=False)
+t_plain = time.perf_counter() - t0
+t0 = time.perf_counter()
+logits_m, st = engine.infer(batchd)
+t_memo = time.perf_counter() - t0
+
+acc = (np.argmax(np.asarray(logits), -1) == labels).mean()
+acc_m = (np.argmax(np.asarray(logits_m), -1) == labels).mean()
+print(f"plain    : {t_plain*1e3:7.1f} ms  acc {acc:.3f}")
+print(f"memoized : {t_memo*1e3:7.1f} ms  acc {acc_m:.3f}  "
+      f"memo-rate {st.memo_rate*100:.0f}%")

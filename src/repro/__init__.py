@@ -1,0 +1,1 @@
+"""AttMemo-JAX: attention memoization on big-memory systems (Feng et al. 2023), as a multi-pod JAX framework."""

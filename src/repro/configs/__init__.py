@@ -1,0 +1,44 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``.
+
+Every assigned architecture (and the paper's own evaluation models) is a
+module exporting CONFIG and reduced().
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    EncoderConfig, InputShape, INPUT_SHAPES, MLAConfig, ModelConfig, MoEConfig,
+)
+
+ARCH_IDS = [
+    "minicpm3_4b",
+    "rwkv6_3b",
+    "whisper_medium",
+    "dbrx_132b",
+    "deepseek_7b",
+    "recurrentgemma_2b",
+    "qwen2_1_5b",
+    "chameleon_34b",
+    "qwen3_8b",
+    "kimi_k2_1t_a32b",
+    # the paper's own evaluation models (reduced-trainable analogues)
+    "bert_base",
+    "gpt2_small",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({"qwen2-1.5b": "qwen2_1_5b", "kimi-k2-1t-a32b": "kimi_k2_1t_a32b"})
+
+
+def _module(arch_id: str):
+    key = _ALIASES.get(arch_id, arch_id).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _module(arch_id).reduced()

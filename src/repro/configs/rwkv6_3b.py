@@ -1,0 +1,36 @@
+"""RWKV-6 "Finch" 3B — attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892] 32L d_model=2560 d_ff=8960 vocab=65536. Head dim 64
+(40 heads). AttMemo is inapplicable (no APM) — see DESIGN.md
+§Arch-applicability.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    arch_type="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,                 # d_model / rwkv_head_dim
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab=65536,
+    mixer="rwkv6",
+    rwkv_head_dim=64,
+    glu=False,                  # rwkv channel-mix is its own shape
+    source="[arXiv:2404.05892]",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="rwkv6-reduced", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=4, d_ff=896, vocab=512, rwkv_head_dim=64,
+    )
+
+
+def optimized() -> ModelConfig:
+    """Adopted §Perf pair-2 (it6) configuration (EXPERIMENTS.md):
+    batch-sharded recurrent scan — one activation resharding per layer
+    instead of per scan step. 4.5x on the dominant roofline term."""
+    return CONFIG.replace(act_shard_batch=("data", "model"))

@@ -1,0 +1,10 @@
+"""AttMemo core — the paper's contribution as composable JAX modules."""
+from repro.core.similarity import (  # noqa: F401
+    memo_rate, pairwise_similarity, similarity_score)
+from repro.core.embedding import Embedder, train_embedder  # noqa: F401
+from repro.core.index import ExactIndex, IVFIndex, recall_at_1  # noqa: F401
+from repro.core.database import (  # noqa: F401
+    AttentionDB, DeviceDB, distributed_search)
+from repro.core.selective import LayerProfile, PerfModel  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    LEVELS, MemoConfig, MemoEngine, MemoStats)

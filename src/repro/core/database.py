@@ -1,0 +1,118 @@
+"""Attention database — the big-memory APM store (paper §5.1, §5.3).
+
+Two tiers (DESIGN.md §2):
+
+* ``AttentionDB`` — host-RAM tier. APMs live in one large preallocated
+  float16 arena (the pod host's RAM is the "big memory"); fetches are
+  zero-copy numpy views into the arena, batched into a single device
+  transfer — the engine-level analogue of the paper's mmap gathering.
+  Reuse counts are tracked for the Fig-11 analysis.
+
+* ``DeviceDB`` — device-resident tier for the pure-JAX serving path: the DB
+  is a jnp array (shardable over the ``data`` mesh axis); lookup is a fused
+  gather the memo_attention Pallas kernel can consume directly by index
+  (the TPU "zero-copy": the APM tile flows HBM→VMEM exactly once).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AttentionDB:
+    def __init__(self, apm_shape: Tuple[int, int, int], capacity: int = 1024,
+                 dtype=np.float16):
+        """apm_shape: (H, L, L) per entry."""
+        self.apm_shape = tuple(apm_shape)
+        self.capacity = capacity
+        self.dtype = dtype
+        self._arena = np.zeros((capacity,) + self.apm_shape, dtype)
+        self._n = 0
+        self.reuse_counts = np.zeros(capacity, np.int64)
+
+    def __len__(self):
+        return self._n
+
+    @property
+    def nbytes(self) -> int:
+        return self._n * int(np.prod(self.apm_shape)) * self._arena.itemsize
+
+    def add(self, apms: np.ndarray) -> np.ndarray:
+        """apms: (B, H, L, L). Returns assigned indices."""
+        b = apms.shape[0]
+        if self._n + b > self.capacity:
+            grow = max(self.capacity, self._n + b)
+            self._arena = np.concatenate(
+                [self._arena, np.zeros((grow,) + self.apm_shape,
+                                       self.dtype)], 0)
+            self.reuse_counts = np.concatenate(
+                [self.reuse_counts, np.zeros(grow, np.int64)])
+            self.capacity += grow
+        idx = np.arange(self._n, self._n + b)
+        self._arena[idx] = np.asarray(apms, self.dtype)
+        self._n += b
+        return idx
+
+    def get(self, indices, count_reuse: bool = True) -> np.ndarray:
+        """Batched fetch: one fancy-index gather out of the arena (no
+        per-entry copies) — compare benchmarks/table6_gather.py."""
+        indices = np.asarray(indices).reshape(-1)
+        if count_reuse:
+            np.add.at(self.reuse_counts, indices, 1)
+        return self._arena[indices]
+
+    def get_naive(self, indices) -> np.ndarray:
+        """The paper's 'memory copy' strawman: per-entry slice + copy +
+        re-stack (what PyTorch-style per-tensor gathering does)."""
+        parts = [self._arena[int(i)].copy() for i in np.asarray(indices)]
+        return np.stack(parts, 0)
+
+    def reuse_histogram(self):
+        used = self.reuse_counts[: self._n]
+        return np.bincount(used[used >= 0])
+
+
+class DeviceDB:
+    """Device-resident APM store; shard over the data axis for pods."""
+
+    def __init__(self, apms: jnp.ndarray, sharding=None):
+        self.apms = (jax.device_put(apms, sharding) if sharding is not None
+                     else jnp.asarray(apms))
+
+    def __len__(self):
+        return self.apms.shape[0]
+
+    def gather(self, indices):
+        """Fused XLA gather (B,) → (B, H, L, L); with a sharded DB, XLA
+        inserts the cross-shard collective automatically."""
+        return jnp.take(self.apms, indices, axis=0)
+
+
+def distributed_search(embs, queries, mesh, *, db_axis="data"):
+    """Distributed exact top-1 over an entry-sharded embedding table:
+    each shard computes its local argmin (one MXU matmul), then a small
+    (n_shards, B) all-gather + global argmin — the pod-scale index search
+    (DESIGN.md §2). embs: (N, dim) sharded P(db_axis); queries: (B, dim)
+    replicated. Returns (sq_dists (B,), global_idx (B,))."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(db, q):
+        n_loc = db.shape[0]
+        d2 = (jnp.sum(q * q, -1, keepdims=True)
+              - 2.0 * q @ db.T + jnp.sum(db * db, -1)[None, :])
+        loc_arg = jnp.argmin(d2, axis=-1)
+        loc_min = jnp.take_along_axis(d2, loc_arg[:, None], -1)[:, 0]
+        shard = jax.lax.axis_index(db_axis)
+        gidx = loc_arg + shard * n_loc
+        mins = jax.lax.all_gather(loc_min, db_axis)      # (shards, B)
+        idxs = jax.lax.all_gather(gidx, db_axis)
+        best = jnp.argmin(mins, axis=0)                  # (B,)
+        cols = jnp.arange(q.shape[0])
+        return mins[best, cols], idxs[best, cols]
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(P(db_axis, None), P()),
+        out_specs=(P(), P()), check_vma=False)(embs, queries)

@@ -1,0 +1,101 @@
+"""Hidden-state embedding model + Siamese trainer (paper §5.2).
+
+A lightweight 3-layer MLP maps a hidden state (L, H) to a 128-d feature
+vector. Per the paper all neurons are linear (y = wx + b) — the composition
+is a learned linear metric, which is exactly why it is cheap enough for the
+memo fast-path; a ``tanh`` variant is available as a knob.
+
+Training uses the Siamese scheme: two weight-tied towers embed a pair of
+hidden states; the loss is
+    ( ‖e₁ − e₂‖₂ − d_gt )²   with   d_gt = 1 − SC(APM₁, APM₂)
+so embedding distance learns to predict APM dissimilarity — no labels
+needed (paper §5.2 "Training the embedding model").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.similarity import similarity_score
+from repro.models.layers import dense_init
+
+
+@dataclass
+class Embedder:
+    params: dict
+    pool: int              # token-pool stride before flatten
+    act: str               # "linear" | "tanh"
+
+    @staticmethod
+    def init(key, seq_len: int, hidden: int, *, dim: int = 128,
+             widths: Tuple[int, int] = (512, 256), pool: int = 8,
+             act: str = "linear") -> "Embedder":
+        """pool: mean-pool the token axis by this stride before the MLP so
+        the input layer stays 'tens of thousands of neurons' (paper)."""
+        pooled = max(1, seq_len // pool)
+        d_in = pooled * hidden
+        ks = jax.random.split(key, 3)
+        params = {
+            "w1": dense_init(ks[0], (d_in, widths[0])),
+            "b1": jnp.zeros((widths[0],)),
+            "w2": dense_init(ks[1], (widths[0], widths[1])),
+            "b2": jnp.zeros((widths[1],)),
+            "w3": dense_init(ks[2], (widths[1], dim)),
+            "b3": jnp.zeros((dim,)),
+        }
+        return Embedder(params, pool, act)
+
+    def __call__(self, hidden):
+        return embed_apply(self.params, hidden, self.pool, self.act)
+
+
+def _maybe_act(x, act):
+    return jnp.tanh(x) if act == "tanh" else x
+
+
+def embed_apply(params, hidden, pool: int, act: str):
+    """hidden: (B, L, H) → (B, dim)."""
+    B, L, H = hidden.shape
+    pooled = max(1, L // pool)
+    h = hidden[:, : pooled * pool].reshape(B, pooled, pool, H).mean(2)
+    h = h.reshape(B, -1).astype(jnp.float32)
+    h = _maybe_act(h @ params["w1"] + params["b1"], act)
+    h = _maybe_act(h @ params["w2"] + params["b2"], act)
+    return h @ params["w3"] + params["b3"]
+
+
+def siamese_loss(params, pair_a, pair_b, d_gt, pool, act):
+    ea = embed_apply(params, pair_a, pool, act)
+    eb = embed_apply(params, pair_b, pool, act)
+    dist = jnp.sqrt(jnp.sum(jnp.square(ea - eb), -1) + 1e-12)
+    return jnp.mean(jnp.square(dist - d_gt))
+
+
+def train_embedder(key, embedder: Embedder, hiddens, apms, *, steps=300,
+                   pair_batch=64, lr=1e-3) -> Tuple[Embedder, list]:
+    """hiddens: (N, L, H); apms: (N, H_heads, L, L). Returns trained
+    embedder + loss history."""
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    n = hiddens.shape[0]
+    opt_state = adamw_init(embedder.params)
+    loss_fn = jax.jit(lambda p, a, b, d: siamese_loss(
+        p, a, b, d, embedder.pool, embedder.act))
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, a, b, d: siamese_loss(
+        p, a, b, d, embedder.pool, embedder.act)))
+    params = embedder.params
+    history = []
+    rng = np.random.default_rng(
+        int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
+    for step in range(steps):
+        ia = rng.integers(0, n, pair_batch)
+        ib = rng.integers(0, n, pair_batch)
+        d_gt = 1.0 - jax.vmap(similarity_score)(apms[ia], apms[ib])
+        loss, grads = grad_fn(params, hiddens[ia], hiddens[ib], d_gt)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        history.append(float(loss))
+    return Embedder(params, embedder.pool, embedder.act), history

@@ -1,0 +1,494 @@
+"""AttMemo online inference engine (paper §5.1 Fig. 5).
+
+Orchestrates, per memoizable layer:
+    hidden state → MLP embedding → index search → threshold check →
+    APM fetch from the attention database → memoized attention.
+
+Execution modes (DESIGN.md §2, the TPU adaptation of "dynamic fallback"):
+
+* ``select``  — both paths are computed and combined with ``jnp.where``
+                (reference semantics; used for accuracy studies).
+* ``bucket``  — the batch is split into hit/miss sub-batches
+                (continuous-batching style): hits run the memo-only
+                attention (no Q/K projection, no QKᵀ, no softmax), misses
+                run normal attention. This is where the latency win is real.
+
+The engine also builds the database: run the model with APM capture on a
+calibration corpus, train the Siamese embedder, index the embeddings.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.database import AttentionDB
+from repro.core.embedding import Embedder, train_embedder
+from repro.core.index import ExactIndex, IVFIndex
+from repro.core.selective import LayerProfile, PerfModel, timeit_median
+from repro.core.similarity import similarity_score
+from repro.models import attention as attn_mod
+from repro.models import backbone as bb
+
+# paper Table 2 — per-model threshold levels
+LEVELS = {"conservative": 0.98, "moderate": 0.97, "aggressive": 0.96}
+
+
+@dataclass
+class MemoConfig:
+    threshold: float = 0.97
+    mode: str = "select"            # select | bucket | kernel
+    index_kind: str = "exact"       # exact | ivf
+    embed_dim: int = 128
+    embed_pool: int = 8
+    embed_act: str = "linear"
+    embed_steps: int = 300
+    bucket_quantum: int = 4         # hit-bucket padding quantum
+    max_layers: Optional[int] = None
+
+
+@dataclass
+class MemoStats:
+    n_inputs: int = 0
+    n_layer_attempts: int = 0
+    n_hits: int = 0
+    sims: List[float] = field(default_factory=list)
+    t_embed: float = 0.0
+    t_search: float = 0.0
+    t_fetch: float = 0.0
+    t_attn: float = 0.0
+    t_other: float = 0.0
+    per_layer_hits: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def memo_rate(self) -> float:
+        return self.n_hits / max(1, self.n_layer_attempts)
+
+
+class MemoEngine:
+    def __init__(self, model, params, memo_cfg: MemoConfig = MemoConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.mc = memo_cfg
+        self.is_encdec = getattr(model, "is_encdec", False)
+        if self.is_encdec:
+            # enc-dec (whisper): memoize ENCODER self-attention — fixed
+            # frame count, bidirectional APMs, reused across requests
+            self.layers = list(range(self.cfg.encoder.n_layers))
+        else:
+            self.layers = list(self.cfg.memoizable_layers())
+        if memo_cfg.max_layers:
+            self.layers = self.layers[: memo_cfg.max_layers]
+        self.db: Optional[AttentionDB] = None
+        self.index = None
+        self.embedder: Optional[Embedder] = None
+        self.sim_cal = (-1.0, 1.0)       # sim ≈ a·dist + b calibration
+        self.perf: Optional[PerfModel] = None
+        self._jit_cache: Dict = {}
+
+    # ------------------------------------------------------------------ build
+    def build(self, key, batches: Sequence[dict], *, train_pairs=512,
+              verbose=False):
+        """Populate the attention + index databases from a calibration
+        corpus and train the embedding model."""
+        hiddens, apms = [], []
+        for batch in batches:
+            _, caps = self.model.classify(self.params, batch, capture=True) \
+                if self.cfg.n_classes else self.model.forward(
+                    self.params, batch, capture=True)[:2]
+            for li in self.layers:
+                if li in caps:
+                    hiddens.append(np.asarray(caps[li]["hidden"]))
+                    apms.append(np.asarray(caps[li]["apm"], np.float16))
+        hiddens = np.concatenate(hiddens, 0)      # (N, L, H)
+        apms = np.concatenate(apms, 0)            # (N, heads, L, L)
+        n, L, H = hiddens.shape
+
+        self.db = AttentionDB(apms.shape[1:], capacity=n)
+        self.db.add(apms)
+
+        k1, k2 = jax.random.split(key)
+        emb = Embedder.init(k1, L, H, dim=self.mc.embed_dim,
+                            pool=self.mc.embed_pool, act=self.mc.embed_act)
+        sub = min(n, max(64, train_pairs))
+        self.embedder, hist = train_embedder(
+            k2, emb, jnp.asarray(hiddens[:sub]), jnp.asarray(apms[:sub]),
+            steps=self.mc.embed_steps)
+        if verbose:
+            print(f"embedder loss {hist[0]:.4f} -> {hist[-1]:.4f}")
+
+        embs = np.asarray(self._embed(jnp.asarray(hiddens)))
+        if self.mc.index_kind == "ivf":
+            self.index = IVFIndex(self.mc.embed_dim,
+                                  n_lists=max(4, int(np.sqrt(n))))
+        else:
+            self.index = ExactIndex(self.mc.embed_dim)
+        self.index.add(embs)
+        self._calibrate(hiddens, apms)
+        return self
+
+    def _embed(self, hiddens):
+        fn = self._jit_cache.get("embed")
+        if fn is None:
+            pool, act = self.embedder.pool, self.embedder.act
+            from repro.core.embedding import embed_apply
+            fn = jax.jit(lambda p, h: embed_apply(p, h, pool, act))
+            self._jit_cache["embed"] = fn
+        return fn(self.embedder.params, hiddens)
+
+    def _calibrate(self, hiddens, apms, n_pairs=256):
+        """Fit sim ≈ a·dist + b so search distances predict similarity."""
+        rng = np.random.default_rng(0)
+        n = hiddens.shape[0]
+        ia, ib = rng.integers(0, n, n_pairs), rng.integers(0, n, n_pairs)
+        ea = np.asarray(self._embed(jnp.asarray(hiddens[ia])))
+        eb = np.asarray(self._embed(jnp.asarray(hiddens[ib])))
+        dist = np.linalg.norm(ea - eb, axis=-1)
+        sim = np.asarray(jax.vmap(similarity_score)(
+            jnp.asarray(apms[ia]), jnp.asarray(apms[ib])))
+        if np.std(dist) < 1e-9:
+            self.sim_cal = (0.0, float(np.mean(sim)))
+        else:
+            a, b = np.polyfit(dist, sim, 1)
+            self.sim_cal = (float(a), float(b))
+
+    def predict_sim(self, dist: np.ndarray) -> np.ndarray:
+        a, b = self.sim_cal
+        return a * dist + b
+
+    def suggest_levels(self, batches) -> Dict[str, float]:
+        """Per-model threshold levels (paper Table 2 tunes these per model;
+        §5.4 suggests an autotuner). Percentiles of the top-1 predicted
+        similarity on calibration queries: conservative admits only the
+        best-matched quartile, aggressive admits three quartiles."""
+        sims = []
+        for batch in batches:
+            h = bb.embed_tokens(self.params, batch["tokens"], self.cfg)
+            for li, kind, lp in bb.iter_layers(self.params, self.cfg):
+                if li in self.layers and kind in ("attn", "mla"):
+                    x = bb.norm_apply(lp["norm1"], h, self.cfg.norm)
+                    emb = self._embed(x)
+                    dist, _ = self.index.search(np.asarray(emb), 1)
+                    sims.extend(self.predict_sim(dist[:, 0]).tolist())
+                h = self._layer_plain(lp, h, kind, li, None,
+                                      jnp.broadcast_to(
+                                          jnp.arange(h.shape[1],
+                                                     dtype=jnp.int32),
+                                          h.shape[:2]))
+        sims = np.asarray(sims)
+        return {"conservative": float(np.percentile(sims, 75)),
+                "moderate": float(np.percentile(sims, 50)),
+                "aggressive": float(np.percentile(sims, 25))}
+
+    # ------------------------------------------------------------------ infer
+    def infer(self, batch, *, threshold: Optional[float] = None,
+              active_layers: Optional[Sequence[int]] = None,
+              stats: Optional[MemoStats] = None, use_memo: bool = True):
+        """Memoized forward. Returns (logits, stats)."""
+        thr = self.mc.threshold if threshold is None else threshold
+        active = set(self.layers if active_layers is None else active_layers)
+        st = stats or MemoStats()
+        cfg = self.cfg
+        if self.is_encdec:
+            return self._infer_encdec(batch, thr, active, st, use_memo)
+        tokens = batch["tokens"]
+        st.n_inputs += tokens.shape[0]
+        h = bb.embed_tokens(self.params, tokens, cfg)
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+
+        for li, kind, lp in bb.iter_layers(self.params, cfg):
+            memo = None
+            if use_memo and li in active and kind in ("attn", "mla") \
+                    and self.db is not None:
+                memo = self._lookup(lp, h, kind, thr, st, li)
+            t0 = time.perf_counter()
+            if memo is not None and self.mc.mode == "bucket":
+                h = self._layer_bucket(lp, h, kind, li, memo, positions)
+            elif memo is not None and self.mc.mode == "kernel" \
+                    and kind == "attn":
+                h = self._layer_kernel(lp, h, li, memo, positions)
+            else:
+                h = self._layer_plain(lp, h, kind, li, memo, positions)
+            jax.block_until_ready(h)
+            st.t_attn += time.perf_counter() - t0
+        if cfg.n_classes:
+            return bb.classify_from_hidden(self.params, h, cfg), st
+        return bb.logits_from_hidden(self.params, h, cfg), st
+
+    def _infer_encdec(self, batch, thr, active, st: MemoStats, use_memo):
+        """Whisper path: memoized encoder, plain decoder."""
+        from repro.models import encdec as ed
+        cfg, params = self.cfg, self.params
+        frames = batch["frames"]
+        st.n_inputs += frames.shape[0]
+        h = (frames.astype(params["enc_pos"].dtype)
+             + params["enc_pos"][None, : frames.shape[1]])
+        ecfg = self.model._ecfg
+        positions = jnp.broadcast_to(
+            jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2])
+        for li in range(cfg.encoder.n_layers):
+            lp = jax.tree.map(lambda a: a[li], params["enc_layers"])
+            memo = None
+            if use_memo and li in active and self.db is not None:
+                memo = self._lookup(lp, h, "attn", thr, st, li)
+            key = ("enc_layer", memo is not None, h.shape)
+            fn = self._jit_cache.get(key)
+            if fn is None:
+                def run(lp, hh, memo, positions):
+                    from repro.models import attention as am
+                    from repro.models.layers import mlp_apply
+                    x = bb.norm_apply(lp["norm1"], hh, cfg.norm)
+                    y, _ = am.gqa_apply(lp["attn"], x, ecfg,
+                                        positions=positions,
+                                        mask_kind="bidir", memo=memo,
+                                        use_rope=False)
+                    hh = hh + y
+                    x = bb.norm_apply(lp["norm2"], hh, cfg.norm)
+                    return hh + mlp_apply(lp["mlp"], x, cfg.act, cfg.glu)
+                fn = jax.jit(run)
+                self._jit_cache[key] = fn
+            h = fn(lp, h, memo, positions)
+        enc_h = bb.norm_apply(params["enc_norm"], h, cfg.norm)
+        hd, _ = ed.decode_tokens(params, batch["tokens"], enc_h, cfg,
+                                 mode="full")
+        hd = bb.norm_apply(params["final_norm"], hd, cfg.norm)
+        return hd @ params["embed"].T, st
+
+    def _lookup(self, lp, h, kind, thr, st: MemoStats, li):
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        x = bb.norm_apply(lp["norm1"], h, cfg.norm)
+        emb = self._embed(x)
+        jax.block_until_ready(emb)
+        t1 = time.perf_counter()
+        dist, idx = self.index.search(np.asarray(emb), 1)
+        sim_est = self.predict_sim(dist[:, 0])
+        hit = sim_est > thr
+        t2 = time.perf_counter()
+        apm = self.db.get(idx[:, 0])                     # host arena gather
+        t3 = time.perf_counter()
+        st.t_embed += t1 - t0
+        st.t_search += t2 - t1
+        st.t_fetch += t3 - t2
+        st.n_layer_attempts += hit.shape[0]
+        st.n_hits += int(hit.sum())
+        st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + int(hit.sum())
+        st.sims.extend(sim_est.tolist())
+        # keep the APM batch in the arena dtype (f16) and on the host —
+        # the jitted consumer casts on-device (one transfer, no copies)
+        return attn_mod.Memo(apm=apm, hit=hit, idx=idx[:, 0])
+
+    # -- layer application --------------------------------------------------
+    def _layer_plain(self, lp, h, kind, li, memo, positions):
+        key = ("plain", kind, li if self.cfg.moe else 0, memo is not None,
+               h.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            def run(lp, h, memo, positions):
+                out, _, _, _ = bb._layer_apply(
+                    lp, h, cfg, kind, li, mode="full", positions=positions,
+                    pos=None, cache=None, memo=memo)
+                return out
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, h, memo, positions)
+
+    def _layer_bucket(self, lp, h, kind, li, memo, positions):
+        """Split rows into hit/miss buckets; hits use the memo-only
+        attention (skips QKᵀ+softmax for real), misses run normally.
+        The whole layer (norm → bucketed attention → scatter-combine →
+        channel mixer) is ONE jitted dispatch — the engine-level analogue
+        of cutting the paper's 'cascaded memory access' chain (§5.3)."""
+        cfg = self.cfg
+        hit = np.asarray(memo.hit)
+        B = h.shape[0]
+        hit_idx = np.nonzero(hit)[0]
+        miss_idx = np.nonzero(~hit)[0]
+        if hit_idx.size == 0:
+            return self._layer_plain(lp, h, kind, li, None, positions)
+        # power-of-2 bucket padding bounds the number of distinct compiled
+        # shapes to log2(B) per layer kind
+        q = self.mc.bucket_quantum
+
+        def pad_to(n):
+            p = q
+            while p < n:
+                p *= 2
+            return min(p, B)
+
+        nh = pad_to(hit_idx.size)
+        nm = pad_to(miss_idx.size) if miss_idx.size else 0
+        sel_h = np.concatenate([hit_idx,
+                                np.zeros(nh - hit_idx.size, np.int64)])
+        sel_m = (np.concatenate([miss_idx,
+                                 np.zeros(nm - miss_idx.size, np.int64)])
+                 if nm else np.zeros(0, np.int64))
+        # ship only the hit APMs, in the arena dtype (f16)
+        apm_hit = np.asarray(memo.apm)[sel_h]
+
+        key = ("bucket", kind, li if self.cfg.moe else 0, h.shape, nh, nm)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            n_hit_real = None  # shapes only; real counts via masks below
+
+            def run(lp, h, apm, sel_h, sel_m, keep_h, keep_m, positions):
+                x = bb.norm_apply(lp["norm1"], h, cfg.norm)
+                f_memo = (attn_mod.gqa_apply_memo if kind == "attn"
+                          else attn_mod.mla_apply_memo)
+                y = jnp.zeros_like(h)
+                y_hit = f_memo(lp["mix"], jnp.take(x, sel_h, 0), cfg,
+                               apm.astype(jnp.float32))
+                y = y.at[sel_h].add(y_hit * keep_h[:, None, None])
+                if sel_m.shape[0]:
+                    f_attn = (attn_mod.gqa_apply if kind == "attn"
+                              else attn_mod.mla_apply)
+                    y_miss, _ = f_attn(
+                        lp["mix"], jnp.take(x, sel_m, 0), cfg,
+                        positions=jnp.take(positions, sel_m, 0),
+                        mask_kind="causal" if cfg.causal else "bidir",
+                        window=cfg.sliding_window)
+                    y = y.at[sel_m].add(y_miss * keep_m[:, None, None])
+                h = h + y
+                x = bb.norm_apply(lp["norm2"], h, cfg.norm)
+                ck = bb._chan_kind(cfg, li)
+                if ck == "moe":
+                    from repro.models import moe as moe_mod
+                    out, _ = moe_mod.moe_apply(lp["chan"], x, cfg)
+                else:
+                    from repro.models.layers import mlp_apply
+                    out = mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
+                return h + out
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        keep_h = (np.arange(nh) < hit_idx.size).astype(np.float32)
+        keep_m = (np.arange(nm) < miss_idx.size).astype(np.float32)
+        return fn(lp, h, jnp.asarray(apm_hit), jnp.asarray(sel_h),
+                  jnp.asarray(sel_m), jnp.asarray(keep_h),
+                  jnp.asarray(keep_m), positions)
+
+    def _layer_kernel(self, lp, h, li, memo, positions):
+        """The TPU-native serving path: hits are served by the fused
+        Pallas memo_attention kernel — APM tiles gathered from the
+        device-resident DB by scalar-prefetched index, QKᵀ+softmax skipped
+        per-sequence via pl.when (interpret mode on CPU)."""
+        cfg = self.cfg
+        if not hasattr(self, "_device_db") or \
+                len(self._device_db) != len(self.db):
+            self._device_db = jnp.asarray(self.db._arena[: len(self.db)])
+        hit_idx = jnp.asarray(np.asarray(memo.idx), jnp.int32)
+        hit = jnp.asarray(np.asarray(memo.hit), jnp.int32)
+        key = ("kernel", li if cfg.moe else 0, h.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            def run(lp, h, db, hit_idx, hit, positions):
+                from repro.kernels.memo_attention.ops import memo_attention
+                x = bb.norm_apply(lp["norm1"], h, cfg.norm)
+                q, k, v = attn_mod._qkv(lp["mix"], x, cfg, positions)
+                S = x.shape[1]
+                blk = max(8, min(128, S))
+                out = memo_attention(
+                    q, k, v, db, hit_idx, hit, causal=cfg.causal,
+                    window=cfg.sliding_window,
+                    block_q=blk, block_k=blk, interpret=True)
+                y = jnp.einsum("bshe,hed->bsd", out, lp["mix"]["wo"])
+                h2 = h + y
+                x = bb.norm_apply(lp["norm2"], h2, cfg.norm)
+                from repro.models.layers import mlp_apply
+                return h2 + mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, h, self._device_db, hit_idx, hit, positions)
+
+    def _memo_only(self, lp, x, kind, apm):
+        key = ("memo_only", kind, x.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            f = (attn_mod.gqa_apply_memo if kind == "attn"
+                 else attn_mod.mla_apply_memo)
+            fn = jax.jit(lambda lp, x, apm: f(lp["mix"], x, cfg, apm))
+            self._jit_cache[key] = fn
+        return fn(lp, x, apm)
+
+    def _attn_only(self, lp, x, kind, positions):
+        key = ("attn_only", kind, x.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            mask_kind = "causal" if cfg.causal else "bidir"
+            f = attn_mod.gqa_apply if kind == "attn" else attn_mod.mla_apply
+
+            def run(lp, x, positions):
+                y, _ = f(lp["mix"], x, cfg, positions=positions,
+                         mask_kind=mask_kind, window=cfg.sliding_window)
+                return y
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, x, positions)
+
+    def _chan_only(self, lp, h, li):
+        key = ("chan", li if self.cfg.moe else 0, h.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            ck = bb._chan_kind(cfg, li)
+
+            def run(lp, h):
+                x = bb.norm_apply(lp["norm2"], h, cfg.norm)
+                if ck == "moe":
+                    from repro.models import moe as moe_mod
+                    y, _ = moe_mod.moe_apply(lp["chan"], x, cfg)
+                else:
+                    from repro.models.layers import mlp_apply
+                    y = mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
+                return h + y
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, h)
+
+    # ------------------------------------------------------------- selective
+    def profile(self, batch, *, alpha_from: Optional[MemoStats] = None
+                ) -> PerfModel:
+        """Offline profiler (paper §5.4): measure per-layer attention time
+        and memo overhead on a calibration batch; α comes from calibration
+        stats (or a dry lookup pass)."""
+        cfg = self.cfg
+        h = bb.embed_tokens(self.params, batch["tokens"], cfg)
+        positions = jnp.broadcast_to(
+            jnp.arange(batch["tokens"].shape[1], dtype=jnp.int32),
+            batch["tokens"].shape)
+        if alpha_from is None:
+            st = MemoStats()
+            self.infer(batch, stats=st)
+            alpha_from = st
+        profiles = {}
+        for li, kind, lp in bb.iter_layers(self.params, cfg):
+            if li not in self.layers:
+                h = self._layer_plain(lp, h, kind, li, None, positions)
+                continue
+            t_attn = timeit_median(
+                lambda lp=lp, h=h, k=kind: self._attn_only(lp, h, k,
+                                                           positions), reps=3)
+            t_over = timeit_median(
+                lambda h=h: self._embed(h), reps=3)
+            emb = np.asarray(self._embed(h))
+            t0 = time.perf_counter()
+            dist, idx = self.index.search(emb, 1)
+            self.db.get(idx[:, 0], count_reuse=False)
+            t_over += time.perf_counter() - t0
+            B = batch["tokens"].shape[0]
+            alpha = (alpha_from.per_layer_hits.get(li, 0)
+                     / max(1, alpha_from.n_inputs))
+            profiles[li] = LayerProfile(t_attn=t_attn, t_overhead=t_over,
+                                        alpha=min(1.0, alpha))
+            h = self._layer_plain(lp, h, kind, li, None, positions)
+        self.perf = PerfModel(profiles)
+        return self.perf

@@ -1,0 +1,131 @@
+"""Index database — ANN search over hidden-state embeddings (paper §5.3).
+
+The paper uses Faiss HNSW; HNSW's sequential graph walk is hostile to TPUs
+and to SPMD, so we provide matmul-shaped indexes (DESIGN.md §2):
+
+* ``ExactIndex``  — exact batched L2 top-k (the oracle; also fast on MXU:
+                    ‖q‖² − 2·q·Dᵀ + ‖d‖² is one matmul).
+* ``IVFIndex``    — k-means coarse quantizer + exact search in the nprobe
+                    nearest lists; sub-linear in N like HNSW, but batched.
+
+Both return (distances, indices); the engine converts distance → predicted
+similarity (the Siamese loss trains ‖e₁−e₂‖ ≈ 1 − SC).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ExactIndex:
+    def __init__(self, dim: int):
+        self.dim = dim
+        self._embs: Optional[np.ndarray] = None
+
+    def __len__(self):
+        return 0 if self._embs is None else self._embs.shape[0]
+
+    def add(self, embs: np.ndarray):
+        embs = np.asarray(embs, np.float32)
+        self._embs = (embs if self._embs is None
+                      else np.concatenate([self._embs, embs], 0))
+
+    def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        """q: (B, dim) → (dists (B,k) L2, idx (B,k))."""
+        d2 = _sq_dists(jnp.asarray(q, jnp.float32),
+                       jnp.asarray(self._embs))
+        if k == 1:
+            idx = jnp.argmin(d2, -1)
+            dist = jnp.take_along_axis(d2, idx[:, None], -1)
+            out = (np.sqrt(np.maximum(np.asarray(dist), 0.0)),
+                   np.asarray(idx)[:, None])
+        else:
+            neg, idx = jax.lax.top_k(-d2, k)
+            out = (np.sqrt(np.maximum(-np.asarray(neg), 0.0)),
+                   np.asarray(idx))
+        return out
+
+
+@jax.jit
+def _sq_dists(q, d):
+    qn = jnp.sum(q * q, -1, keepdims=True)
+    dn = jnp.sum(d * d, -1)
+    return qn - 2.0 * (q @ d.T) + dn[None, :]
+
+
+class IVFIndex:
+    """k-means coarse quantizer; lists stored as a padded dense array so the
+    probe search stays one gather + one matmul."""
+
+    def __init__(self, dim: int, n_lists: int = 16, nprobe: int = 4,
+                 kmeans_iters: int = 10, seed: int = 0):
+        self.dim = dim
+        self.n_lists = n_lists
+        self.nprobe = min(nprobe, n_lists)
+        self.kmeans_iters = kmeans_iters
+        self.seed = seed
+        self._embs: Optional[np.ndarray] = None
+        self._built = False
+
+    def __len__(self):
+        return 0 if self._embs is None else self._embs.shape[0]
+
+    def add(self, embs: np.ndarray):
+        embs = np.asarray(embs, np.float32)
+        self._embs = (embs if self._embs is None
+                      else np.concatenate([self._embs, embs], 0))
+        self._built = False
+
+    def _build(self):
+        x = self._embs
+        n = x.shape[0]
+        k = min(self.n_lists, n)
+        rng = np.random.default_rng(self.seed)
+        cent = x[rng.choice(n, k, replace=False)].copy()
+        for _ in range(self.kmeans_iters):
+            d2 = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(cent)))
+            assign = d2.argmin(1)
+            for c in range(k):
+                m = assign == c
+                if m.any():
+                    cent[c] = x[m].mean(0)
+        d2 = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(cent)))
+        assign = d2.argmin(1)
+        cap = max(1, int(np.bincount(assign, minlength=k).max()))
+        lists = np.full((k, cap), -1, np.int64)
+        fill = np.zeros(k, np.int64)
+        for i, c in enumerate(assign):
+            lists[c, fill[c]] = i
+            fill[c] += 1
+        self._cent = cent
+        self._lists = lists
+        self._padded = np.where(lists[..., None] >= 0, x[lists.clip(0)],
+                                np.inf).astype(np.float32)
+        self._built = True
+
+    def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        if not self._built:
+            self._build()
+        q = np.asarray(q, np.float32)
+        B = q.shape[0]
+        dc = np.asarray(_sq_dists(jnp.asarray(q), jnp.asarray(self._cent)))
+        probes = np.argsort(dc, 1)[:, : self.nprobe]           # (B, nprobe)
+        cand_ids = self._lists[probes].reshape(B, -1)          # (B, nprobe*cap)
+        cand = self._padded[probes].reshape(B, -1, self.dim)
+        diff = cand - q[:, None]
+        d2 = np.where(np.isfinite(cand).all(-1),
+                      np.einsum("bcd,bcd->bc", diff, diff), np.inf)
+        order = np.argsort(d2, 1)[:, :k]
+        dist = np.sqrt(np.maximum(np.take_along_axis(d2, order, 1), 0.0))
+        idx = np.take_along_axis(cand_ids, order, 1)
+        return dist, idx
+
+
+def recall_at_1(index, oracle: ExactIndex, queries) -> float:
+    """Fraction of queries where the index returns the oracle's top-1."""
+    _, ia = index.search(queries, 1)
+    _, ib = oracle.search(queries, 1)
+    return float((ia[:, 0] == ib[:, 0]).mean())

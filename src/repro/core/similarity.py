@@ -1,0 +1,37 @@
+"""Similarity metrics from the paper.
+
+Eq. 1 — total-variation similarity between attention probability matrices:
+    SC(A, A') = 1 - (1/L) Σ_p ½ ‖A[p,:] − A'[p,:]‖₁   ∈ [0, 1]
+Eq. 2 — memoization rate: ms = M / (N·L).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def similarity_score(a, a_prime):
+    """TV similarity. a, a_prime: (L, L) → scalar; (H, L, L) → scalar
+    (head-averaged); (B, H, L, L) → (B,)."""
+    tv = 0.5 * jnp.sum(jnp.abs(a.astype(jnp.float32)
+                               - a_prime.astype(jnp.float32)), axis=-1)
+    if a.ndim <= 3:
+        return 1.0 - jnp.mean(tv)
+    return 1.0 - jnp.mean(tv, axis=tuple(range(1, a.ndim - 1)))
+
+
+def memo_rate(n_memoized: int, n_inputs: int, n_layers: int) -> float:
+    """Eq. 2."""
+    return n_memoized / float(n_inputs * n_layers)
+
+
+@jax.jit
+def pairwise_similarity(a_batch, b_batch):
+    """a_batch: (N, H, L, L) vs b_batch: (M, H, L, L) → (N, M) head-averaged
+    similarity matrix (memory-safe lax.map over N)."""
+    def one(a):
+        tv = 0.5 * jnp.sum(jnp.abs(a[None].astype(jnp.float32)
+                                   - b_batch.astype(jnp.float32)), axis=-1)
+        return 1.0 - jnp.mean(tv, axis=tuple(range(1, tv.ndim)))
+    return jax.lax.map(one, a_batch)

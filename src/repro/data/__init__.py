@@ -1,0 +1,1 @@
+from repro.data.synthetic import TemplateCorpus, lm_batches  # noqa: F401

@@ -1,0 +1,25 @@
+"""Jit'd wrapper: model-layout (B,S,H,dh) → kernel layout, GQA, padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=False):
+    """q: (B, S, H, dh); k, v: (B, S, Hkv, dh) → (B, S, H, dh)."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

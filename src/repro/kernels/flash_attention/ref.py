@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (BH, S, d); k, v: (BHkv, S, d). GQA broadcast by head grouping."""
+    BH, S, d = q.shape
+    BHkv = k.shape[0]
+    group = BH // BHkv
+    qg = q.reshape(BHkv, group, S, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("hgqd,hkd->hgqk", qg, kf) * d ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[None, None, :, None], p, 0.0)
+    out = jnp.einsum("hgqk,hkd->hgqd", p, v.astype(jnp.float32))
+    return out.reshape(BH, S, d).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.memo_attention.ops import memo_attention  # noqa: F401

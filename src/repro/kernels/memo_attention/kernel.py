@@ -1,0 +1,128 @@
+"""Fused memoized attention (the paper's hot path, TPU-native).
+
+Per (batch, head, q-tile, k-tile) with per-sequence hit flags scalar-
+prefetched:
+
+* hit  — the APM tile is gathered straight out of the HBM-resident
+  attention database by ``db_apm[hit_idx[b], h, iq, ik]`` in the BlockSpec
+  index_map and consumed by the APM·V matmul in VMEM. The gathered APM
+  never materializes in HBM — this is the TPU analogue of the paper's
+  mmap zero-copy gathering (DESIGN.md §2). QKᵀ and softmax are skipped
+  via ``pl.when``.
+* miss — inline flash attention (online softmax), and the (speculatively
+  fetched) APM tile is ignored.
+
+Scalar prefetch is what lets the gather index be data-dependent per
+sequence while the grid stays static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *, scale, causal, window, block_q,
+                 block_k, seq_len):
+    b = pl.program_id(0)
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    hit = hit_ref[b] == 1
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    @pl.when(hit)
+    def _memo_path():
+        apm = apm_ref[0, 0].astype(jnp.float32)          # (block_q, block_k)
+        acc_scr[...] += jax.lax.dot_general(
+            apm, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_not(hit))
+    def _flash_path():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(s <= NEG_INF * 0.5, 0.0, jnp.exp(s - m_new[:, None]))
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _fin():
+        # hit: APM rows already sum to 1 — no normalization
+        denom = jnp.where(hit, 1.0, jnp.maximum(l_scr[...], 1e-30))
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, causal=True,
+                        window=None, block_q=128, block_k=128,
+                        interpret=False):
+    """q: (B, H, S, d); k, v: (B, Hkv, S, d); db_apm: (N, H, S, S) —
+    the device-resident attention DB; hit_idx, hit: (B,) int32."""
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, "pad upstream"
+    nq, nk = S // block_q, S // block_k
+
+    kernel = functools.partial(
+        _memo_kernel, scale=d ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_len=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, iq, ik, *_: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
+            # the DB gather: data-dependent entry via scalar prefetch
+            pl.BlockSpec((1, 1, block_q, block_k),
+                         lambda b, h, iq, ik, hit_idx, hit:
+                         (hit_idx[b], h, iq, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, iq, ik, *_: (b, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(hit_idx.astype(jnp.int32), hit.astype(jnp.int32), q, k, v, db_apm)

@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the fused memo-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.memo_attention.kernel import memo_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def memo_attention(q, k, v, db_apm, hit_idx, hit, *, causal=True, window=None,
+                   block_q=128, block_k=128, interpret=False):
+    """Model layout: q (B,S,H,dh), k/v (B,S,Hkv,dh), db_apm (N,H,S,S),
+    hit_idx/hit (B,). Misses clamp the gather index to 0 (the tile fetch is
+    speculative; its result is ignored)."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    hit_idx = jnp.where(hit.astype(bool), hit_idx, 0)
+    out = memo_attention_bhsd(qt, kt, vt, db_apm, hit_idx, hit,
+                              causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for memo_attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def memo_attention_ref(q, k, v, db_apm, hit_idx, hit, *, causal=True,
+                       window=None):
+    """q: (B,H,S,d); k,v: (B,Hkv,S,d); db_apm: (N,H,S,S); hit_idx/hit: (B,)."""
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, S, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * d ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[..., None].T, p, 0.0)
+    p = p.reshape(B, H, S, S)
+    memo_p = jnp.take(db_apm, hit_idx, axis=0).astype(jnp.float32)
+    p = jnp.where((hit == 1)[:, None, None, None], memo_p, p)
+    vg = v.astype(jnp.float32)
+    pg = p.reshape(B, Hkv, group, S, S)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", pg, vg)
+    return out.reshape(B, H, S, d).astype(q.dtype)

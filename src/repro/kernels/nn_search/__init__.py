@@ -1,0 +1,1 @@
+from repro.kernels.nn_search.ops import nn_search  # noqa: F401

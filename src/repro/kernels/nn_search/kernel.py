@@ -1,0 +1,92 @@
+"""Streaming L2 top-1 search over a big HBM-resident embedding DB.
+
+Flash-attention-style streaming: the query tile (block_q × dim) stays in
+VMEM while DB tiles (block_n × dim) stream HBM→VMEM; squared distances are
+one MXU matmul (‖q‖² − 2·q·Dᵀ + ‖d‖²) and the running (min, argmin) lives
+in VMEM scratch across the sequential N-grid dimension. This is the index
+database's TPU-native search primitive (paper §5.3 uses Faiss HNSW; see
+DESIGN.md §2 for why HNSW does not transfer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e30
+
+
+def _nn_kernel(q_ref, db_ref, od_ref, oi_ref, bd_scr, bi_scr, *,
+               block_q, block_n, n_total):
+    iN = pl.program_id(1)
+
+    @pl.when(iN == 0)
+    def _init():
+        bd_scr[...] = jnp.full_like(bd_scr, BIG)
+        bi_scr[...] = jnp.zeros_like(bi_scr)
+
+    q = q_ref[...].astype(jnp.float32)               # (block_q, dim)
+    d = db_ref[...].astype(jnp.float32)              # (block_n, dim)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    dn = jnp.sum(d * d, axis=-1)
+    d2 = qn - 2.0 * jax.lax.dot_general(
+        q, d, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + dn[None, :]
+    npos = iN * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_n), 1)
+    d2 = jnp.where(npos < n_total, d2, BIG)
+
+    local_min = jnp.min(d2, axis=-1)
+    local_arg = (iN * block_n + jnp.argmin(d2, axis=-1)).astype(jnp.int32)
+    upd = local_min < bd_scr[...]
+    bd_scr[...] = jnp.where(upd, local_min, bd_scr[...])
+    bi_scr[...] = jnp.where(upd, local_arg, bi_scr[...])
+
+    @pl.when(iN == pl.num_programs(1) - 1)
+    def _fin():
+        od_ref[...] = bd_scr[...]
+        oi_ref[...] = bi_scr[...]
+
+
+def nn_search_kernel(q, db, *, block_q=128, block_n=512, interpret=False):
+    """q: (B, dim), db: (N, dim) → (sq_dists (B,), idx (B,))."""
+    B, dim = q.shape
+    N = db.shape[0]
+    block_q = min(block_q, B)
+    block_n = min(block_n, N)
+    pad_b = (-B) % block_q
+    pad_n = (-N) % block_n
+    if pad_b:
+        q = jnp.pad(q, ((0, pad_b), (0, 0)))
+    if pad_n:
+        db = jnp.pad(db, ((0, pad_n), (0, 0)))
+    nb = q.shape[0] // block_q
+    nN = db.shape[0] // block_n
+
+    kernel = functools.partial(_nn_kernel, block_q=block_q, block_n=block_n,
+                               n_total=N)
+    od, oi = pl.pallas_call(
+        kernel,
+        grid=(nb, nN),
+        in_specs=[
+            pl.BlockSpec((block_q, dim), lambda ib, iN: (ib, 0)),
+            pl.BlockSpec((block_n, dim), lambda ib, iN: (iN, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda ib, iN: (ib,)),
+            pl.BlockSpec((block_q,), lambda ib, iN: (ib,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((q.shape[0],), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, db)
+    return od[:B], oi[:B]

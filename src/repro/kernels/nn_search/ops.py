@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the streaming nn_search kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.nn_search.kernel import nn_search_kernel
+
+
+@partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
+def nn_search(q, db, *, block_q=128, block_n=512, interpret=False):
+    """Top-1 L2 over the DB. Returns (squared_dists (B,), idx (B,))."""
+    return nn_search_kernel(q, db, block_q=block_q, block_n=block_n,
+                            interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for nn_search."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nn_search_ref(q, db):
+    """q: (B, dim), db: (N, dim) → (sq_dists (B,), idx (B,))."""
+    qf, df = q.astype(jnp.float32), db.astype(jnp.float32)
+    d2 = (jnp.sum(qf * qf, -1, keepdims=True) - 2.0 * qf @ df.T
+          + jnp.sum(df * df, -1)[None, :])
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    return jnp.take_along_axis(d2, idx[:, None], 1)[:, 0], idx

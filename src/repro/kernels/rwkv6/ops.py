@@ -1,0 +1,28 @@
+"""Jit'd wrapper: model layout (B, S, nh, N) → kernel layout + padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_chunked_bhsn
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(r, k, v, w, u, *, chunk=32, interpret=False):
+    """r,k,v,w: (B, S, nh, N); u: (nh, N) → o: (B, S, nh, N)."""
+    B, S, nh, N = r.shape
+    pad = (-S) % chunk
+    if pad:
+        # pad with w=1 (no decay), k=0 (no writes) — exact
+        ext = lambda t, fill: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                                      constant_values=fill)
+        r, k, v, w = ext(r, 0), ext(k, 0), ext(v, 0), ext(w, 1)
+    def to_bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * nh, S + pad, N)
+    ub = jnp.broadcast_to(u[None], (B, nh, N)).reshape(B * nh, N)
+    o = wkv6_chunked_bhsn(to_bh(r), to_bh(k), to_bh(v), to_bh(w), ub,
+                          chunk=chunk, interpret=interpret)
+    o = o.reshape(B, nh, S + pad, N).transpose(0, 2, 1, 3)
+    return o[:, :S]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: the sequential RWKV-6 recurrence (same math as
+models/rwkv._wkv_scan, reshaped to kernel layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (BH, S, N); u: (BH, N) → o: (BH, S, N)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (BH, N)
+        kv = jnp.einsum("bi,bj->bij", k_t, v_t)
+        o_t = jnp.einsum("bi,bij->bj", r_t, s + u[..., None] * kv)
+        return w_t[..., None] * s + kv, o_t
+    BH, S, N = r.shape
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r, k, v, w))
+    s0 = jnp.zeros((BH, N, N), jnp.float32)
+    _, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype)

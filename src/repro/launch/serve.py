@@ -1,0 +1,100 @@
+"""Serving launcher: batched request loop with optional AttMemo memoization.
+
+    python -m repro.launch.serve --arch bert_base --reduced --requests 64
+    python -m repro.launch.serve --arch gpt2_small --reduced --no-memo
+
+Loads (or trains briefly) a reduced model, builds the attention/index
+databases from a calibration stream, then serves batches and reports
+latency with/without memoization plus the memo-rate breakdown.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.core.engine import LEVELS, MemoConfig, MemoEngine
+from repro.data import TemplateCorpus
+from repro.models import build_model
+from repro.train.checkpoint import load_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bert_base")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--level", default="moderate",
+                    choices=list(LEVELS) + ["custom"])
+    ap.add_argument("--threshold", type=float, default=None)
+    ap.add_argument("--mode", default="bucket",
+                    choices=["select", "bucket", "kernel"])
+    ap.add_argument("--index", default="exact", choices=["exact", "ivf"])
+    ap.add_argument("--no-memo", action="store_true")
+    ap.add_argument("--calib-batches", type=int, default=6)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--selective", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg, layer_loop="unroll")
+    if args.ckpt:
+        params, _, _ = load_checkpoint(args.ckpt)
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=args.seq, seed=1)
+
+    thr = args.threshold if args.threshold is not None else LEVELS.get(
+        args.level, 0.97)
+    eng = MemoEngine(model, params, MemoConfig(
+        threshold=thr, mode=args.mode, index_kind=args.index))
+    calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
+             for _ in range(args.calib_batches)]
+    t0 = time.perf_counter()
+    eng.build(jax.random.PRNGKey(1), calib)
+    print(f"[serve] db: {len(eng.db)} entries, "
+          f"{eng.db.nbytes/1e6:.1f} MB, build {time.perf_counter()-t0:.1f}s")
+
+    active = None
+    if args.selective:
+        pm = eng.profile(calib[0])
+        active = pm.active_layers()
+        print("[serve] selective memo active layers:", active)
+
+    lat_memo, lat_plain = [], []
+    from repro.core.engine import MemoStats
+    st = MemoStats()
+    n_batches = max(1, args.requests // args.batch)
+    for i in range(n_batches):
+        toks = jnp.asarray(corpus.sample(args.batch)[0])
+        t0 = time.perf_counter()
+        logits, _ = eng.infer({"tokens": toks}, use_memo=False)
+        jax.block_until_ready(logits)
+        lat_plain.append(time.perf_counter() - t0)
+        if not args.no_memo:
+            t0 = time.perf_counter()
+            logits_m, st = eng.infer({"tokens": toks}, stats=st,
+                                     active_layers=active)
+            jax.block_until_ready(logits_m)
+            lat_memo.append(time.perf_counter() - t0)
+    # drop warmup batch from stats
+    p = np.median(lat_plain[1:] or lat_plain) * 1e3
+    print(f"[serve] baseline     {p:8.1f} ms/batch")
+    if not args.no_memo:
+        m = np.median(lat_memo[1:] or lat_memo) * 1e3
+        print(f"[serve] memoized     {m:8.1f} ms/batch  "
+              f"({(1 - m / p) * 100:+.1f}% latency)")
+        print(f"[serve] memo rate    {st.memo_rate*100:8.1f}%  "
+              f"(hits {st.n_hits}/{st.n_layer_attempts})")
+        print(f"[serve] overhead     embed {st.t_embed:.2f}s "
+              f"search {st.t_search:.2f}s fetch {st.t_fetch:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Step-function builders for the dry-run / launchers.
+
+For every (arch, input-shape, mesh) this produces:
+    fn            — train_step | prefill | serve_step (one token)
+    args          — ShapeDtypeStruct stand-ins (no allocation)
+    in_shardings  — NamedShardings for every arg
+    out_shardings — for the step outputs
+so ``jax.jit(fn, in_shardings=...).lower(*args).compile()`` is the whole
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import dp_axes_of
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.sharding.rules import (
+    batch_shardings, logical_to_shardings, make_rules)
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def sub_quadratic_window(cfg, shape) -> Tuple[Optional[int], bool]:
+    """(window, supported) for the given input shape. long_500k requires a
+    sub-quadratic configuration: native for ssm/hybrid, sliding-window for
+    the rest (DESIGN.md §4)."""
+    if shape.name != "long_500k":
+        return None, True
+    if cfg.mixer == "rwkv6" or cfg.mixer == "rglru_hybrid":
+        return None, True                   # natively sub-quadratic
+    if cfg.decode_window:
+        return cfg.decode_window, True
+    return None, False
+
+
+def abstract_params(model, dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=dtype))
+
+
+def opt_spec_tree(opt_name: str, param_specs):
+    is_tuple = lambda t: isinstance(t, tuple)
+    if opt_name == "adamw":
+        return {"m": param_specs, "v": param_specs, "t": ()}
+
+    def leafspec(names):
+        if len(names) >= 2:
+            return {"vr": names[:-1], "vc": names[:-2] + names[-1:]}
+        return {"v": names}
+    return {"s": jax.tree.map(leafspec, param_specs, is_leaf=is_tuple),
+            "t": ()}
+
+
+def _cache_pspec(path, leaf, mesh, dp, model_axis="model") -> P:
+    """Sharding spec for one decode-cache leaf, by key name + rank."""
+    key = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            key = p.key
+            break
+    nd = leaf.ndim
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape.get(a, 1)
+    msz = mesh.shape.get(model_axis, 1)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+
+    def b_ax(b):
+        return dp_ax if (b % dp_size == 0 and b >= dp_size) else None
+
+    spec = [None] * nd
+    if key in ("k", "v", "ck", "cv"):
+        b, s = leaf.shape[nd - 4], leaf.shape[nd - 3]
+        spec[nd - 4] = b_ax(b)
+        if spec[nd - 4] is None and s % (dp_size * msz) == 0:
+            spec[nd - 3] = dp + (model_axis,)  # B=1 long-context
+        elif s % msz == 0 and s >= msz:
+            spec[nd - 3] = model_axis
+    elif key in ("c_kv", "k_rope"):
+        b, s = leaf.shape[nd - 3], leaf.shape[nd - 2]
+        spec[nd - 3] = b_ax(b)
+        if spec[nd - 3] is None and s % (dp_size * msz) == 0:
+            spec[nd - 2] = dp + (model_axis,)
+        elif s % msz == 0 and s >= msz:
+            spec[nd - 2] = model_axis
+    elif key == "s":                        # rwkv state (..,B,nh,N,N)
+        b, nh = leaf.shape[nd - 4], leaf.shape[nd - 3]
+        spec[nd - 4] = b_ax(b)
+        if nh % msz == 0:
+            spec[nd - 3] = model_axis
+    elif key in ("x_prev", "h"):            # (..,B,D)
+        spec[nd - 2] = b_ax(leaf.shape[nd - 2])
+        if leaf.shape[nd - 1] % msz == 0:
+            spec[nd - 1] = model_axis
+    elif key == "conv":                     # (..,B,W-1,dr)
+        spec[nd - 3] = b_ax(leaf.shape[nd - 3])
+        if leaf.shape[nd - 1] % msz == 0:
+            spec[nd - 1] = model_axis
+    return P(*spec)
+
+
+def cache_shardings_for(caches_abs, mesh, dp):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _cache_pspec(path, leaf,
+                                                            mesh, dp)),
+        caches_abs)
+
+
+def batch_abstract(cfg, shape, kind: str):
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "decode":
+        S = 1
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.encoder is not None and kind != "decode":
+        e = cfg.encoder
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, e.n_frames, e.d_model), PARAM_DTYPE)
+    return batch
+
+
+def build_step(arch: str, shape_name: str, mesh, *, rules_overrides=None,
+               lr: float = 1e-4, cfg=None):
+    """Returns dict(fn, args, in_shardings, out_shardings, cfg, meta) or
+    None if the (arch, shape) pair is skipped (documented in DESIGN.md)."""
+    cfg = cfg or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    dp = dp_axes_of(mesh)
+    window, ok = sub_quadratic_window(cfg, shape)
+    if not ok:
+        return None
+    kind = shape.kind
+    max_seq = min(shape.seq_len, 32_768) if cfg.encoder is not None else 4096
+    if window:
+        max_seq = min(max_seq, window)
+    model = build_model(cfg, mesh=mesh, dp_axes=dp, remat=(kind == "train"),
+                        max_seq=max_seq)
+    rules = make_rules(cfg, mesh, overrides=rules_overrides)
+    params_abs = abstract_params(model)
+    param_specs = model.specs()
+    params_sh = logical_to_shardings(param_specs, rules, mesh,
+                                    params_abs)
+    meta = {"arch": arch, "shape": shape_name, "kind": kind,
+            "window": window, "n_layers": cfg.n_layers}
+
+    if kind == "train":
+        opt_init, opt_update = make_optimizer(cfg.optimizer)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        opt_sh = logical_to_shardings(
+            opt_spec_tree(cfg.optimizer, param_specs), rules, mesh, opt_abs)
+        batch_abs = batch_abstract(cfg, shape, kind)
+        batch_sh = batch_shardings(batch_abs, mesh, dp)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+            params, opt_state = opt_update(params, grads, opt_state, lr=lr,
+                                           grad_clip=1.0)
+            return params, opt_state, loss
+
+        return dict(
+            fn=train_step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, NamedSharding(mesh, P())),
+            cfg=cfg, model=model, meta=meta)
+
+    if kind == "prefill":
+        batch_abs = batch_abstract(cfg, shape, kind)
+        batch_sh = batch_shardings(batch_abs, mesh, dp)
+        caches_abs = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                      dtype=PARAM_DTYPE, window=window))
+        caches_sh = cache_shardings_for(caches_abs, mesh, dp)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, cache_len=shape.seq_len,
+                                 window=window, dtype=PARAM_DTYPE)
+
+        return dict(
+            fn=prefill,
+            args=(params_abs, batch_abs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(batch_shardings(
+                jax.ShapeDtypeStruct((shape.global_batch, cfg.vocab),
+                                     jnp.float32), mesh, dp), caches_sh),
+            cfg=cfg, model=model, meta=meta)
+
+    # decode
+    B = shape.global_batch
+    cache_len = min(shape.seq_len, window) if window else shape.seq_len
+    tokens_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    caches_abs = jax.eval_shape(
+        lambda: model.init_caches(B, cache_len, dtype=PARAM_DTYPE,
+                                  window=window))
+    caches_sh = cache_shardings_for(caches_abs, mesh, dp)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    meta["cache_len"] = cache_len
+
+    def serve_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos, window=window)
+
+    return dict(
+        fn=serve_step,
+        args=(params_abs, tokens_abs, caches_abs, pos_abs),
+        in_shardings=(params_sh,
+                      batch_shardings(tokens_abs, mesh, dp),
+                      caches_sh, NamedSharding(mesh, P())),
+        out_shardings=(batch_shardings(
+            jax.ShapeDtypeStruct((B, cfg.vocab), jnp.float32), mesh, dp),
+            caches_sh),
+        cfg=cfg, model=model, meta=meta)

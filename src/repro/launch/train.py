@@ -1,0 +1,71 @@
+"""Training launcher.
+
+Two modes:
+* real CPU training of reduced configs (the end-to-end example path):
+    python -m repro.launch.train --arch gpt2_small --reduced --steps 200
+* distributed-mesh training driver for the full configs (on TPU hardware;
+  here it is exercised via the dry-run, which lowers exactly this step).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.data import TemplateCorpus, lm_batches
+from repro.models import build_model
+from repro.train import TrainConfig, Trainer
+from repro.train.checkpoint import save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.active_param_count()/1e6:.1f}M active)")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=args.seq,
+                            seed=args.seed)
+    batches = lm_batches(cfg.vocab, args.seq, args.batch,
+                         args.steps * max(1, args.grad_accum),
+                         corpus=corpus)
+    if args.grad_accum > 1:
+        def accum_batches():
+            it = iter(batches)
+            while True:
+                group = [next(it) for _ in range(args.grad_accum)]
+                yield {"tokens": jnp.stack(
+                    [jnp.asarray(g["tokens"]) for g in group])}
+        stream = accum_batches()
+    else:
+        stream = batches
+
+    tcfg = TrainConfig(steps=args.steps, lr=args.lr,
+                       grad_accum=args.grad_accum,
+                       optimizer=cfg.optimizer, log_every=10)
+    trainer = Trainer(model, tcfg)
+    params, opt_state, hist = trainer.fit(params, stream)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps,
+                        meta={"arch": cfg.name})
+        print(f"[train] checkpoint -> {args.ckpt}")
+    print(f"[train] done: loss {hist[0][1]:.4f} -> {hist[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

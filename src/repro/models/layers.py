@@ -1,0 +1,106 @@
+"""Shared neural building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (shape[0] or explicit scale)."""
+    fan_in = shape[0] if scale is None else None
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (xf * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh) or (..., S, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                                    # (dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv           # (..., S, dh/2)
+    if x.ndim == ang.ndim + 1:                                     # head axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def mlp_init(key, d, d_ff, glu: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if glu:
+        return {"w_gate": dense_init(ks[0], (d, d_ff), dtype=dtype),
+                "w_up": dense_init(ks[1], (d, d_ff), dtype=dtype),
+                "w_down": dense_init(ks[2], (d_ff, d), dtype=dtype)}
+    return {"w_up": dense_init(ks[0], (d, d_ff), dtype=dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d), dtype=dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def mlp_apply(params, x, act: str, glu: bool):
+    f = _ACT[act]
+    if glu:
+        h = f(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    h = f(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]
+
+
+def mlp_specs(glu: bool):
+    """Logical-axis names mirroring mlp_init."""
+    if glu:
+        return {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                "w_down": ("ff", "embed")}
+    return {"w_up": ("embed", "ff"), "b_up": ("ff",),
+            "w_down": ("ff", "embed"), "b_down": ("embed",)}
+
+
+def norm_specs(kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ("embed",)}
+    return {"scale": ("embed",), "bias": ("embed",)}

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+[arXiv:2402.19427]. Gated linear recurrence with input-dependent gates:
+    r_t = σ(W_a y_t + b_a);  i_t = σ(W_x y_t + b_x)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ y_t)
+preceded by a width-4 causal temporal conv and wrapped in a GeGLU-style
+output gate. Constant-size state → natively sub-quadratic (long_500k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    dr = d                                # recurrent width = d_model
+    ks = jax.random.split(key, 6)
+    lam = jnp.linspace(0.9, 0.999, dr)    # init decays spread in (0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / cfg.rglru_c))  # inv softplus
+    return {
+        "w_in": dense_init(ks[0], (d, dr), dtype=dtype),
+        "w_gate": dense_init(ks[1], (d, dr), dtype=dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, dr),
+                             scale=cfg.conv_width ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": dense_init(ks[3], (dr, dr), dtype=dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_x": dense_init(ks[4], (dr, dr), dtype=dtype),
+        "b_x": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(dtype),
+        "w_out": dense_init(ks[5], (dr, d), dtype=dtype),
+    }
+
+
+def rglru_specs(cfg):
+    return {"w_in": ("embed", "rec"), "w_gate": ("embed", "rec"),
+            "conv_w": ("conv", "rec"), "conv_b": ("rec",),
+            "w_a": ("rec", "rec_in"), "b_a": ("rec",),
+            "w_x": ("rec", "rec_in"), "b_x": ("rec",),
+            "lam": ("rec",), "w_out": ("rec", "embed")}
+
+
+def _conv(params, y, cfg, conv_state=None):
+    """Causal depthwise temporal conv. y: (B,S,dr)."""
+    W = cfg.conv_width
+    hist = (jnp.zeros((y.shape[0], W - 1, y.shape[2]), y.dtype)
+            if conv_state is None else conv_state)
+    ypad = jnp.concatenate([hist, y], axis=1)
+    out = sum(ypad[:, i:i + y.shape[1]] * params["conv_w"][i]
+              for i in range(W))
+    return out + params["conv_b"], ypad[:, -(W - 1):]
+
+
+def _rglru_scan(params, y, cfg, h0):
+    c = cfg.rglru_c
+    log_lam = -c * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    r = jax.nn.sigmoid((y @ params["w_a"] + params["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((y @ params["w_x"] + params["b_x"]).astype(jnp.float32))
+    log_a = log_lam * r                                   # (B,S,dr) fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * y.astype(jnp.float32))
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0))
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(y.dtype), hT.astype(y.dtype)
+
+
+def rglru_apply(params, x, cfg, state=None):
+    """Full-sequence recurrent block. x: (B,S,D) → (y, new_state)."""
+    B = x.shape[0]
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    y = x @ params["w_in"]
+    conv_state = None if state is None else state["conv"]
+    y, conv_state = _conv(params, y, cfg, conv_state)
+    h0 = (jnp.zeros((B, y.shape[-1]), x.dtype) if state is None
+          else state["h"])
+    h, hT = _rglru_scan(params, y, cfg, h0)
+    out = (h * gate) @ params["w_out"]
+    return out, {"h": hT, "conv": conv_state}
+
+
+def rglru_decode(params, x, cfg, state):
+    return rglru_apply(params, x, cfg, state)
+
+
+def rglru_init_state(cfg, batch, dtype=jnp.float32):
+    dr = cfg.d_model
+    return {"h": jnp.zeros((batch, dr), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype)}

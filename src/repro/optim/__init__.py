@@ -1,0 +1,12 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.adafactor import adafactor_init, adafactor_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn, update_fn) for 'adamw' | 'adafactor'."""
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

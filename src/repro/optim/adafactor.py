@@ -1,0 +1,58 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moment, no first
+moment: the optimizer-state footprint is ~(rows+cols)/(rows·cols) of Adam's,
+which is what makes the ≥100B configs trainable within HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def one(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"s": jax.tree.map(one, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, *, lr=1e-3, decay=0.8,
+                     eps=1e-30, clip_threshold=1.0, weight_decay=0.0,
+                     grad_clip=None):
+    t = state["t"] + 1
+    beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -decay
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p.shape):
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            r = (vr / jnp.maximum(denom, eps))[..., None]
+            u = g * jax.lax.rsqrt(jnp.maximum(r * vc[..., None, :], eps))
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_s = {"v": v}
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = tree.flatten_up_to(state["s"])
+    outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = tree.unflatten([o[0] for o in outs])
+    new_s = tree.unflatten([o[1] for o in outs])
+    return new_params, {"s": new_s, "t": t}

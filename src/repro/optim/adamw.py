@@ -1,0 +1,37 @@
+"""AdamW in pure JAX (pytree-native, shardable: states mirror params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr=1e-3, b1=0.9, b2=0.999,
+                 eps=1e-8, weight_decay=0.0, grad_clip=None):
+    t = state["t"] + 1
+    if grad_clip is not None:
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip / gn)
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}

@@ -1,0 +1,18 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, (s + 1) / max(1, warmup))
+
+
+def cosine_schedule(step, warmup: int, total: int, peak: float,
+                    floor: float = 0.0):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, (s + 1) / max(1, warmup))
+    prog = jnp.clip((s - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,149 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Params carry logical names (see each module's ``*_specs``); a rules dict
+maps them to mesh axes. Defaults implement TP over ``model`` (ff, heads,
+vocab), expert-parallel over ``data``, FSDP over ``data`` for ≥8B params,
+and pure DP over ``pod``. Per-arch overrides and the hillclimb variants
+live here so a sharding experiment is a one-dict change.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_THRESHOLD = 8e9
+
+
+def make_rules(cfg, mesh: Mesh, *, fsdp: Optional[bool] = None,
+               overrides: Optional[Dict] = None) -> Dict[str, object]:
+    model_size = mesh.shape.get("model", 1)
+    if fsdp is None:
+        fsdp = cfg.param_count() >= FSDP_THRESHOLD
+    rules: Dict[str, object] = {
+        "layers": None,
+        "vocab": "model",
+        "embed": "data" if fsdp else None,
+        "heads": "model",
+        "kv_heads": ("model" if cfg.n_kv_heads % model_size == 0 else None),
+        "head_dim": None,
+        "q_lora": None,
+        "kv_lora": None,
+        "ff": "model",
+        "experts": "data",
+        "router": None,
+        "lora": None,
+        "proj5": None,
+        "heads_embed": "model",      # rwkv square projections
+        "rec": "model",
+        "rec_in": None,
+        "conv": None,
+        "frames": None,
+        "seq": None,
+    }
+    if cfg.n_heads % model_size != 0:
+        # uneven head sharding pads in GSPMD; for small head counts the
+        # waste exceeds the win — fall back to replicated heads (the ff
+        # dim still gives the model axis plenty to do).
+        if cfg.n_heads < 2 * model_size:
+            rules["heads"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if isinstance(ax, (list, tuple)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(ax, 1)
+
+
+def _spec_for(names: Tuple, rules: Dict[str, object], mesh: Mesh,
+              shape: Tuple[int, ...] = None) -> P:
+    used = set()
+    axes = []
+    for i, nm in enumerate(names):
+        ax = rules.get(nm) if nm is not None else None
+        # pjit input shardings require exact divisibility (no padding for
+        # arguments) — drop the axis when the dim does not divide
+        if ax is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None
+        # a mesh axis may appear at most once per spec
+        key = tuple(ax) if isinstance(ax, (list, tuple)) else (ax,)
+        if ax is not None and not any(k in used for k in key):
+            axes.append(ax)
+            used.update(key)
+        else:
+            axes.append(None)
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def logical_to_shardings(specs_tree, rules: Dict[str, object], mesh: Mesh,
+                         abs_tree=None):
+    """Map a tree of logical-name tuples to NamedShardings. With
+    ``abs_tree`` (matching ShapeDtypeStructs) the specs are legalized
+    against actual dims."""
+    is_tuple = lambda t: isinstance(t, tuple)
+    if abs_tree is None:
+        return jax.tree.map(
+            lambda names: NamedSharding(mesh, _spec_for(names, rules, mesh)),
+            specs_tree, is_leaf=is_tuple)
+    return jax.tree.map(
+        lambda names, ab: NamedSharding(
+            mesh, _spec_for(names, rules, mesh, tuple(ab.shape))),
+        specs_tree, abs_tree, is_leaf=is_tuple)
+
+
+def batch_shardings(batch_tree, mesh: Mesh, dp_axes=("data",)):
+    """Shard every batch leaf's leading dim over dp (replicate if B < dp)."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape.get(a, 1)
+
+    def one(x):
+        b = x.shape[0] if getattr(x, "ndim", 0) > 0 else 0
+        if b and b % dp_size == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, dp_axes=("data",),
+                    seq_axis="model"):
+    """Decode-cache shardings: batch over dp when divisible, the long axis
+    (cache sequence / rwkv heads) over ``model``; for B==1 long-context the
+    sequence spreads over (data, model)."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape.get(a, 1)
+    model_size = mesh.shape.get(seq_axis, 1)
+
+    def one(x):
+        if x.ndim < 2:
+            return NamedSharding(mesh, P())
+        B, S = x.shape[0], x.shape[1]
+        b_ax = dp if (B % dp_size == 0 and B >= dp_size) else None
+        if b_ax is None and x.ndim >= 2:
+            # B=1 long-context: shard the big axis over everything
+            total = dp_axes + (seq_axis,)
+            tsz = dp_size * model_size
+            if S % tsz == 0:
+                return NamedSharding(
+                    mesh, P(None, total, *([None] * (x.ndim - 2))))
+            if S % model_size == 0:
+                return NamedSharding(
+                    mesh, P(None, seq_axis, *([None] * (x.ndim - 2))))
+            return NamedSharding(mesh, P())
+        s_ax = seq_axis if S % model_size == 0 and S >= model_size else None
+        return NamedSharding(mesh, P(b_ax, s_ax, *([None] * (x.ndim - 2))))
+    return jax.tree.map(one, cache_tree)

@@ -1,0 +1,70 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees.
+
+Leaves are flattened to ``path/like/this`` keys; metadata (step, config
+name) rides along. No orbax dependency — files are portable npz archives.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif tree is None:
+        out[prefix + "__none__"] = np.zeros(0)
+    else:
+        out[prefix.rstrip(_SEP)] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        if parts[-1] == "__none__":
+            parts = parts[:-1]
+            val = None
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def save_checkpoint(path: str, params, opt_state=None, *, step: int = 0,
+                    meta: dict = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {f"params{_SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt{_SEP}{k}": v
+                     for k, v in _flatten(opt_state).items()})
+    flat["__meta__"] = np.frombuffer(
+        json.dumps({"step": step, **(meta or {})}).encode(), np.uint8)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, Any, dict]:
+    if not path.endswith(".npz"):
+        path += ".npz"
+    z = np.load(path, allow_pickle=False)
+    meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+    pflat, oflat = {}, {}
+    for k in z.files:
+        if k == "__meta__":
+            continue
+        scope, rest = k.split(_SEP, 1)
+        (pflat if scope == "params" else oflat)[rest] = z[k]
+    params = jax.tree.map(jnp.asarray, _unflatten(pflat))
+    opt = jax.tree.map(jnp.asarray, _unflatten(oflat)) if oflat else None
+    return params, opt, meta

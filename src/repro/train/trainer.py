@@ -1,0 +1,88 @@
+"""Training loop: jit'd step, grad accumulation, remat, LR schedule,
+periodic checkpointing. Works single-device or under a mesh (params and
+batch shardings applied by the launcher)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import make_optimizer
+from repro.optim.schedule import cosine_schedule
+from repro.train.checkpoint import save_checkpoint
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    optimizer: str = "adamw"
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_path: str = "checkpoints/model"
+    loss: str = "lm"            # lm | classify
+
+
+class Trainer:
+    def __init__(self, model, tcfg: TrainConfig, *, in_shardings=None,
+                 donate: bool = True):
+        self.model = model
+        self.tcfg = tcfg
+        init_fn, update_fn = make_optimizer(tcfg.optimizer)
+        self._opt_init = init_fn
+        loss_fn = (model.train_loss if tcfg.loss == "lm"
+                   else model.classify_loss)
+
+        def step(params, opt_state, batch, step_idx):
+            lr = cosine_schedule(step_idx, tcfg.warmup, tcfg.steps, tcfg.lr)
+            if tcfg.grad_accum > 1:
+                def micro(c, mb):
+                    loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                    acc_l, acc_g = c
+                    return (acc_l + loss,
+                            jax.tree.map(jnp.add, acc_g, g)), ()
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    micro, (jnp.zeros(()), zeros), batch)
+                loss = loss / tcfg.grad_accum
+                grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = update_fn(
+                params, grads, opt_state, lr=lr,
+                weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+            return params, opt_state, loss
+
+        self._step = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    def init_opt(self, params):
+        return self._opt_init(params)
+
+    def fit(self, params, batches: Iterator[dict], *, opt_state=None,
+            on_log: Optional[Callable] = None):
+        opt_state = opt_state or self.init_opt(params)
+        history = []
+        t0 = time.perf_counter()
+        for i, batch in enumerate(batches):
+            if i >= self.tcfg.steps:
+                break
+            batch = jax.tree.map(jnp.asarray, batch)
+            params, opt_state, loss = self._step(params, opt_state, batch, i)
+            if i % self.tcfg.log_every == 0 or i == self.tcfg.steps - 1:
+                lv = float(loss)
+                dt = time.perf_counter() - t0
+                history.append((i, lv))
+                msg = f"step {i:5d}  loss {lv:8.4f}  {dt:6.1f}s"
+                (on_log or print)(msg)
+            if self.tcfg.ckpt_every and i and i % self.tcfg.ckpt_every == 0:
+                save_checkpoint(f"{self.tcfg.ckpt_path}_{i}.npz", params,
+                                step=i)
+        return params, opt_state, history
