@@ -2,11 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--only fig10,table6]
+    PYTHONPATH=src python -m benchmarks.run --only serve --json BENCH_serve.json
+
+``--json`` additionally writes a machine-readable perf trajectory: every
+CSV row plus the serve fast-path detail (per-phase latency for
+select/bucket/kernel with and without the device-resident path) from
+``serve_fastpath.collect()`` — the baseline future PRs regress against.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import time
 import traceback
@@ -24,6 +31,7 @@ MODULES = [
     "fig15_large_model",   # Fig 15: larger-model potential
     "ablations",           # beyond-paper: similarity knob + index ablation
     "roofline",            # deliverable (g): from the dry-run artifacts
+    "serve_fastpath",      # ISSUE 1: device fast path vs host-sync serve
 ]
 
 
@@ -31,11 +39,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module substrings")
+    ap.add_argument("--json", default=None, metavar="BENCH_serve.json",
+                    help="also write rows + serve fast-path detail as JSON")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
     print("name,us_per_call,derived")
     failures = 0
+    failed_modules = set()
+    rows = []
     for name in MODULES:
         if only and not any(o in name for o in only):
             continue
@@ -43,12 +55,31 @@ def main() -> None:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             for row_name, us, derived in mod.run():
+                rows.append({"name": row_name, "us_per_call": us,
+                             "derived": str(derived)})
                 print(f"{row_name},{us:.2f},{derived}", flush=True)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:  # noqa: BLE001
             failures += 1
+            failed_modules.add(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr)
+    if args.json:
+        doc = {"rows": rows}
+        # lru-cached: free if serve_fastpath already ran; skip if it just
+        # failed (lru_cache does not cache exceptions — a retry would
+        # redo the multi-minute sweep only to fail the same way)
+        if "serve_fastpath" not in failed_modules:
+            try:
+                from benchmarks.serve_fastpath import collect
+                doc["serve"] = collect()
+            except Exception:  # noqa: BLE001
+                print(f"# serve detail FAILED:\n{traceback.format_exc()}",
+                      file=sys.stderr)
+                failures += 1
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

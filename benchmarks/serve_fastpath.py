@@ -1,0 +1,138 @@
+"""Serve latency: device-resident fast path vs host-synchronous path.
+
+The ISSUE-1 acceptance benchmark: end-to-end ``infer`` latency for
+``select``/``bucket``/``kernel`` modes with and without the device fast
+path on the reduced bert_base config (CPU, interpret mode), plus a
+per-phase breakdown (embed / search / fetch / attn). The host path's
+phases come from its per-layer timers; the fused device path has no
+per-layer timers by design (that is the point), so its phases are
+microbenchmarked on the same tensors.
+
+Emitted as machine-readable JSON by ``python -m benchmarks.run
+--json BENCH_serve.json`` for the perf trajectory.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import built_engine, timeit_ms
+from repro.core.engine import MemoStats
+
+BATCH = 32
+REPS = {"select": 8, "bucket": 8, "kernel": 2}   # kernel = interpret-slow
+
+
+def _median_ms(eng, toks, thr, reps):
+    ts = []
+    st = MemoStats()
+    for _ in range(reps + 2):
+        t0 = time.perf_counter()
+        logits, st = eng.infer({"tokens": toks}, threshold=thr, stats=st)
+        jax.block_until_ready(logits)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts[2:]) * 1e3), st, logits
+
+
+def _phase_micro(eng, toks):
+    """Per-phase latencies on the serving tensors (whole batch, one
+    memoizable layer): embed MLP, index search (host numpy round-trip vs
+    fused device search), APM fetch (host arena gather + transfer vs
+    device gather), and the attention both ways."""
+    import repro.models.backbone as bb
+    h = bb.embed_tokens(eng.params, toks, eng.cfg)
+    positions = jnp.broadcast_to(
+        jnp.arange(toks.shape[1], dtype=jnp.int32), toks.shape)
+    li, kind, lp = eng._iter_layers()[0]
+    x = bb.norm_apply(lp["norm1"], h, eng.cfg.norm)
+    emb_dev = eng._embed(x)
+    emb_np = np.asarray(emb_dev)
+    idx_np = eng.index.search(emb_np, 1)[1][:, 0]
+    idx_dev = jnp.asarray(idx_np, jnp.int32)
+    apm = jnp.asarray(eng.db.get(idx_np, count_reuse=False))
+    search_dev = jax.jit(
+        lambda q, t: eng.device_index.search_device(q, table=t)[1])
+    gather_dev = jax.jit(lambda a, i: jnp.take(a, i, axis=0))
+    return {
+        "embed_ms": timeit_ms(lambda: eng._embed(x)),
+        "search_host_ms": timeit_ms(lambda: eng.index.search(emb_np, 1)),
+        "search_device_ms": timeit_ms(
+            lambda: search_dev(emb_dev, eng.device_index.table)),
+        "fetch_host_ms": timeit_ms(
+            lambda: jnp.asarray(eng.db.get(idx_np, count_reuse=False))),
+        "fetch_device_ms": timeit_ms(
+            lambda: gather_dev(eng.device_db.apms, idx_dev)),
+        "attn_full_ms": timeit_ms(
+            lambda: eng._attn_only(lp, x, kind, positions)),
+        "attn_memo_ms": timeit_ms(
+            lambda: eng._memo_only(lp, x, kind, apm.astype(jnp.float32))),
+    }
+
+
+@functools.lru_cache(maxsize=1)
+def collect():
+    eng, corpus = built_engine(threshold=0.8, mode="select")
+    toks = jnp.asarray(corpus.sample(BATCH)[0])
+    old = (eng.mc.mode, eng.mc.device_fast_path)
+    levels = {"moderate": float(eng.levels["moderate"]),
+              "aggressive": float(eng.levels["aggressive"])}
+
+    by_level = {}
+    try:      # the engine is lru-shared with other benchmark modules:
+        for level, thr in levels.items():      # never leak a mode switch
+            eng.mc.mode, eng.mc.device_fast_path = "select", None
+            ref_ms, _, ref_logits = _median_ms(eng, toks, thr,
+                                               REPS["select"])
+            ref_logits = np.asarray(ref_logits)
+            modes = {"select": {"host_ms": ref_ms}}
+            for mode in ("bucket", "kernel"):
+                eng.mc.mode = mode
+                eng.mc.device_fast_path = False
+                host_ms, host_st, _ = _median_ms(eng, toks, thr, REPS[mode])
+                eng.mc.device_fast_path = True
+                fast_ms, fast_st, fast_logits = _median_ms(eng, toks, thr,
+                                                           REPS[mode])
+                modes[mode] = {
+                    "host_ms": host_ms,
+                    "fast_ms": fast_ms,
+                    "speedup": host_ms / fast_ms,
+                    "memo_rate": fast_st.memo_rate,
+                    "host_phases_s": {"embed": host_st.t_embed,
+                                      "search": host_st.t_search,
+                                      "fetch": host_st.t_fetch,
+                                      "attn": host_st.t_attn},
+                    "logits_match_select": bool(np.allclose(
+                        np.asarray(fast_logits), ref_logits, rtol=2e-3,
+                        atol=2e-3)),
+                }
+            by_level[level] = {"threshold": thr, "modes": modes}
+        eng.mc.mode, eng.mc.device_fast_path = "select", None
+        phases = _phase_micro(eng, toks)
+    finally:
+        eng.mc.mode, eng.mc.device_fast_path = old
+    return {
+        "config": {"arch": "bert_base (reduced)", "batch": BATCH,
+                   "seq": int(toks.shape[1]),
+                   "backend": jax.default_backend(),
+                   "interpret": jax.default_backend() == "cpu"},
+        "levels": by_level,
+        "phase_micro_ms": phases,
+    }
+
+
+def run():
+    out = collect()
+    for level, blk in out["levels"].items():
+        for mode, row in blk["modes"].items():
+            yield (f"serve_{level}_{mode}_host", row["host_ms"] * 1e3,
+                   f"rate={row.get('memo_rate', '')}")
+            if "fast_ms" in row:
+                yield (f"serve_{level}_{mode}_fast", row["fast_ms"] * 1e3,
+                       f"speedup={row['speedup']:.2f}x "
+                       f"match={row['logits_match_select']}")
+    for name, ms in out["phase_micro_ms"].items():
+        yield (f"serve_phase_{name}", ms * 1e3, "")

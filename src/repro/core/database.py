@@ -41,16 +41,21 @@ class AttentionDB:
         return self._n * int(np.prod(self.apm_shape)) * self._arena.itemsize
 
     def add(self, apms: np.ndarray) -> np.ndarray:
-        """apms: (B, H, L, L). Returns assigned indices."""
+        """apms: (B, H, L, L). Returns assigned indices.
+
+        Growth is geometric but tight: the arena doubles (amortized O(1)
+        appends) or jumps straight to the requested size, whichever is
+        larger — never both, so capacity always equals the allocation."""
         b = apms.shape[0]
         if self._n + b > self.capacity:
-            grow = max(self.capacity, self._n + b)
-            self._arena = np.concatenate(
-                [self._arena, np.zeros((grow,) + self.apm_shape,
-                                       self.dtype)], 0)
-            self.reuse_counts = np.concatenate(
-                [self.reuse_counts, np.zeros(grow, np.int64)])
-            self.capacity += grow
+            new_cap = max(2 * self.capacity, self._n + b)
+            arena = np.zeros((new_cap,) + self.apm_shape, self.dtype)
+            arena[: self._n] = self._arena[: self._n]
+            self._arena = arena
+            counts = np.zeros(new_cap, np.int64)
+            counts[: self._n] = self.reuse_counts[: self._n]
+            self.reuse_counts = counts
+            self.capacity = new_cap
         idx = np.arange(self._n, self._n + b)
         self._arena[idx] = np.asarray(apms, self.dtype)
         self._n += b
@@ -81,6 +86,12 @@ class DeviceDB:
     def __init__(self, apms: jnp.ndarray, sharding=None):
         self.apms = (jax.device_put(apms, sharding) if sharding is not None
                      else jnp.asarray(apms))
+
+    @classmethod
+    def from_host(cls, db: AttentionDB, sharding=None) -> "DeviceDB":
+        """Materialize the serving copy of a host arena (one transfer of
+        the live prefix; the host tier stays the source of truth)."""
+        return cls(db._arena[: len(db)], sharding)
 
     def __len__(self):
         return self.apms.shape[0]
@@ -113,6 +124,10 @@ def distributed_search(embs, queries, mesh, *, db_axis="data"):
         cols = jnp.arange(q.shape[0])
         return mins[best, cols], idxs[best, cols]
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=(P(db_axis, None), P()),
-        out_specs=(P(), P()), check_vma=False)(embs, queries)
+    specs = dict(in_specs=(P(db_axis, None), P()), out_specs=(P(), P()))
+    if hasattr(jax, "shard_map"):
+        smap = jax.shard_map(body, mesh=mesh, check_vma=False, **specs)
+    else:  # jax<=0.4.x: experimental home, check_vma was check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+        smap = _shard_map(body, mesh=mesh, check_rep=False, **specs)
+    return smap(embs, queries)

@@ -26,9 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.database import AttentionDB
+from repro.core.database import AttentionDB, DeviceDB
 from repro.core.embedding import Embedder, train_embedder
-from repro.core.index import ExactIndex, IVFIndex
+from repro.core.index import DeviceIndex, ExactIndex, IVFIndex
 from repro.core.selective import LayerProfile, PerfModel, timeit_median
 from repro.core.similarity import similarity_score
 from repro.models import attention as attn_mod
@@ -42,13 +42,24 @@ LEVELS = {"conservative": 0.98, "moderate": 0.97, "aggressive": 0.96}
 class MemoConfig:
     threshold: float = 0.97
     mode: str = "select"            # select | bucket | kernel
-    index_kind: str = "exact"       # exact | ivf
+    index_kind: str = "exact"       # exact | ivf | device
     embed_dim: int = 128
     embed_pool: int = 8
     embed_act: str = "linear"
     embed_steps: int = 300
-    bucket_quantum: int = 4         # hit-bucket padding quantum
+    bucket_quantum: int = 4         # host-path hit-bucket padding quantum
     max_layers: Optional[int] = None
+    store: str = "device"           # serving store: device | host
+    # None → auto: the device-resident fast path serves bucket/kernel modes
+    device_fast_path: Optional[bool] = None
+    # device-path bucket granularity: number of sorted quanta per batch.
+    # 1 = one whole-batch conditional (best on CPU, where sub-batch
+    # attention matmuls don't shrink cost); >1 = hit-first sorted quanta
+    # (compute skipping on mixed batches — worth it when attention cost
+    # scales with rows, i.e. real accelerators)
+    device_quanta: int = 1
+    # None → auto-detect backend (Pallas interpreter on CPU CI)
+    interpret: Optional[bool] = None
 
 
 @dataclass
@@ -62,6 +73,7 @@ class MemoStats:
     t_fetch: float = 0.0
     t_attn: float = 0.0
     t_other: float = 0.0
+    t_total: float = 0.0            # whole-batch wall time (fast path)
     per_layer_hits: Dict[int, int] = field(default_factory=dict)
 
     @property
@@ -90,6 +102,20 @@ class MemoEngine:
         self.sim_cal = (-1.0, 1.0)       # sim ≈ a·dist + b calibration
         self.perf: Optional[PerfModel] = None
         self._jit_cache: Dict = {}
+        # device (serving) tier — see DESIGN.md §2
+        self.device_db: Optional[DeviceDB] = None
+        self.device_index: Optional[DeviceIndex] = None
+        self._interpret = (memo_cfg.interpret if memo_cfg.interpret
+                           is not None else jax.default_backend() == "cpu")
+        self._layers_cache = None
+
+    def _iter_layers(self):
+        """Params are fixed per engine: slice the stacked layer params
+        once and reuse — ``bb.iter_layers`` re-slices with eager tree_map
+        gathers on every call, which is pure host overhead per batch."""
+        if self._layers_cache is None:
+            self._layers_cache = list(bb.iter_layers(self.params, self.cfg))
+        return self._layers_cache
 
     # ------------------------------------------------------------------ build
     def build(self, key, batches: Sequence[dict], *, train_pairs=512,
@@ -126,11 +152,43 @@ class MemoEngine:
         if self.mc.index_kind == "ivf":
             self.index = IVFIndex(self.mc.embed_dim,
                                   n_lists=max(4, int(np.sqrt(n))))
+        elif self.mc.index_kind == "device":
+            self.index = DeviceIndex(self.mc.embed_dim,
+                                     interpret=self._interpret)
         else:
             self.index = ExactIndex(self.mc.embed_dim)
         self.index.add(embs)
         self._calibrate(hiddens, apms)
+        # materialize the serving tier only when the fast path can reach
+        # it (select-mode engines would duplicate the arena for nothing);
+        # mode switches after build are covered by the lazy resync in
+        # _infer_device/_layer_kernel
+        if self.mc.store == "device" and self.mc.mode in ("bucket",
+                                                          "kernel"):
+            self._sync_device_tier()
         return self
+
+    # -------------------------------------------------------- device tier
+    def _sync_device_tier(self):
+        """(Re)materialize the serving tier (DeviceDB + DeviceIndex) from
+        the host tier — one transfer each, done at build time, never on the
+        serving hot path."""
+        self.device_db = DeviceDB.from_host(self.db)
+        if isinstance(self.index, DeviceIndex):
+            self.device_index = self.index
+        else:
+            di = DeviceIndex(self.mc.embed_dim, interpret=self._interpret)
+            di.add(self.index._embs)
+            self.device_index = di
+
+    def _use_fast_path(self) -> bool:
+        if self.is_encdec or self.db is None:
+            return False
+        if self.mc.mode not in ("bucket", "kernel"):
+            return False                 # select stays the host reference
+        if self.mc.device_fast_path is not None:
+            return self.mc.device_fast_path
+        return self.mc.store == "device"
 
     def _embed(self, hiddens):
         fn = self._jit_cache.get("embed")
@@ -169,7 +227,7 @@ class MemoEngine:
         sims = []
         for batch in batches:
             h = bb.embed_tokens(self.params, batch["tokens"], self.cfg)
-            for li, kind, lp in bb.iter_layers(self.params, self.cfg):
+            for li, kind, lp in self._iter_layers():
                 if li in self.layers and kind in ("attn", "mla"):
                     x = bb.norm_apply(lp["norm1"], h, self.cfg.norm)
                     emb = self._embed(x)
@@ -196,13 +254,15 @@ class MemoEngine:
         cfg = self.cfg
         if self.is_encdec:
             return self._infer_encdec(batch, thr, active, st, use_memo)
+        if use_memo and self._use_fast_path():
+            return self._infer_device(batch, thr, active, st)
         tokens = batch["tokens"]
         st.n_inputs += tokens.shape[0]
         h = bb.embed_tokens(self.params, tokens, cfg)
         positions = jnp.broadcast_to(
             jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
 
-        for li, kind, lp in bb.iter_layers(self.params, cfg):
+        for li, kind, lp in self._iter_layers():
             memo = None
             if use_memo and li in active and kind in ("attn", "mla") \
                     and self.db is not None:
@@ -220,6 +280,182 @@ class MemoEngine:
         if cfg.n_classes:
             return bb.classify_from_hidden(self.params, h, cfg), st
         return bb.logits_from_hidden(self.params, h, cfg), st
+
+    # -------------------------------------------------- device fast path
+    def _infer_device(self, batch, thr, active, st: MemoStats):
+        """Device-resident serving loop (DESIGN.md §2): every layer is a
+        chained jitted dispatch — fused lookup (embed → nn_search →
+        threshold → gather) feeding the layer body — with ZERO per-layer
+        host synchronization. Stats are event-based: hit masks and
+        predicted sims accumulate as device arrays and are materialized
+        once per batch after the single trailing barrier."""
+        cfg = self.cfg
+        if self.device_db is None or len(self.device_db) != len(self.db):
+            self._sync_device_tier()     # build-time staleness, not hot path
+        tokens = batch["tokens"]
+        st.n_inputs += tokens.shape[0]
+        t0 = time.perf_counter()
+        prolog = self._jit_cache.get("prolog")
+        if prolog is None:
+            def prolog(params, tokens):
+                h = bb.embed_tokens(params, tokens, cfg)
+                positions = jnp.broadcast_to(
+                    jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                    tokens.shape)
+                return h, positions
+            prolog = self._jit_cache["prolog"] = jax.jit(prolog)
+        h, positions = prolog(self.params, tokens)
+        thr_dev = jnp.float32(thr)
+        pend = []                        # (layer, sims, hits) device arrays
+        for li, kind, lp in self._iter_layers():
+            if li in active and kind in ("attn", "mla"):
+                h, sim, hit = self._layer_fused(lp, h, kind, li, thr_dev,
+                                                positions)
+                pend.append((li, sim, hit))
+            else:
+                h = self._layer_plain(lp, h, kind, li, None, positions)
+        head = self._jit_cache.get("head")
+        if head is None:
+            def head(params, h):
+                return (bb.classify_from_hidden(params, h, cfg)
+                        if cfg.n_classes
+                        else bb.logits_from_hidden(params, h, cfg))
+            head = self._jit_cache["head"] = jax.jit(head)
+        out = jax.block_until_ready(head(self.params, h))   # ONE barrier
+        dt = time.perf_counter() - t0
+        st.t_total += dt
+        st.t_attn += dt
+        self._drain_stats(pend, st)
+        return out, st
+
+    def _layer_fused(self, lp, h, kind, li, thr_dev, positions):
+        """The fused serving layer: embed → nn_search → threshold → gather
+        → attention → channel mixer, ONE jitted dispatch per layer, device
+        arrays in and out (no np.asarray, no block_until_ready). Returns
+        (h', sims, hits); the hit decision is consumed on-device.
+
+        * ``bucket`` — rows are sorted hit-first ON DEVICE (stable argsort
+          of the hit mask) and processed in fixed ``bucket_quantum``-sized
+          quanta; each quantum picks its path with an XLA conditional on a
+          device scalar. After the sort at most ONE quantum is mixed, so
+          hit quanta genuinely skip Q/K projection + QKᵀ + softmax and
+          miss quanta skip the memo combine — the same compute savings as
+          host-side bucketing, but the batch composition never leaves the
+          accelerator and shapes stay static (no recompiles across hit
+          counts, unlike the host path's per-bucket-size cache entries).
+        * ``kernel`` — the APM gather is elided entirely: the Pallas
+          memo_attention kernel gathers its own tiles from the device DB
+          by scalar-prefetched index and skips QKᵀ per-sequence via
+          pl.when; misses route through the clamped-gather (ops.py), so
+          they never touch the host arena.
+        """
+        cfg = self.cfg
+        kernel_path = self.mc.mode == "kernel" and kind == "attn"
+        key = ("fused", kernel_path, kind, li if cfg.moe else 0, h.shape,
+               self.mc.device_quanta)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            pool, act = self.embedder.pool, self.embedder.act
+            from repro.core.embedding import embed_apply
+            dindex = self.device_index
+            interpret = self._interpret
+            f_memo = (attn_mod.gqa_apply_memo if kind == "attn"
+                      else attn_mod.mla_apply_memo)
+            f_attn = (attn_mod.gqa_apply if kind == "attn"
+                      else attn_mod.mla_apply)
+            mask_kind = "causal" if cfg.causal else "bidir"
+            B = h.shape[0]
+            # quanta must tile the batch; otherwise one whole-batch quantum
+            nq = (self.mc.device_quanta
+                  if (1 < self.mc.device_quanta <= B
+                      and B % self.mc.device_quanta == 0) else 1)
+
+            def bucketed(lp, xs, apm, hit, pos, size):
+                def all_hit(ops):
+                    xs, apm, hit, pos = ops
+                    return f_memo(lp["mix"], xs, cfg,
+                                  apm.astype(jnp.float32))
+
+                def all_miss(ops):
+                    xs, apm, hit, pos = ops
+                    y, _ = f_attn(lp["mix"], xs, cfg, positions=pos,
+                                  mask_kind=mask_kind,
+                                  window=cfg.sliding_window)
+                    return y
+
+                def mixed(ops):
+                    xs, apm, hit, pos = ops
+                    y, _ = f_attn(lp["mix"], xs, cfg, positions=pos,
+                                  mask_kind=mask_kind,
+                                  window=cfg.sliding_window,
+                                  memo=attn_mod.Memo(apm=apm, hit=hit))
+                    return y
+
+                n_hit = jnp.sum(hit.astype(jnp.int32))
+                return jax.lax.cond(
+                    n_hit == size, all_hit,
+                    lambda ops: jax.lax.cond(n_hit == 0, all_miss, mixed,
+                                             ops),
+                    (xs, apm, hit, pos))
+
+            def run(lp, emb_p, table, arena, h, thr, a, b, positions):
+                x = bb.norm_apply(lp["norm1"], h, cfg.norm)
+                emb = embed_apply(emb_p, x, pool, act)
+                d2, idx = dindex.search_device(emb, table=table)
+                dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
+                sim = a * dist + b
+                hit = sim > thr
+                idx0 = idx[:, 0].astype(jnp.int32)
+                if kernel_path:
+                    from repro.kernels.memo_attention.ops import \
+                        memo_attention
+                    qq, kk, vv = attn_mod._qkv(lp["mix"], x, cfg, positions)
+                    S = x.shape[1]
+                    blk = max(8, min(128, S))
+                    out = memo_attention(
+                        qq, kk, vv, arena, idx0, hit.astype(jnp.int32),
+                        causal=cfg.causal, window=cfg.sliding_window,
+                        block_q=blk, block_k=blk, interpret=interpret)
+                    y = jnp.einsum("bshe,hed->bsd", out, lp["mix"]["wo"])
+                elif nq == 1:
+                    apm = jnp.take(arena, idx0, axis=0)
+                    y = bucketed(lp, x, apm, hit, positions, B)
+                else:
+                    apm = jnp.take(arena, idx0, axis=0)
+                    order = jnp.argsort(jnp.logical_not(hit))  # hits first
+                    qs = B // nq
+                    x_s = jnp.take(x, order, 0)
+                    apm_s = jnp.take(apm, order, 0)
+                    hit_s = jnp.take(hit, order, 0)
+                    pos_s = jnp.take(positions, order, 0)
+                    parts = [bucketed(lp, x_s[g * qs:(g + 1) * qs],
+                                      apm_s[g * qs:(g + 1) * qs],
+                                      hit_s[g * qs:(g + 1) * qs],
+                                      pos_s[g * qs:(g + 1) * qs], qs)
+                             for g in range(nq)]
+                    y = jnp.take(jnp.concatenate(parts, 0),
+                                 jnp.argsort(order), 0)
+                return self._chan_tail(lp, h + y, li), sim, hit
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        a, b = self.sim_cal
+        return fn(lp, self.embedder.params, self.device_index.table,
+                  self.device_db.apms, h, thr_dev, jnp.float32(a),
+                  jnp.float32(b), positions)
+
+    def _drain_stats(self, pend, st: MemoStats):
+        """Materialize the per-layer device counters in ONE host transfer
+        per batch (stacked), after the trailing barrier."""
+        if not pend:
+            return
+        sims = np.asarray(jnp.stack([s for _, s, _ in pend]))
+        hits = np.asarray(jnp.stack([hh for _, _, hh in pend]))
+        for (li, _, _), s_row, h_row in zip(pend, sims, hits):
+            st.n_layer_attempts += int(s_row.shape[0])
+            nh = int(h_row.sum())
+            st.n_hits += nh
+            st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + nh
+            st.sims.extend(s_row.tolist())
 
     def _infer_encdec(self, batch, thr, active, st: MemoStats, use_memo):
         """Whisper path: memoized encoder, plain decoder."""
@@ -285,6 +521,20 @@ class MemoEngine:
         return attn_mod.Memo(apm=apm, hit=hit, idx=idx[:, 0])
 
     # -- layer application --------------------------------------------------
+    def _chan_tail(self, lp, h, li):
+        """norm2 + channel mixer (moe/mlp) tail shared by every jitted
+        layer body — traceable, so it is called INSIDE the jits; one copy
+        keeps the fast/host/kernel paths from diverging."""
+        cfg = self.cfg
+        x = bb.norm_apply(lp["norm2"], h, cfg.norm)
+        if bb._chan_kind(cfg, li) == "moe":
+            from repro.models import moe as moe_mod
+            out, _ = moe_mod.moe_apply(lp["chan"], x, cfg)
+        else:
+            from repro.models.layers import mlp_apply
+            out = mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
+        return h + out
+
     def _layer_plain(self, lp, h, kind, li, memo, positions):
         key = ("plain", kind, li if self.cfg.moe else 0, memo is not None,
                h.shape)
@@ -356,16 +606,7 @@ class MemoEngine:
                         mask_kind="causal" if cfg.causal else "bidir",
                         window=cfg.sliding_window)
                     y = y.at[sel_m].add(y_miss * keep_m[:, None, None])
-                h = h + y
-                x = bb.norm_apply(lp["norm2"], h, cfg.norm)
-                ck = bb._chan_kind(cfg, li)
-                if ck == "moe":
-                    from repro.models import moe as moe_mod
-                    out, _ = moe_mod.moe_apply(lp["chan"], x, cfg)
-                else:
-                    from repro.models.layers import mlp_apply
-                    out = mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
-                return h + out
+                return self._chan_tail(lp, h + y, li)
             fn = jax.jit(run)
             self._jit_cache[key] = fn
         keep_h = (np.arange(nh) < hit_idx.size).astype(np.float32)
@@ -378,13 +619,16 @@ class MemoEngine:
         """The TPU-native serving path: hits are served by the fused
         Pallas memo_attention kernel — APM tiles gathered from the
         device-resident DB by scalar-prefetched index, QKᵀ+softmax skipped
-        per-sequence via pl.when (interpret mode on CPU)."""
+        per-sequence via pl.when. ``interpret`` is backend-aware (the
+        Pallas interpreter on CPU CI, compiled on TPU; override via
+        MemoConfig.interpret). Misses route through the kernel's
+        clamped-gather, so they never touch the host arena."""
         cfg = self.cfg
-        if not hasattr(self, "_device_db") or \
-                len(self._device_db) != len(self.db):
-            self._device_db = jnp.asarray(self.db._arena[: len(self.db)])
-        hit_idx = jnp.asarray(np.asarray(memo.idx), jnp.int32)
-        hit = jnp.asarray(np.asarray(memo.hit), jnp.int32)
+        if self.device_db is None or len(self.device_db) != len(self.db):
+            self._sync_device_tier()
+        hit_idx = jnp.asarray(memo.idx, jnp.int32)
+        hit = jnp.asarray(memo.hit, jnp.int32)
+        interpret = self._interpret
         key = ("kernel", li if cfg.moe else 0, h.shape)
         fn = self._jit_cache.get(key)
         if fn is None:
@@ -397,15 +641,12 @@ class MemoEngine:
                 out = memo_attention(
                     q, k, v, db, hit_idx, hit, causal=cfg.causal,
                     window=cfg.sliding_window,
-                    block_q=blk, block_k=blk, interpret=True)
+                    block_q=blk, block_k=blk, interpret=interpret)
                 y = jnp.einsum("bshe,hed->bsd", out, lp["mix"]["wo"])
-                h2 = h + y
-                x = bb.norm_apply(lp["norm2"], h2, cfg.norm)
-                from repro.models.layers import mlp_apply
-                return h2 + mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
+                return self._chan_tail(lp, h + y, li)
             fn = jax.jit(run)
             self._jit_cache[key] = fn
-        return fn(lp, h, self._device_db, hit_idx, hit, positions)
+        return fn(lp, h, self.device_db.apms, hit_idx, hit, positions)
 
     def _memo_only(self, lp, x, kind, apm):
         key = ("memo_only", kind, x.shape)
@@ -470,7 +711,7 @@ class MemoEngine:
             self.infer(batch, stats=st)
             alpha_from = st
         profiles = {}
-        for li, kind, lp in bb.iter_layers(self.params, cfg):
+        for li, kind, lp in self._iter_layers():
             if li not in self.layers:
                 h = self._layer_plain(lp, h, kind, li, None, positions)
                 continue

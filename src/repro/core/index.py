@@ -7,9 +7,16 @@ and to SPMD, so we provide matmul-shaped indexes (DESIGN.md §2):
                     ‖q‖² − 2·q·Dᵀ + ‖d‖² is one matmul).
 * ``IVFIndex``    — k-means coarse quantizer + exact search in the nprobe
                     nearest lists; sub-linear in N like HNSW, but batched.
+* ``DeviceIndex`` — the serving tier: the embedding table is a device
+                    array and search is traceable inside a jit (streaming
+                    Pallas ``nn_search`` on TPU, one-matmul fallback on
+                    CPU/interpret, ``distributed_search`` under a mesh),
+                    so the engine's embed→search→threshold→gather pipeline
+                    never leaves the accelerator.
 
-Both return (distances, indices); the engine converts distance → predicted
-similarity (the Siamese loss trains ‖e₁−e₂‖ ≈ 1 − SC).
+All three share the host ``search`` API returning (distances, indices);
+the engine converts distance → predicted similarity (the Siamese loss
+trains ‖e₁−e₂‖ ≈ 1 − SC).
 """
 from __future__ import annotations
 
@@ -122,6 +129,89 @@ class IVFIndex:
         dist = np.sqrt(np.maximum(np.take_along_axis(d2, order, 1), 0.0))
         idx = np.take_along_axis(cand_ids, order, 1)
         return dist, idx
+
+
+class DeviceIndex:
+    """Device-resident exact top-k index — the serving tier (DESIGN.md §2).
+
+    Unlike the host-tier indexes, the embedding table lives on the
+    accelerator and ``search_device`` is pure jnp/Pallas, so the engine can
+    trace it *inside* its fused lookup jit: no numpy round-trip, no host
+    synchronization on the hot path. Backend selection:
+
+    * TPU           — the streaming ``nn_search`` Pallas kernel (the DB
+                      tiles stream HBM→VMEM; running argmin in VMEM).
+    * CPU/interpret — the ExactIndex one-matmul formulation (running the
+                      kernel under the Pallas interpreter would be strictly
+                      slower than XLA's fused matmul).
+    * mesh          — ``distributed_search``: per-shard local argmin + a
+                      small all-gather (the multi-host pod case).
+    """
+
+    def __init__(self, dim: int, *, use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None, block_q: int = 128,
+                 block_n: int = 512, mesh=None, db_axis: str = "data"):
+        self.dim = dim
+        self.interpret = (jax.default_backend() == "cpu"
+                          if interpret is None else interpret)
+        # matmul fallback under interpret/CPU unless the kernel is forced
+        self.use_kernel = ((not self.interpret) if use_kernel is None
+                           else use_kernel)
+        self.block_q = block_q
+        self.block_n = block_n
+        self.mesh = mesh
+        self.db_axis = db_axis
+        self._table: Optional[jnp.ndarray] = None
+
+    def __len__(self):
+        return 0 if self._table is None else self._table.shape[0]
+
+    @property
+    def table(self) -> jnp.ndarray:
+        return self._table
+
+    # host-tier compat: numpy staging view (ExactIndex/IVFIndex expose this)
+    @property
+    def _embs(self):
+        return None if self._table is None else np.asarray(self._table)
+
+    def add(self, embs):
+        embs = jnp.asarray(embs, jnp.float32)
+        self._table = (embs if self._table is None
+                       else jnp.concatenate([self._table, embs], 0))
+
+    def search_device(self, q, k: int = 1, *, table: Optional[jnp.ndarray]
+                      = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Traceable search. q: (B, dim) device array →
+        (sq_dists (B, k), idx (B, k)) device arrays — SQUARED L2, unlike the
+        host API (sqrt belongs to the caller's fused sim calculation).
+        ``table`` lets a jitted caller pass the table as a traced argument
+        so index growth re-specializes instead of staleness."""
+        t = self._table if table is None else table
+        q = jnp.asarray(q, jnp.float32)
+        if k == 1:
+            if self.mesh is not None:
+                from repro.core.database import distributed_search
+                d2, idx = distributed_search(t, q, self.mesh,
+                                             db_axis=self.db_axis)
+            elif self.use_kernel:
+                from repro.kernels.nn_search.ops import nn_search
+                d2, idx = nn_search(q, t, block_q=self.block_q,
+                                    block_n=self.block_n,
+                                    interpret=self.interpret)
+            else:
+                d2 = _sq_dists(q, t)
+                idx = jnp.argmin(d2, -1).astype(jnp.int32)
+                d2 = jnp.take_along_axis(d2, idx[:, None], -1)[:, 0]
+            return d2[:, None], idx[:, None]
+        neg, idx = jax.lax.top_k(-_sq_dists(q, t), k)
+        return -neg, idx.astype(jnp.int32)
+
+    def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-compat API, same contract as ExactIndex.search: L2 (not
+        squared) distances as numpy."""
+        d2, idx = self.search_device(jnp.asarray(q, jnp.float32), k)
+        return (np.sqrt(np.maximum(np.asarray(d2), 0.0)), np.asarray(idx))
 
 
 def recall_at_1(index, oracle: ExactIndex, queries) -> float:

@@ -11,11 +11,8 @@ from repro.kernels.memo_attention.kernel import memo_attention_bhsd
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
                                    "interpret"))
-def memo_attention(q, k, v, db_apm, hit_idx, hit, *, causal=True, window=None,
-                   block_q=128, block_k=128, interpret=False):
-    """Model layout: q (B,S,H,dh), k/v (B,S,Hkv,dh), db_apm (N,H,S,S),
-    hit_idx/hit (B,). Misses clamp the gather index to 0 (the tile fetch is
-    speculative; its result is ignored)."""
+def _memo_attention_jit(q, k, v, db_apm, hit_idx, hit, *, causal, window,
+                        block_q, block_k, interpret):
     B, S, H, dh = q.shape
     Hkv = k.shape[2]
     qt = q.transpose(0, 2, 1, 3)
@@ -27,3 +24,16 @@ def memo_attention(q, k, v, db_apm, hit_idx, hit, *, causal=True, window=None,
                               block_q=block_q, block_k=block_k,
                               interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+def memo_attention(q, k, v, db_apm, hit_idx, hit, *, causal=True, window=None,
+                   block_q=128, block_k=128, interpret=None):
+    """Model layout: q (B,S,H,dh), k/v (B,S,Hkv,dh), db_apm (N,H,S,S),
+    hit_idx/hit (B,). Misses clamp the gather index to 0 (the tile fetch is
+    speculative; its result is ignored). ``interpret=None`` resolves per
+    backend: Pallas interpreter on CPU, compiled on TPU."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _memo_attention_jit(q, k, v, db_apm, hit_idx, hit, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)

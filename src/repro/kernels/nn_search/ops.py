@@ -9,7 +9,17 @@ from repro.kernels.nn_search.kernel import nn_search_kernel
 
 
 @partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
-def nn_search(q, db, *, block_q=128, block_n=512, interpret=False):
-    """Top-1 L2 over the DB. Returns (squared_dists (B,), idx (B,))."""
+def _nn_search_jit(q, db, *, block_q, block_n, interpret):
     return nn_search_kernel(q, db, block_q=block_q, block_n=block_n,
                             interpret=interpret)
+
+
+def nn_search(q, db, *, block_q=128, block_n=512, interpret=None):
+    """Top-1 L2 over the DB. Returns (squared_dists (B,), idx (B,)).
+
+    ``interpret=None`` resolves per backend: the Pallas interpreter on CPU
+    (CI), compiled on TPU. Traceable inside an outer jit."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _nn_search_jit(q, db, block_q=block_q, block_n=block_n,
+                          interpret=interpret)

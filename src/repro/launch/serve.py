@@ -35,8 +35,12 @@ def main():
     ap.add_argument("--threshold", type=float, default=None)
     ap.add_argument("--mode", default="bucket",
                     choices=["select", "bucket", "kernel"])
-    ap.add_argument("--index", default="exact", choices=["exact", "ivf"])
+    ap.add_argument("--index", default="exact",
+                    choices=["exact", "ivf", "device"])
     ap.add_argument("--no-memo", action="store_true")
+    ap.add_argument("--no-fast-path", action="store_true",
+                    help="force the host-synchronous serving path "
+                         "(per-layer lookup round-trips; A/B baseline)")
     ap.add_argument("--calib-batches", type=int, default=6)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--selective", action="store_true")
@@ -53,7 +57,8 @@ def main():
     thr = args.threshold if args.threshold is not None else LEVELS.get(
         args.level, 0.97)
     eng = MemoEngine(model, params, MemoConfig(
-        threshold=thr, mode=args.mode, index_kind=args.index))
+        threshold=thr, mode=args.mode, index_kind=args.index,
+        device_fast_path=False if args.no_fast_path else None))
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     t0 = time.perf_counter()
@@ -88,12 +93,20 @@ def main():
     print(f"[serve] baseline     {p:8.1f} ms/batch")
     if not args.no_memo:
         m = np.median(lat_memo[1:] or lat_memo) * 1e3
+        fast = eng._use_fast_path()
         print(f"[serve] memoized     {m:8.1f} ms/batch  "
-              f"({(1 - m / p) * 100:+.1f}% latency)")
+              f"({(1 - m / p) * 100:+.1f}% latency)"
+              + ("  [device fast path]" if fast else "  [host-sync path]"))
         print(f"[serve] memo rate    {st.memo_rate*100:8.1f}%  "
               f"(hits {st.n_hits}/{st.n_layer_attempts})")
-        print(f"[serve] overhead     embed {st.t_embed:.2f}s "
-              f"search {st.t_search:.2f}s fetch {st.t_fetch:.2f}s")
+        if fast:
+            # fused path: no per-phase timers by design (zero per-layer
+            # sync); see benchmarks/serve_fastpath.py for the breakdown
+            print(f"[serve] fused serve  {st.t_total:.2f}s total "
+                  f"(event-based stats, one barrier/batch)")
+        else:
+            print(f"[serve] overhead     embed {st.t_embed:.2f}s "
+                  f"search {st.t_search:.2f}s fetch {st.t_fetch:.2f}s")
 
 
 if __name__ == "__main__":

@@ -171,6 +171,31 @@ def test_nn_search_property(B, N, seed):
     np.testing.assert_array_equal(np.asarray(i), d2_all.argmin(1))
 
 
+@pytest.mark.parametrize("B,N,dim,bq,bn", [
+    (3, 250, 16, 16, 64),    # B < block_q AND N % block_n != 0 (tail mask)
+    (5, 999, 32, 8, 512),    # padded tail close to a full extra block
+    (2, 33, 16, 16, 32),     # single ragged DB block
+])
+def test_nn_search_parity_vs_exact_index(B, N, dim, bq, bn):
+    """The serving-tier kernel agrees with the host-tier ExactIndex
+    oracle: same argmin, and sqrt(sq_dists) == ExactIndex L2 — including
+    the N-padding tail (n_total masking must keep padded DB rows out of
+    the argmin) and B < block_q (query padding trimmed)."""
+    from repro.core.index import ExactIndex
+    rng = np.random.default_rng(B * 1000 + N)
+    db = rng.normal(size=(N, dim)).astype(np.float32)
+    q = rng.normal(size=(B, dim)).astype(np.float32)
+    exact = ExactIndex(dim)
+    exact.add(db)
+    dist_ref, idx_ref = exact.search(q, 1)
+    d2, idx = nn_search(jnp.asarray(q), jnp.asarray(db), block_q=bq,
+                        block_n=bn, interpret=True)
+    assert d2.shape == (B,) and idx.shape == (B,)
+    np.testing.assert_array_equal(np.asarray(idx), idx_ref[:, 0])
+    np.testing.assert_allclose(np.sqrt(np.maximum(np.asarray(d2), 0.0)),
+                               dist_ref[:, 0], rtol=1e-4, atol=1e-4)
+
+
 def test_nn_search_exact_self_query():
     """Querying with DB rows returns identity with ~zero distance."""
     db = jax.random.normal(jax.random.PRNGKey(9), (50, 64))
