@@ -32,7 +32,22 @@ MODULES = [
     "ablations",           # beyond-paper: similarity knob + index ablation
     "roofline",            # deliverable (g): from the dry-run artifacts
     "serve_fastpath",      # ISSUE 1: device fast path vs host-sync serve
+    "serve_online",        # ISSUE 2: MemoStore online adaptation + delta sync
 ]
+
+
+def parity_failures(serve_doc, tag=""):
+    """Bucket/kernel fast-path logits must match the select reference;
+    collect every mode whose parity boolean is False so --json can fail
+    loudly with a diff report instead of silently recording it."""
+    bad = []
+    for level, blk in (serve_doc or {}).get("levels", {}).items():
+        for mode, row in blk.get("modes", {}).items():
+            if row.get("logits_match_select") is False:
+                bad.append({"where": f"{tag}{level}/{mode}",
+                            "max_abs_diff": row.get("logits_max_abs_diff"),
+                            "threshold": blk.get("threshold")})
+    return bad
 
 
 def main() -> None:
@@ -69,7 +84,11 @@ def main() -> None:
         # lru-cached: free if serve_fastpath already ran; skip if it just
         # failed (lru_cache does not cache exceptions — a retry would
         # redo the multi-minute sweep only to fail the same way)
-        if "serve_fastpath" not in failed_modules:
+        def wanted(name):
+            return ((only is None or any(o in name for o in only))
+                    and name not in failed_modules)
+
+        if wanted("serve_fastpath"):
             try:
                 from benchmarks.serve_fastpath import collect
                 doc["serve"] = collect()
@@ -77,6 +96,27 @@ def main() -> None:
                 print(f"# serve detail FAILED:\n{traceback.format_exc()}",
                       file=sys.stderr)
                 failures += 1
+        if wanted("serve_online"):
+            try:
+                from benchmarks.serve_online import collect as collect_online
+                doc["serve_online"] = collect_online()
+            except Exception:  # noqa: BLE001
+                print(f"# serve_online detail FAILED:\n"
+                      f"{traceback.format_exc()}", file=sys.stderr)
+                failures += 1
+        # fast-path parity is a HARD gate: divergence from the select
+        # reference exits nonzero with a diff report, not just a boolean
+        # buried in the JSON
+        bad = parity_failures(doc.get("serve"))
+        if bad:
+            failures += 1
+            print("# PARITY FAILURE: fast-path logits diverged from the "
+                  "select reference beyond tolerance:", file=sys.stderr)
+            for b in bad:
+                print(f"#   {b['where']} (thr={b['threshold']}): "
+                      f"max|Δlogits| = {b['max_abs_diff']}",
+                      file=sys.stderr)
+            doc["parity_failures"] = bad
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -108,6 +108,8 @@ def collect():
                     "logits_match_select": bool(np.allclose(
                         np.asarray(fast_logits), ref_logits, rtol=2e-3,
                         atol=2e-3)),
+                    "logits_max_abs_diff": float(np.max(np.abs(
+                        np.asarray(fast_logits) - ref_logits))),
                 }
             by_level[level] = {"threshold": thr, "modes": modes}
         eng.mc.mode, eng.mc.device_fast_path = "select", None

@@ -1,0 +1,113 @@
+"""Online-adaptation benchmark (ISSUE 2 / DESIGN.md §2.5).
+
+Measures the MemoStore lifecycle under corpus drift on a small trained
+encoder: steady-state hit rate and ms/batch with online admission ON vs
+a frozen store, plus the transfer cost of generation-counted delta sync
+vs the full-resync-per-mutation strawman. Emitted into BENCH_serve.json
+by ``python -m benchmarks.run --json`` as the ``serve_online`` section —
+the adaptation baseline future store PRs (sharded, multi-tenant, async)
+regress against.
+
+The engine is built fresh here (NOT the lru-shared ``built_engine``):
+admission mutates the store, and leaking admitted entries into the other
+benchmark modules would corrupt their numbers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_encoder
+from repro.core.engine import MemoConfig, MemoEngine, MemoStats
+from repro.data import TemplateCorpus
+from repro.launch.serve import _run_phase
+
+BATCH = 16
+SEQ = 32
+PHASE_BATCHES = 8
+
+
+@functools.lru_cache(maxsize=1)
+def collect():
+    model, params, _ = trained_encoder("bert_base", n_layers=2,
+                                       seq_len=SEQ)
+    corpus = TemplateCorpus(vocab=model.cfg.vocab, seq_len=SEQ,
+                            n_templates=6, slot_fraction=0.2, seed=0)
+    # generous device slack: admissions land as deltas for the whole run
+    # instead of tripping mid-run full re-materializations (shape change =
+    # fused-jit retrace)
+    eng = MemoEngine(model, params, MemoConfig(
+        mode="bucket", embed_steps=150, budget_mb=256.0, device_slack=8.0))
+    eng.build(jax.random.PRNGKey(1),
+              [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}
+               for _ in range(4)])
+    # per-model autotuned threshold (paper Table 2 / §5.4) from a FRESH
+    # calibration-distribution sample
+    eng.mc.threshold = eng.suggest_levels(
+        [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}])["aggressive"]
+
+    def drifted(seed):
+        return TemplateCorpus(vocab=model.cfg.vocab, seq_len=SEQ,
+                              n_templates=6, slot_fraction=0.2, seed=seed)
+
+    out = {"config": {"arch": "bert_base (reduced, 2 layers)",
+                      "batch": BATCH, "seq": SEQ,
+                      "threshold": float(eng.mc.threshold),
+                      "phase_batches": PHASE_BATCHES,
+                      "backend": jax.default_backend()}}
+    # frozen pass first: it does not admit/evict, so both passes start
+    # from the identical calibration-built store; reuse_counts (the
+    # eviction clock's input) still warm during serving and are restored
+    counts0 = eng.db.reuse_counts.copy()
+    for label, admit in (("frozen", False), ("adaptive", True)):
+        eng.mc.admit = admit
+        eng.db.reuse_counts[:] = counts0
+        st = MemoStats()
+        r0, t0_, st = _run_phase(eng, drifted(0), PHASE_BATCHES, BATCH, st)
+        r1, t1_, st = _run_phase(eng, drifted(117), PHASE_BATCHES, BATCH,
+                                 st)
+        out[label] = {
+            "phase0_hit_rate": float(np.mean(r0)),
+            "drift_hit_rates": [float(r) for r in r1],
+            "drift_steady_hit_rate": float(np.mean(r1[len(r1) // 2:])),
+            # steady state: drift-phase tail (compiles + the admission
+            # warm-up happen in the head)
+            "ms_per_batch": float(np.median(t1_[len(t1_) // 2:])),
+        }
+    eng.mc.admit = False
+    s = eng.store.stats
+    entry = eng.store.entry_nbytes
+    out["store"] = {
+        "n_admitted": s.n_admitted,
+        "n_evicted": s.n_evicted,
+        "live_entries": eng.store.live_count,
+        "n_delta_syncs": s.n_delta_syncs,
+        "n_full_syncs": s.n_full_syncs,
+        "delta_sync_bytes": s.bytes_delta,
+        "full_sync_bytes": s.bytes_full,
+        # the pre-store strawman: every admission batch re-ships the arena
+        "full_resync_per_mutation_bytes": s.n_delta_syncs
+        * len(eng.db) * entry,
+    }
+    fr = out["frozen"]["drift_steady_hit_rate"]
+    ad = out["adaptive"]["drift_steady_hit_rate"]
+    out["recovery_ratio"] = float("inf") if fr == 0 else ad / fr
+    return out
+
+
+def run():
+    out = collect()
+    for label in ("frozen", "adaptive"):
+        row = out[label]
+        yield (f"serve_online_{label}", row["ms_per_batch"] * 1e3,
+               f"drift_steady_rate={row['drift_steady_hit_rate']:.3f}")
+    st = out["store"]
+    saved = (1.0 - st["delta_sync_bytes"]
+             / max(1, st["full_resync_per_mutation_bytes"]))
+    yield ("serve_online_delta_sync", 0.0,
+           f"delta_mb={st['delta_sync_bytes']/1e6:.2f};"
+           f"full_equiv_mb={st['full_resync_per_mutation_bytes']/1e6:.2f};"
+           f"saved={saved*100:.0f}%")

@@ -6,5 +6,6 @@ from repro.core.index import ExactIndex, IVFIndex, recall_at_1  # noqa: F401
 from repro.core.database import (  # noqa: F401
     AttentionDB, DeviceDB, distributed_search)
 from repro.core.selective import LayerProfile, PerfModel  # noqa: F401
+from repro.core.store import MemoStore, StoreStats  # noqa: F401
 from repro.core.engine import (  # noqa: F401
-    LEVELS, MemoConfig, MemoEngine, MemoStats)
+    LEVELS, MemoConfig, MemoEngine, MemoStats, SimReservoir)

@@ -6,20 +6,44 @@ Two tiers (DESIGN.md §2):
   float16 arena (the pod host's RAM is the "big memory"); fetches are
   zero-copy numpy views into the arena, batched into a single device
   transfer — the engine-level analogue of the paper's mmap gathering.
-  Reuse counts are tracked for the Fig-11 analysis.
+  Reuse counts are tracked for the Fig-11 analysis and feed the
+  MemoStore eviction clock. Slots freed by eviction go on a free-list
+  and are recycled in place by ``put`` (no compaction, so slot ids stay
+  stable and the device tier can be delta-patched).
 
 * ``DeviceDB`` — device-resident tier for the pure-JAX serving path: the DB
   is a jnp array (shardable over the ``data`` mesh axis); lookup is a fused
   gather the memo_attention Pallas kernel can consume directly by index
-  (the TPU "zero-copy": the APM tile flows HBM→VMEM exactly once).
+  (the TPU "zero-copy": the APM tile flows HBM→VMEM exactly once). The
+  arena is preallocated with slack so MemoStore's incremental sync can
+  land admissions/overwrites with ``.at[slots].set`` deltas instead of a
+  full re-transfer; ``transfer_bytes`` accounts every host→device byte.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def pad_delta_pow2(slots: np.ndarray, values: Optional[np.ndarray] = None):
+    """Pad a scatter delta to the next power-of-2 row count by repeating
+    the first (slot, value) pair. A duplicate index writing the identical
+    value is a no-op, and the padding bounds the number of distinct
+    compiled scatter shapes to log2(N) — otherwise every novel delta size
+    pays a fresh XLA compile (~100ms+ on CPU) on the serving boundary."""
+    n = slots.size
+    p = 1
+    while p < n:
+        p *= 2
+    if p != n:
+        slots = np.concatenate([slots, np.repeat(slots[:1], p - n)])
+        if values is not None:
+            values = np.concatenate(
+                [values, np.repeat(values[:1], p - n, axis=0)])
+    return slots, values
 
 
 class AttentionDB:
@@ -32,16 +56,32 @@ class AttentionDB:
         self._arena = np.zeros((capacity,) + self.apm_shape, dtype)
         self._n = 0
         self.reuse_counts = np.zeros(capacity, np.int64)
+        self._live = np.zeros(capacity, bool)
+        self._free: List[int] = []           # released slots, LIFO recycled
 
     def __len__(self):
         return self._n
 
     @property
+    def entry_nbytes(self) -> int:
+        return int(np.prod(self.apm_shape)) * self._arena.itemsize
+
+    @property
+    def live_count(self) -> int:
+        return self._n - len(self._free)
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        return self._live[: self._n]
+
+    @property
     def nbytes(self) -> int:
-        return self._n * int(np.prod(self.apm_shape)) * self._arena.itemsize
+        """Bytes of live entries (budget accounting); the allocation is
+        ``capacity * entry_nbytes``."""
+        return self.live_count * self.entry_nbytes
 
     def add(self, apms: np.ndarray) -> np.ndarray:
-        """apms: (B, H, L, L). Returns assigned indices.
+        """apms: (B, H, L, L). Appends at the arena tail; returns indices.
 
         Growth is geometric but tight: the arena doubles (amortized O(1)
         appends) or jumps straight to the requested size, whichever is
@@ -55,11 +95,49 @@ class AttentionDB:
             counts = np.zeros(new_cap, np.int64)
             counts[: self._n] = self.reuse_counts[: self._n]
             self.reuse_counts = counts
+            live = np.zeros(new_cap, bool)
+            live[: self._n] = self._live[: self._n]
+            self._live = live
             self.capacity = new_cap
         idx = np.arange(self._n, self._n + b)
         self._arena[idx] = np.asarray(apms, self.dtype)
+        self._live[idx] = True
         self._n += b
         return idx
+
+    def put(self, apms: np.ndarray) -> np.ndarray:
+        """Admit entries, recycling released slots first (LIFO) and
+        appending the remainder — the arena never compacts, so live slot
+        ids are stable across admissions/evictions."""
+        apms = np.asarray(apms, self.dtype)
+        b = apms.shape[0]
+        n_reuse = min(b, len(self._free))
+        slots = np.asarray([self._free.pop() for _ in range(n_reuse)],
+                           np.int64)
+        if n_reuse:
+            self._arena[slots] = apms[:n_reuse]
+            self.reuse_counts[slots] = 0
+            self._live[slots] = True
+        if b > n_reuse:
+            slots = np.concatenate([slots, self.add(apms[n_reuse:])])
+        return slots
+
+    def overwrite(self, slots: Sequence[int], apms: np.ndarray) -> None:
+        """In-place update of existing slots (no allocation, no id churn)."""
+        slots = np.asarray(slots).reshape(-1)
+        self._arena[slots] = np.asarray(apms, self.dtype)
+
+    def release(self, slots: Sequence[int]) -> None:
+        """Evict entries: mark slots dead and queue them for recycling.
+        Idempotent per slot; released slots keep their arena rows until
+        ``put`` overwrites them (readers must go through the index, which
+        tombstones the slot first)."""
+        for s in np.asarray(slots).reshape(-1):
+            s = int(s)
+            if 0 <= s < self._n and self._live[s]:
+                self._live[s] = False
+                self.reuse_counts[s] = 0
+                self._free.append(s)
 
     def get(self, indices, count_reuse: bool = True) -> np.ndarray:
         """Batched fetch: one fancy-index gather out of the arena (no
@@ -81,20 +159,64 @@ class AttentionDB:
 
 
 class DeviceDB:
-    """Device-resident APM store; shard over the data axis for pods."""
+    """Device-resident APM store; shard over the data axis for pods.
 
-    def __init__(self, apms: jnp.ndarray, sharding=None):
+    ``capacity`` rows are preallocated (``capacity >= n``): the slack lets
+    MemoStore land admissions as ``.at[slots].set`` deltas without changing
+    the array shape (stable shapes = no fused-jit recompiles), and a
+    generation counter upstream decides when a delta suffices. Every
+    host→device byte is tallied in ``transfer_bytes``."""
+
+    def __init__(self, apms, capacity: Optional[int] = None, sharding=None):
+        apms = np.asarray(apms)
+        n = apms.shape[0]
+        capacity = max(int(capacity or 0), n)
+        if capacity > n:
+            pad = np.zeros((capacity - n,) + apms.shape[1:], apms.dtype)
+            apms = np.concatenate([apms, pad], 0)
         self.apms = (jax.device_put(apms, sharding) if sharding is not None
                      else jnp.asarray(apms))
+        self._n = n
+        self.transfer_bytes = int(apms.nbytes)
 
     @classmethod
-    def from_host(cls, db: AttentionDB, sharding=None) -> "DeviceDB":
+    def from_host(cls, db: AttentionDB, capacity: Optional[int] = None,
+                  sharding=None) -> "DeviceDB":
         """Materialize the serving copy of a host arena (one transfer of
         the live prefix; the host tier stays the source of truth)."""
-        return cls(db._arena[: len(db)], sharding)
+        return cls(db._arena[: len(db)], capacity=capacity,
+                   sharding=sharding)
+
+    def update(self, slots, apms) -> int:
+        """Delta sync: scatter ``apms`` into ``slots`` (admissions land in
+        the preallocated slack, overwrites recycle rows in place) — the
+        ONLY transfer is the changed rows, never the arena. Returns the
+        bytes shipped."""
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size == 0:
+            return 0
+        if int(slots.max()) >= self.capacity:
+            raise ValueError("delta update past device capacity; "
+                             "caller must full-resync with more slack")
+        n_max = int(slots.max())
+        slots, values = pad_delta_pow2(slots, np.asarray(apms, self.dtype))
+        values = jnp.asarray(values)
+        self.apms = self.apms.at[jnp.asarray(slots)].set(values)
+        self._n = max(self._n, n_max + 1)
+        shipped = int(values.nbytes + slots.size * 4)
+        self.transfer_bytes += shipped
+        return shipped
+
+    @property
+    def capacity(self) -> int:
+        return self.apms.shape[0]
+
+    @property
+    def dtype(self):
+        return self.apms.dtype
 
     def __len__(self):
-        return self.apms.shape[0]
+        return self._n
 
     def gather(self, indices):
         """Fused XLA gather (B,) → (B, H, L, L); with a sharded DB, XLA

@@ -28,9 +28,10 @@ import numpy as np
 
 from repro.core.database import AttentionDB, DeviceDB
 from repro.core.embedding import Embedder, train_embedder
-from repro.core.index import DeviceIndex, ExactIndex, IVFIndex
+from repro.core.index import DeviceIndex
 from repro.core.selective import LayerProfile, PerfModel, timeit_median
 from repro.core.similarity import similarity_score
+from repro.core.store import MemoStore
 from repro.models import attention as attn_mod
 from repro.models import backbone as bb
 
@@ -60,6 +61,63 @@ class MemoConfig:
     device_quanta: int = 1
     # None → auto-detect backend (Pallas interpreter on CPU CI)
     interpret: Optional[bool] = None
+    # --- online admission (MemoStore lifecycle, DESIGN.md §2.5) ---
+    admit: bool = False             # capture misses during infer() and
+    #                                 admit them to the store
+    budget_mb: Optional[float] = None   # store byte budget (None = ∞)
+    admit_every: int = 1            # capture every Nth served batch
+    device_slack: float = 1.0       # device-arena slack fraction for
+    #                                 delta-sync landings
+    # refit sim_cal from captured (embedding, true-APM) pairs every N
+    # admission flushes (None = off): under drift the dist→similarity
+    # map goes stale and systematically under-predicts, starving the
+    # threshold even after the store has adapted
+    recal_every: Optional[int] = None
+
+
+class SimReservoir:
+    """Bounded reservoir sample (Algorithm R) of predicted similarities.
+
+    `MemoStats.sims` used to be an unbounded list — a serving loop that
+    threads one MemoStats through the whole run leaked forever. The
+    reservoir keeps a uniform sample, so percentile summaries (the
+    `suggest_levels`-style reporting) stay accurate while memory is O(cap).
+    """
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        self.cap = cap
+        self.seen = 0                 # total values offered
+        self._vals: List[float] = []
+        self._rng = np.random.default_rng(seed)
+
+    def append(self, v: float) -> None:
+        self.seen += 1
+        if len(self._vals) < self.cap:
+            self._vals.append(float(v))
+        else:
+            j = int(self._rng.integers(0, self.seen))
+            if j < self.cap:
+                self._vals[j] = float(v)
+
+    def extend(self, values) -> None:
+        values = list(values)
+        if len(self._vals) + len(values) <= self.cap:
+            self.seen += len(values)
+            self._vals.extend(float(v) for v in values)
+            return
+        for v in values:
+            self.append(v)
+
+    def percentile(self, q) -> float:
+        if not self._vals:
+            return float("nan")
+        return float(np.percentile(self._vals, q))
+
+    def __len__(self):
+        return len(self._vals)        # retained (bounded); .seen = total
+
+    def __iter__(self):
+        return iter(self._vals)
 
 
 @dataclass
@@ -67,7 +125,7 @@ class MemoStats:
     n_inputs: int = 0
     n_layer_attempts: int = 0
     n_hits: int = 0
-    sims: List[float] = field(default_factory=list)
+    sims: SimReservoir = field(default_factory=SimReservoir)
     t_embed: float = 0.0
     t_search: float = 0.0
     t_fetch: float = 0.0
@@ -75,6 +133,7 @@ class MemoStats:
     t_other: float = 0.0
     t_total: float = 0.0            # whole-batch wall time (fast path)
     per_layer_hits: Dict[int, int] = field(default_factory=dict)
+    n_admitted: int = 0             # entries admitted via miss capture
 
     @property
     def memo_rate(self) -> float:
@@ -96,18 +155,47 @@ class MemoEngine:
             self.layers = list(self.cfg.memoizable_layers())
         if memo_cfg.max_layers:
             self.layers = self.layers[: memo_cfg.max_layers]
-        self.db: Optional[AttentionDB] = None
-        self.index = None
+        # ALL memoization state (both tiers) lives in the MemoStore; the
+        # engine only orchestrates (DESIGN.md §2.5). Created by build().
+        self.store: Optional[MemoStore] = None
         self.embedder: Optional[Embedder] = None
-        self.sim_cal = (-1.0, 1.0)       # sim ≈ a·dist + b calibration
         self.perf: Optional[PerfModel] = None
         self._jit_cache: Dict = {}
-        # device (serving) tier — see DESIGN.md §2
-        self.device_db: Optional[DeviceDB] = None
-        self.device_index: Optional[DeviceIndex] = None
         self._interpret = (memo_cfg.interpret if memo_cfg.interpret
                            is not None else jax.default_backend() == "cpu")
         self._layers_cache = None
+        self._serve_batches = 0          # admission-sampling counter
+        self._pending_admissions: List = []   # host-path capture staging
+        self._recal_buf: List = []       # rolling (apms, embs) captures
+        self._flush_count = 0
+
+    # --- store delegation (compat: the pre-store attribute API) ---------
+    @property
+    def db(self) -> Optional[AttentionDB]:
+        return self.store.db if self.store is not None else None
+
+    @property
+    def index(self):
+        return self.store.index if self.store is not None else None
+
+    @property
+    def device_db(self) -> Optional[DeviceDB]:
+        return self.store.device_db if self.store is not None else None
+
+    @property
+    def device_index(self) -> Optional[DeviceIndex]:
+        return self.store.device_index if self.store is not None else None
+
+    @property
+    def sim_cal(self):
+        return self.store.sim_cal if self.store is not None else (-1.0, 1.0)
+
+    @sim_cal.setter
+    def sim_cal(self, value):
+        if self.store is None:
+            raise AttributeError("sim_cal lives on the MemoStore; "
+                                 "build() the engine first")
+        self.store.sim_cal = tuple(value)
 
     def _iter_layers(self):
         """Params are fixed per engine: slice the stacked layer params
@@ -135,8 +223,14 @@ class MemoEngine:
         apms = np.concatenate(apms, 0)            # (N, heads, L, L)
         n, L, H = hiddens.shape
 
-        self.db = AttentionDB(apms.shape[1:], capacity=n)
-        self.db.add(apms)
+        budget = (None if self.mc.budget_mb is None
+                  else int(self.mc.budget_mb * 1e6))
+        self.store = MemoStore(
+            apms.shape[1:], self.mc.embed_dim,
+            index_kind=self.mc.index_kind, budget_bytes=budget,
+            capacity=n, interpret=self._interpret,
+            device_slack=self.mc.device_slack,
+            n_lists=max(4, int(np.sqrt(n))))
 
         k1, k2 = jax.random.split(key)
         emb = Embedder.init(k1, L, H, dim=self.mc.embed_dim,
@@ -149,40 +243,28 @@ class MemoEngine:
             print(f"embedder loss {hist[0]:.4f} -> {hist[-1]:.4f}")
 
         embs = np.asarray(self._embed(jnp.asarray(hiddens)))
-        if self.mc.index_kind == "ivf":
-            self.index = IVFIndex(self.mc.embed_dim,
-                                  n_lists=max(4, int(np.sqrt(n))))
-        elif self.mc.index_kind == "device":
-            self.index = DeviceIndex(self.mc.embed_dim,
-                                     interpret=self._interpret)
-        else:
-            self.index = ExactIndex(self.mc.embed_dim)
-        self.index.add(embs)
+        self.store.admit(apms, embs)      # calibration corpus = first epoch
         self._calibrate(hiddens, apms)
         # materialize the serving tier only when the fast path can reach
         # it (select-mode engines would duplicate the arena for nothing);
-        # mode switches after build are covered by the lazy resync in
+        # mode switches after build are covered by the lazy sync in
         # _infer_device/_layer_kernel
         if self.mc.store == "device" and self.mc.mode in ("bucket",
                                                           "kernel"):
-            self._sync_device_tier()
+            self.store.sync()
         return self
 
     # -------------------------------------------------------- device tier
     def _sync_device_tier(self):
-        """(Re)materialize the serving tier (DeviceDB + DeviceIndex) from
-        the host tier — one transfer each, done at build time, never on the
-        serving hot path."""
-        self.device_db = DeviceDB.from_host(self.db)
-        if isinstance(self.index, DeviceIndex):
-            self.device_index = self.index
-        else:
-            di = DeviceIndex(self.mc.embed_dim, interpret=self._interpret)
-            di.add(self.index._embs)
-            self.device_index = di
+        """Bring the serving tier (DeviceDB + DeviceIndex) up to date.
+        Generation-counted in the store: a clean store is a host-side
+        no-op, host-tier changes move as slot deltas into preallocated
+        device slack, and only arena growth past the device allocation
+        re-materializes (never on the serving hot path)."""
+        return self.store.sync()
 
     def _use_fast_path(self) -> bool:
-        if self.is_encdec or self.db is None:
+        if self.is_encdec or self.store is None or self.db is None:
             return False
         if self.mc.mode not in ("bucket", "kernel"):
             return False                 # select stays the host reference
@@ -254,8 +336,11 @@ class MemoEngine:
         cfg = self.cfg
         if self.is_encdec:
             return self._infer_encdec(batch, thr, active, st, use_memo)
+        capture = self._capture_now(use_memo)
+        if use_memo:
+            self._serve_batches += 1
         if use_memo and self._use_fast_path():
-            return self._infer_device(batch, thr, active, st)
+            return self._infer_device(batch, thr, active, st, capture)
         tokens = batch["tokens"]
         st.n_inputs += tokens.shape[0]
         h = bb.embed_tokens(self.params, tokens, cfg)
@@ -266,7 +351,8 @@ class MemoEngine:
             memo = None
             if use_memo and li in active and kind in ("attn", "mla") \
                     and self.db is not None:
-                memo = self._lookup(lp, h, kind, thr, st, li)
+                memo = self._lookup(lp, h, kind, thr, st, li,
+                                    positions=positions, capture=capture)
             t0 = time.perf_counter()
             if memo is not None and self.mc.mode == "bucket":
                 h = self._layer_bucket(lp, h, kind, li, memo, positions)
@@ -277,21 +363,25 @@ class MemoEngine:
                 h = self._layer_plain(lp, h, kind, li, memo, positions)
             jax.block_until_ready(h)
             st.t_attn += time.perf_counter() - t0
+        self._flush_admissions(st)        # batch boundary: admit + sync
         if cfg.n_classes:
             return bb.classify_from_hidden(self.params, h, cfg), st
         return bb.logits_from_hidden(self.params, h, cfg), st
 
     # -------------------------------------------------- device fast path
-    def _infer_device(self, batch, thr, active, st: MemoStats):
+    def _infer_device(self, batch, thr, active, st: MemoStats,
+                      capture: bool = False):
         """Device-resident serving loop (DESIGN.md §2): every layer is a
         chained jitted dispatch — fused lookup (embed → nn_search →
         threshold → gather) feeding the layer body — with ZERO per-layer
-        host synchronization. Stats are event-based: hit masks and
-        predicted sims accumulate as device arrays and are materialized
-        once per batch after the single trailing barrier."""
+        host synchronization. Stats are event-based: hit masks, predicted
+        sims and matched slots accumulate as device arrays and are
+        materialized once per batch after the single trailing barrier.
+        With ``capture`` (online admission), miss embeddings + APMs are
+        STAGED ON DEVICE the same way and drained at the batch boundary —
+        the per-layer loop still never blocks."""
         cfg = self.cfg
-        if self.device_db is None or len(self.device_db) != len(self.db):
-            self._sync_device_tier()     # build-time staleness, not hot path
+        self.store.sync()    # generation-counted: no-op unless stale
         tokens = batch["tokens"]
         st.n_inputs += tokens.shape[0]
         t0 = time.perf_counter()
@@ -306,12 +396,12 @@ class MemoEngine:
             prolog = self._jit_cache["prolog"] = jax.jit(prolog)
         h, positions = prolog(self.params, tokens)
         thr_dev = jnp.float32(thr)
-        pend = []                        # (layer, sims, hits) device arrays
+        pend = []          # per-layer device arrays, drained post-barrier
         for li, kind, lp in self._iter_layers():
             if li in active and kind in ("attn", "mla"):
-                h, sim, hit = self._layer_fused(lp, h, kind, li, thr_dev,
-                                                positions)
-                pend.append((li, sim, hit))
+                h, *rest = self._layer_fused(lp, h, kind, li, thr_dev,
+                                             positions, capture=capture)
+                pend.append((li, *rest))
             else:
                 h = self._layer_plain(lp, h, kind, li, None, positions)
         head = self._jit_cache.get("head")
@@ -325,14 +415,18 @@ class MemoEngine:
         dt = time.perf_counter() - t0
         st.t_total += dt
         st.t_attn += dt
-        self._drain_stats(pend, st)
+        self._drain_stats(pend, st, capture)
+        self._flush_admissions(st)
         return out, st
 
-    def _layer_fused(self, lp, h, kind, li, thr_dev, positions):
+    def _layer_fused(self, lp, h, kind, li, thr_dev, positions,
+                     capture: bool = False):
         """The fused serving layer: embed → nn_search → threshold → gather
         → attention → channel mixer, ONE jitted dispatch per layer, device
         arrays in and out (no np.asarray, no block_until_ready). Returns
-        (h', sims, hits); the hit decision is consumed on-device.
+        (h', sims, hits, slots) — plus (embs, apms_f16) under ``capture``,
+        staged on device for the batch-boundary admission drain; the hit
+        decision itself is consumed on-device.
 
         * ``bucket`` — rows are sorted hit-first ON DEVICE (stable argsort
           of the hit mask) and processed in fixed ``bucket_quantum``-sized
@@ -352,7 +446,7 @@ class MemoEngine:
         cfg = self.cfg
         kernel_path = self.mc.mode == "kernel" and kind == "attn"
         key = ("fused", kernel_path, kind, li if cfg.moe else 0, h.shape,
-               self.mc.device_quanta)
+               self.mc.device_quanta, capture)
         fn = self._jit_cache.get(key)
         if fn is None:
             pool, act = self.embedder.pool, self.embedder.act
@@ -435,7 +529,21 @@ class MemoEngine:
                              for g in range(nq)]
                     y = jnp.take(jnp.concatenate(parts, 0),
                                  jnp.argsort(order), 0)
-                return self._chan_tail(lp, h + y, li), sim, hit
+                out = (self._chan_tail(lp, h + y, li), sim, hit, idx0)
+                if capture:
+                    # miss capture for online admission: the TRUE APM of
+                    # this input, computed exactly like the miss path (so
+                    # an admitted entry replays bit-for-bit). Only the apm
+                    # output is consumed, so XLA dead-code-eliminates the
+                    # probe's APM·V and output projection; staged in the
+                    # arena dtype to halve the drain transfer.
+                    _, apm_cap = f_attn(lp["mix"], x, cfg,
+                                        positions=positions,
+                                        mask_kind=mask_kind,
+                                        window=cfg.sliding_window,
+                                        return_apm=True)
+                    out = out + (emb, apm_cap.astype(jnp.float16))
+                return out
             fn = jax.jit(run)
             self._jit_cache[key] = fn
         a, b = self.sim_cal
@@ -443,19 +551,87 @@ class MemoEngine:
                   self.device_db.apms, h, thr_dev, jnp.float32(a),
                   jnp.float32(b), positions)
 
-    def _drain_stats(self, pend, st: MemoStats):
-        """Materialize the per-layer device counters in ONE host transfer
-        per batch (stacked), after the trailing barrier."""
+    def _capture_now(self, use_memo: bool) -> bool:
+        """Admission sampling: capture misses on every Nth served batch
+        (``admit_every``) when online admission is enabled."""
+        return (use_memo and self.mc.admit and self.store is not None
+                and not self.is_encdec
+                and self._serve_batches % max(1, self.mc.admit_every) == 0)
+
+    def _drain_stats(self, pend, st: MemoStats, capture: bool = False):
+        """Materialize the per-layer device counters in O(1) stacked host
+        transfers per batch (TWO: sims+hits as one f32 block, slots as one
+        i32 block — plus embs and APMs under capture), after the trailing
+        barrier. Device-tier hits feed the store's reuse clock here."""
         if not pend:
             return
-        sims = np.asarray(jnp.stack([s for _, s, _ in pend]))
-        hits = np.asarray(jnp.stack([hh for _, _, hh in pend]))
-        for (li, _, _), s_row, h_row in zip(pend, sims, hits):
+        payload = np.asarray(jnp.stack(
+            [jnp.stack([p[1], p[2].astype(jnp.float32)]) for p in pend]))
+        slots = np.asarray(jnp.stack([p[3] for p in pend]))      # (L, B)
+        hits = payload[:, 1] > 0.5                               # (L, B)
+        for p, s_row, h_row, i_row in zip(pend, payload[:, 0], hits, slots):
+            li = p[0]
             st.n_layer_attempts += int(s_row.shape[0])
             nh = int(h_row.sum())
             st.n_hits += nh
             st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + nh
             st.sims.extend(s_row.tolist())
+        if self.store is not None and hits.any():
+            self.store.note_reuse(slots[hits])
+        if capture and len(pend[0]) > 4:
+            embs = np.asarray(jnp.stack([p[4] for p in pend]))
+            apms = np.asarray(jnp.stack([p[5] for p in pend]))
+            for l in range(embs.shape[0]):
+                miss = ~hits[l]
+                if miss.any():
+                    self._pending_admissions.append(
+                        (apms[l][miss], embs[l][miss]))
+
+    def _flush_admissions(self, st: MemoStats):
+        """Batch-boundary admission: push captured misses into the host
+        tier under the byte budget, then delta-sync the device tier. Never
+        on the per-layer hot path."""
+        if not self._pending_admissions:
+            return
+        pend, self._pending_admissions = self._pending_admissions, []
+        apms = np.concatenate([a for a, _ in pend], 0)
+        embs = np.concatenate([e for _, e in pend], 0)
+        if apms.shape[0]:
+            slots = self.store.admit(apms, embs)
+            st.n_admitted += int(slots.size)
+            self.store.sync()
+            self._flush_count += 1
+            if self.mc.recal_every:
+                self._recal_buf.append((apms, embs))
+                self._recal_buf = self._recal_buf[-16:]   # rolling window
+                if self._flush_count % self.mc.recal_every == 0:
+                    self._recalibrate_online()
+
+    def _recalibrate_online(self, n_pairs: int = 192, blend: float = 0.5):
+        """Refit sim ≈ a·dist + b from recently captured misses — each
+        carries its embedding AND its true APM, i.e. exactly the data
+        build-time ``_calibrate`` uses. Under drift the stale map
+        under-predicts similarity (the top-1 match is the right template,
+        but its predicted sim starves the threshold); refitting on
+        current-traffic pairs restores the threshold's true-similarity
+        meaning. Blended (EMA) for stability."""
+        apms = np.concatenate([a for a, _ in self._recal_buf], 0)
+        embs = np.concatenate([e for _, e in self._recal_buf], 0)
+        n = apms.shape[0]
+        if n < 8:
+            return
+        rng = np.random.default_rng(self._serve_batches)
+        ia, ib = rng.integers(0, n, n_pairs), rng.integers(0, n, n_pairs)
+        dist = np.linalg.norm(embs[ia] - embs[ib], axis=-1)
+        if np.std(dist) < 1e-9:
+            return
+        sim = np.asarray(jax.vmap(similarity_score)(
+            jnp.asarray(apms[ia], jnp.float32),
+            jnp.asarray(apms[ib], jnp.float32)))
+        a, b = np.polyfit(dist, sim, 1)
+        a0, b0 = self.sim_cal
+        self.sim_cal = (blend * float(a) + (1 - blend) * a0,
+                        blend * float(b) + (1 - blend) * b0)
 
     def _infer_encdec(self, batch, thr, active, st: MemoStats, use_memo):
         """Whisper path: memoized encoder, plain decoder."""
@@ -496,14 +672,16 @@ class MemoEngine:
         hd = bb.norm_apply(params["final_norm"], hd, cfg.norm)
         return hd @ params["embed"].T, st
 
-    def _lookup(self, lp, h, kind, thr, st: MemoStats, li):
+    def _lookup(self, lp, h, kind, thr, st: MemoStats, li,
+                positions=None, capture: bool = False):
         cfg = self.cfg
         t0 = time.perf_counter()
         x = bb.norm_apply(lp["norm1"], h, cfg.norm)
         emb = self._embed(x)
         jax.block_until_ready(emb)
         t1 = time.perf_counter()
-        dist, idx = self.index.search(np.asarray(emb), 1)
+        emb_np = np.asarray(emb)
+        dist, idx = self.store.lookup(emb_np, 1)
         sim_est = self.predict_sim(dist[:, 0])
         hit = sim_est > thr
         t2 = time.perf_counter()
@@ -516,9 +694,35 @@ class MemoEngine:
         st.n_hits += int(hit.sum())
         st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + int(hit.sum())
         st.sims.extend(sim_est.tolist())
+        if capture and positions is not None and (~hit).any():
+            apm_true = np.asarray(self._apm_probe(lp, x, kind, positions))
+            self._pending_admissions.append(
+                (apm_true[~hit], emb_np[~hit]))
         # keep the APM batch in the arena dtype (f16) and on the host —
         # the jitted consumer casts on-device (one transfer, no copies)
         return attn_mod.Memo(apm=apm, hit=hit, idx=idx[:, 0])
+
+    def _apm_probe(self, lp, x, kind, positions):
+        """The true APM of the normed input, computed with the exact miss
+        path semantics — the host-path analogue of the fused capture (only
+        the apm output is used, so the probe's APM·V + output projection
+        are dead-code-eliminated inside the jit)."""
+        key = ("apm_probe", kind, x.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            f_attn = (attn_mod.gqa_apply if kind == "attn"
+                      else attn_mod.mla_apply)
+            mask_kind = "causal" if cfg.causal else "bidir"
+
+            def run(lp, x, positions):
+                _, apm = f_attn(lp["mix"], x, cfg, positions=positions,
+                                mask_kind=mask_kind,
+                                window=cfg.sliding_window, return_apm=True)
+                return apm.astype(jnp.float16)
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, x, positions)
 
     # -- layer application --------------------------------------------------
     def _chan_tail(self, lp, h, li):
@@ -624,8 +828,7 @@ class MemoEngine:
         MemoConfig.interpret). Misses route through the kernel's
         clamped-gather, so they never touch the host arena."""
         cfg = self.cfg
-        if self.device_db is None or len(self.device_db) != len(self.db):
-            self._sync_device_tier()
+        self.store.sync()        # generation-counted: no-op unless stale
         hit_idx = jnp.asarray(memo.idx, jnp.int32)
         hit = jnp.asarray(memo.hit, jnp.int32)
         interpret = self._interpret

@@ -17,14 +17,39 @@ and to SPMD, so we provide matmul-shaped indexes (DESIGN.md §2):
 All three share the host ``search`` API returning (distances, indices);
 the engine converts distance → predicted similarity (the Siamese loss
 trains ‖e₁−e₂‖ ≈ 1 − SC).
+
+Index rows are slot-aligned with the `AttentionDB` arena so the MemoStore
+lifecycle can admit/evict without compaction: ``assign`` writes embeddings
+at explicit slots (growing with sentinel padding) and ``remove``
+tombstones slots by overwriting them with ``TOMBSTONE`` — a far-away
+finite value, so dead slots can never win a nearest-neighbor search yet
+the distance math stays NaN-free (±inf would poison the matmul form
+``‖q‖² − 2qDᵀ + ‖d‖²``).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# sentinel coordinate for dead/slack index rows: large enough that a dead
+# row's distance dwarfs any live one (dim·1e12 vs O(1) embeddings), small
+# enough that its square stays comfortably inside float32
+TOMBSTONE = 1.0e6
+
+
+def _grown(arr: Optional[np.ndarray], need: int, dim: int) -> np.ndarray:
+    """Geometric numpy growth with TOMBSTONE-filled slack."""
+    cap = 0 if arr is None else arr.shape[0]
+    if need <= cap:
+        return arr
+    new_cap = max(need, 2 * cap, 8)
+    out = np.full((new_cap, dim), TOMBSTONE, np.float32)
+    if arr is not None and cap:
+        out[:cap] = arr
+    return out
 
 
 class ExactIndex:
@@ -39,6 +64,21 @@ class ExactIndex:
         embs = np.asarray(embs, np.float32)
         self._embs = (embs if self._embs is None
                       else np.concatenate([self._embs, embs], 0))
+
+    def assign(self, slots: Sequence[int], embs: np.ndarray):
+        """Slot-aligned write (admission into recycled or fresh slots)."""
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size == 0:
+            return
+        self._embs = _grown(self._embs, int(slots.max()) + 1, self.dim)
+        self._embs[slots] = np.asarray(embs, np.float32)
+
+    def remove(self, slots: Sequence[int]):
+        """Tombstone slots: they keep their row (slot ids stay stable) but
+        can never be returned by a search against live entries."""
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size and self._embs is not None:
+            self._embs[slots] = TOMBSTONE
 
     def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
         """q: (B, dim) → (dists (B,k) L2, idx (B,k))."""
@@ -85,6 +125,22 @@ class IVFIndex:
         self._embs = (embs if self._embs is None
                       else np.concatenate([self._embs, embs], 0))
         self._built = False
+
+    def assign(self, slots: Sequence[int], embs: np.ndarray):
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size == 0:
+            return
+        self._embs = _grown(self._embs, int(slots.max()) + 1, self.dim)
+        self._embs[slots] = np.asarray(embs, np.float32)
+        self._built = False
+
+    def remove(self, slots: Sequence[int]):
+        """Tombstoned rows land in (or become) a far-away cluster the
+        coarse quantizer never probes for live queries."""
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size and self._embs is not None:
+            self._embs[slots] = TOMBSTONE
+            self._built = False
 
     def _build(self):
         x = self._embs
@@ -150,7 +206,8 @@ class DeviceIndex:
 
     def __init__(self, dim: int, *, use_kernel: Optional[bool] = None,
                  interpret: Optional[bool] = None, block_q: int = 128,
-                 block_n: int = 512, mesh=None, db_axis: str = "data"):
+                 block_n: int = 512, mesh=None, db_axis: str = "data",
+                 capacity: int = 0):
         self.dim = dim
         self.interpret = (jax.default_backend() == "cpu"
                           if interpret is None else interpret)
@@ -162,23 +219,74 @@ class DeviceIndex:
         self.mesh = mesh
         self.db_axis = db_axis
         self._table: Optional[jnp.ndarray] = None
+        self._n = 0
+        self.transfer_bytes = 0
+        if capacity:
+            self._ensure_capacity(capacity)
 
     def __len__(self):
+        return self._n
+
+    @property
+    def capacity(self) -> int:
         return 0 if self._table is None else self._table.shape[0]
 
     @property
     def table(self) -> jnp.ndarray:
+        """The full preallocated table (slack rows are TOMBSTONE, so they
+        lose every distance comparison): constant shape across delta
+        updates keeps downstream fused jits from recompiling."""
         return self._table
 
     # host-tier compat: numpy staging view (ExactIndex/IVFIndex expose this)
     @property
     def _embs(self):
-        return None if self._table is None else np.asarray(self._table)
+        return None if self._table is None else np.asarray(
+            self._table[: self._n])
+
+    def _ensure_capacity(self, need: int):
+        cap = self.capacity
+        if need <= cap:
+            return
+        new_cap = max(need, 2 * cap, 8)
+        table = jnp.full((new_cap, self.dim), TOMBSTONE, jnp.float32)
+        if self._n:
+            table = table.at[: self._n].set(self._table[: self._n])
+        self._table = table
+        self.transfer_bytes += self._n * self.dim * 4   # prefix re-upload
 
     def add(self, embs):
         embs = jnp.asarray(embs, jnp.float32)
-        self._table = (embs if self._table is None
-                       else jnp.concatenate([self._table, embs], 0))
+        b = embs.shape[0]
+        self._ensure_capacity(self._n + b)
+        self._table = self._table.at[self._n: self._n + b].set(embs)
+        self._n += b
+        self.transfer_bytes += int(embs.nbytes)
+
+    def assign(self, slots: Sequence[int], embs):
+        """Slot-aligned delta write (device-side ``.at[slots].set``): the
+        MemoStore sync path for admissions/overwrites — only the changed
+        rows cross the host→device link (padded to a power-of-2 row count
+        so XLA compiles log2(N) scatter shapes, not one per delta size)."""
+        from repro.core.database import pad_delta_pow2
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size == 0:
+            return
+        n_max = int(slots.max())
+        self._ensure_capacity(n_max + 1)
+        slots, values = pad_delta_pow2(slots, np.asarray(embs, np.float32))
+        values = jnp.asarray(values)
+        self._table = self._table.at[jnp.asarray(slots)].set(values)
+        self._n = max(self._n, n_max + 1)
+        self.transfer_bytes += int(values.nbytes + slots.size * 4)
+
+    def remove(self, slots: Sequence[int]):
+        from repro.core.database import pad_delta_pow2
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size and self._table is not None:
+            slots, _ = pad_delta_pow2(slots)
+            self._table = self._table.at[jnp.asarray(slots)].set(TOMBSTONE)
+            self.transfer_bytes += int(slots.size * 4)
 
     def search_device(self, q, k: int = 1, *, table: Optional[jnp.ndarray]
                       = None) -> Tuple[jnp.ndarray, jnp.ndarray]:

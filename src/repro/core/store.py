@@ -1,0 +1,284 @@
+"""MemoStore — the lifecycle-managed two-tier memo subsystem (DESIGN.md §2.5).
+
+AttMemo's database is built offline and frozen; under drifting serving
+traffic the hit rate decays unless the store adapts online. MemoStore
+owns ALL memoization state — the host tier (`AttentionDB` arena + a
+slot-aligned host index) and the device tier (`DeviceDB` + `DeviceIndex`)
+— behind one lifecycle API:
+
+* ``lookup(embs, k)``   — host-tier search (the device tier is searched
+                          inside the engine's fused jit via
+                          ``device_index.search_device``).
+* ``admit(apms, embs)`` — online admission under a byte budget: misses
+                          captured during serving become entries; slots
+                          are recycled from the arena free-list (no
+                          compaction, so slot ids are stable and the
+                          device tier can be patched in place).
+* ``evict(n)``          — reuse-frequency/recency CLOCK over the arena's
+                          ``reuse_counts``: hot entries get their counter
+                          halved (a decaying second chance), cold entries
+                          are released and their index rows tombstoned.
+* ``sync()``            — generation-counted incremental device sync:
+                          a no-op when nothing changed, a ``.at[slots]``
+                          delta of exactly the dirty slots when the
+                          preallocated device slack can hold them, and a
+                          full re-materialization (with fresh slack) only
+                          when the arena outgrew the device allocation.
+
+The engine calls ``sync`` once per batch boundary; because deltas are
+host→device pushes of staged numpy rows, the fast path's
+zero-per-layer-host-sync invariant (tests/test_fastpath.py) is untouched.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.database import AttentionDB, DeviceDB
+from repro.core.index import (
+    TOMBSTONE, DeviceIndex, ExactIndex, IVFIndex)
+
+
+@dataclass
+class StoreStats:
+    """Lifecycle + transfer accounting (the delta-vs-full receipts)."""
+    n_admitted: int = 0
+    n_evicted: int = 0
+    n_noop_syncs: int = 0
+    n_delta_syncs: int = 0
+    n_full_syncs: int = 0
+    bytes_delta: int = 0          # bytes moved by delta syncs
+    bytes_full: int = 0           # bytes moved by full re-materializations
+
+    @property
+    def bytes_total(self) -> int:
+        return self.bytes_delta + self.bytes_full
+
+
+class MemoStore:
+    """Both memo tiers behind one lifecycle (lookup/admit/evict/sync)."""
+
+    def __init__(self, apm_shape: Tuple[int, int, int], embed_dim: int, *,
+                 index_kind: str = "exact", budget_bytes: Optional[int] = None,
+                 capacity: int = 64, interpret: Optional[bool] = None,
+                 device_slack: float = 1.0, n_lists: Optional[int] = None,
+                 mesh=None):
+        self.apm_shape = tuple(apm_shape)
+        self.embed_dim = embed_dim
+        self.index_kind = index_kind
+        self.budget_bytes = budget_bytes
+        self.device_slack = device_slack
+        self._interpret = interpret
+        self._mesh = mesh
+        self.db = AttentionDB(self.apm_shape, capacity=capacity)
+        if index_kind == "ivf":
+            self.index = IVFIndex(embed_dim, n_lists=n_lists or 8)
+        elif index_kind == "device":
+            self.index = DeviceIndex(embed_dim, interpret=interpret,
+                                     mesh=mesh)
+        else:
+            self.index = ExactIndex(embed_dim)
+        self.sim_cal: Tuple[float, float] = (-1.0, 1.0)
+        # slot-aligned host staging of embeddings: the uniform source for
+        # device-index deltas regardless of the host index kind
+        self._embs_host = np.full((capacity, embed_dim), TOMBSTONE,
+                                  np.float32)
+        # lifecycle state
+        self.generation = 0           # bumped on every host-tier mutation
+        self.device_generation = -1   # generation the device tier reflects
+        self._dirty: set = set()      # host slots changed since last sync
+        self._synced_n = 0            # arena prefix length at last sync
+        self._clock_hand = 0
+        self.stats = StoreStats()
+        # device tier (materialized by the first sync)
+        self.device_db: Optional[DeviceDB] = None
+        self.device_index: Optional[DeviceIndex] = None
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def entry_nbytes(self) -> int:
+        return self.db.entry_nbytes + self.embed_dim * 4
+
+    @property
+    def live_count(self) -> int:
+        return self.db.live_count
+
+    @property
+    def budget_entries(self) -> Optional[int]:
+        if self.budget_bytes is None:
+            return None
+        return max(1, int(self.budget_bytes) // self.entry_nbytes)
+
+    @property
+    def device_stale(self) -> bool:
+        return (self.device_db is None
+                or self.device_generation != self.generation
+                or len(self.db) > self._synced_n)
+
+    def __len__(self):
+        return len(self.db)
+
+    # --------------------------------------------------------------- lookup
+    def lookup(self, embs, k: int = 1):
+        """Host-tier search: (L2 dists (B,k), slots (B,k)). Tombstoned
+        (evicted) slots can never be returned against any live entry."""
+        return self.index.search(np.asarray(embs, np.float32), k)
+
+    def note_reuse(self, slots: Sequence[int]) -> None:
+        """Record device-tier hits (drained once per batch) so the
+        eviction clock sees the same reuse signal as host-tier ``get``."""
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size:
+            np.add.at(self.db.reuse_counts, slots, 1)
+
+    # --------------------------------------------------------------- admit
+    def _ensure_emb_capacity(self, need: int) -> None:
+        cap = self._embs_host.shape[0]
+        if need <= cap:
+            return
+        new = np.full((max(need, 2 * cap), self.embed_dim), TOMBSTONE,
+                      np.float32)
+        new[:cap] = self._embs_host
+        self._embs_host = new
+
+    def admit(self, apms, embs) -> np.ndarray:
+        """Online admission under the byte budget. apms: (B, H, L, L),
+        embs: (B, embed_dim). Returns the assigned arena slots (recycled
+        free slots first, then fresh appends). When the budget would be
+        exceeded the CLOCK evicts cold entries first; if the batch alone
+        exceeds the whole budget only its newest entries are kept."""
+        apms = np.asarray(apms, self.db.dtype)
+        embs = np.asarray(embs, np.float32)
+        n_new = apms.shape[0]
+        if n_new == 0:
+            return np.zeros(0, np.int64)
+        cap = self.budget_entries
+        if cap is not None:
+            if n_new > cap:
+                apms, embs = apms[-cap:], embs[-cap:]
+                n_new = cap
+            over = self.live_count + n_new - cap
+            if over > 0:
+                self.evict(over)
+        slots = self.db.put(apms)
+        self._ensure_emb_capacity(int(slots.max()) + 1)
+        self._embs_host[slots] = embs
+        # when the host-tier index IS the device table, sync() lands the
+        # rows (one delta, counted once); otherwise update the host index
+        # now so lookups between admit and sync see the new entries
+        if self.index is not self.device_index:
+            self.index.assign(slots, embs)
+        self._dirty.update(int(s) for s in slots)
+        self.generation += 1
+        self.stats.n_admitted += n_new
+        return slots
+
+    # --------------------------------------------------------------- evict
+    def evict(self, n: int = 1) -> List[int]:
+        """Reuse-aware CLOCK eviction: sweep the arena; entries with a
+        nonzero reuse counter survive the pass with the counter halved
+        (frequency-decaying second chance), zero-count entries are
+        evicted. If everything is hot after two sweeps, the coldest live
+        entries go. Evicted slots are released to the arena free-list and
+        tombstoned in the index, so a hit on them is impossible."""
+        db = self.db
+        evicted: List[int] = []
+        if n <= 0 or db._n == 0 or db.live_count == 0:
+            return evicted
+        n = min(n, db.live_count)
+        counts = db.reuse_counts
+        hand = self._clock_hand % db._n
+        scanned, limit = 0, 2 * db._n
+        while len(evicted) < n and scanned < limit:
+            slot, hand = hand, (hand + 1) % db._n
+            scanned += 1
+            if not db._live[slot]:
+                continue
+            if counts[slot] > 0:
+                counts[slot] //= 2
+            else:
+                evicted.append(slot)
+        self._clock_hand = hand
+        if len(evicted) < n:      # all hot: fall back to coldest-first
+            live = np.flatnonzero(db.live_mask)
+            live = live[~np.isin(live, evicted)]
+            order = live[np.argsort(counts[live], kind="stable")]
+            evicted.extend(int(s) for s in order[: n - len(evicted)])
+        db.release(evicted)
+        self.index.remove(evicted)
+        self._ensure_emb_capacity(max(evicted) + 1)
+        self._embs_host[evicted] = TOMBSTONE
+        self._dirty.update(evicted)
+        self.generation += 1
+        self.stats.n_evicted += len(evicted)
+        return evicted
+
+    # ---------------------------------------------------------------- sync
+    def _absorb_external_growth(self) -> None:
+        """Backstop for out-of-band mutation (code that still calls
+        ``db.add``/``index.add`` directly): any arena prefix growth since
+        the last sync is treated as dirty, and its embeddings are mirrored
+        into the slot-aligned host staging from the index."""
+        lo, hi = self._synced_n, len(self.db)
+        if hi <= lo:
+            return
+        ext = range(lo, hi)
+        fresh = [s for s in ext if s not in self._dirty]
+        if fresh:
+            rows = getattr(self.index, "_embs", None)
+            self._ensure_emb_capacity(hi)
+            for s in fresh:
+                if rows is not None and s < rows.shape[0]:
+                    self._embs_host[s] = rows[s]
+            self._dirty.update(fresh)
+            self.generation += 1
+
+    def sync(self, force_full: bool = False) -> Dict[str, object]:
+        """Incremental device sync. Generation-counted: a clean store is a
+        cheap host-side no-op; dirty slots that fit the device slack move
+        as ONE scatter each for APMs and embeddings; only arena growth
+        past the device allocation (or ``force_full``) re-materializes —
+        with fresh slack sized by ``device_slack`` so subsequent
+        admissions go back to deltas."""
+        self._absorb_external_growth()
+        n = len(self.db)
+        if (self.device_db is not None and not force_full
+                and not self._dirty):
+            self.stats.n_noop_syncs += 1
+            return {"kind": "noop", "bytes": 0}
+        need_full = (force_full or self.device_db is None
+                     or n > self.device_db.capacity
+                     or self.device_index is None
+                     or n > self.device_index.capacity)
+        if need_full:
+            cap = n + max(8, int(n * self.device_slack))
+            self.device_db = DeviceDB.from_host(self.db, capacity=cap)
+            di = DeviceIndex(self.embed_dim, interpret=self._interpret,
+                             capacity=cap, mesh=self._mesh)
+            di.add(self._embs_host[:n])
+            if isinstance(self.index, DeviceIndex):
+                # the device table IS the host-tier index: swap in the
+                # re-materialized one so both roles stay one object
+                self.index = di
+            self.device_index = di
+            shipped = (self.device_db.transfer_bytes
+                       + self.device_index.transfer_bytes)
+            self.stats.n_full_syncs += 1
+            self.stats.bytes_full += shipped
+            kind = "full"
+        else:
+            slots = np.asarray(sorted(self._dirty), np.int64)
+            slots = slots[slots < n]
+            shipped = self.device_db.update(slots, self.db._arena[slots])
+            b0 = self.device_index.transfer_bytes
+            self.device_index.assign(slots, self._embs_host[slots])
+            shipped += self.device_index.transfer_bytes - b0
+            self.stats.n_delta_syncs += 1
+            self.stats.bytes_delta += shipped
+            kind = "delta"
+        self._dirty.clear()
+        self._synced_n = n
+        self.device_generation = self.generation
+        return {"kind": kind, "bytes": shipped}

@@ -2,10 +2,15 @@
 
     python -m repro.launch.serve --arch bert_base --reduced --requests 64
     python -m repro.launch.serve --arch gpt2_small --reduced --no-memo
+    python -m repro.launch.serve --arch bert_base --reduced --online
 
-Loads (or trains briefly) a reduced model, builds the attention/index
-databases from a calibration stream, then serves batches and reports
-latency with/without memoization plus the memo-rate breakdown.
+``--online`` demonstrates the MemoStore lifecycle (DESIGN.md §2.5) under
+drifting traffic: the request stream switches template corpus mid-run
+(a new phase seed = new clause skeletons), which collapses the hit rate
+of a frozen store; with online admission enabled, captured misses are
+admitted under the byte budget and delta-synced to the device tier, and
+the hit rate recovers. Both passes (frozen first — it does not mutate
+the store — then adaptive) run the same phase schedule for an A/B.
 """
 from __future__ import annotations
 
@@ -17,10 +22,93 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced
-from repro.core.engine import LEVELS, MemoConfig, MemoEngine
+from repro.core.engine import LEVELS, MemoConfig, MemoEngine, MemoStats
 from repro.data import TemplateCorpus
 from repro.models import build_model
 from repro.train.checkpoint import load_checkpoint
+
+
+def _run_phase(eng, corpus, n_batches, batch_size, st):
+    """Serve one phase; returns (per-batch hit rates, ms/batch list)."""
+    rates, times = [], []
+    for _ in range(n_batches):
+        toks = jnp.asarray(corpus.sample(batch_size)[0])
+        h0, a0 = st.n_hits, st.n_layer_attempts
+        t0 = time.perf_counter()
+        logits, st = eng.infer({"tokens": toks}, stats=st)
+        jax.block_until_ready(logits)
+        times.append((time.perf_counter() - t0) * 1e3)
+        rates.append((st.n_hits - h0) / max(1, st.n_layer_attempts - a0))
+    return rates, times, st
+
+
+def _serve_online(eng, corpus, args):
+    """Drift-phase schedule: phase 0 = the calibration distribution, later
+    phases = drifted corpora. Frozen pass first (store untouched), then
+    the adaptive pass with admission + delta sync."""
+    mk = lambda seed: TemplateCorpus(vocab=eng.cfg.vocab, seq_len=args.seq,
+                                     seed=seed, n_templates=corpus.n_templates,
+                                     slot_fraction=corpus.slot_fraction)
+    phases = [corpus] + [mk(100 + 17 * i) for i in range(1, args.phases)]
+    results = {}
+    counts0 = eng.db.reuse_counts.copy()
+    for label, admit in (("frozen", False), ("adaptive", True)):
+        eng.mc.admit = admit
+        # identical starting state for both passes: the frozen pass does
+        # not admit/evict, but serving still warms reuse_counts (the
+        # eviction clock's input) — restore them
+        eng.db.reuse_counts[:] = counts0
+        st = MemoStats()
+        per_phase = []
+        for pi, ph in enumerate(phases):
+            # fresh sampling stream per pass so both passes see the same
+            # requests: re-seed the phase corpus RNG
+            ph._rng = np.random.default_rng(1000 + pi)
+            rates, times, st = _run_phase(eng, ph, args.phase_batches,
+                                          args.batch, st)
+            per_phase.append((rates, times))
+            tail = np.mean(rates[len(rates) // 2:])
+            print(f"[online] {label:8s} phase {pi}: hit-rate "
+                  f"{' '.join(f'{r:.2f}' for r in rates)}  "
+                  f"(steady {tail:.2f})  {np.median(times):6.1f} ms/batch")
+        results[label] = (per_phase, st)
+    eng.mc.admit = False
+
+    froz = results["frozen"][0][-1][0]
+    adap = results["adaptive"][0][-1][0]
+    froz_ss = float(np.mean(froz[len(froz) // 2:]))
+    adap_ss = float(np.mean(adap[len(adap) // 2:]))
+    s = eng.store.stats
+    print(f"[online] post-drift steady-state hit rate: "
+          f"adaptive {adap_ss:.2f} vs frozen {froz_ss:.2f} "
+          f"({'∞' if froz_ss == 0 else f'{adap_ss / froz_ss:.1f}'}× recovery)")
+    print(f"[online] store: {s.n_admitted} admitted, {s.n_evicted} evicted, "
+          f"live {eng.store.live_count} "
+          f"({eng.store.live_count * eng.store.entry_nbytes / 1e6:.1f} MB"
+          + (f" / budget {eng.mc.budget_mb:.0f} MB" if eng.mc.budget_mb
+             else "") + ")")
+    print(f"[online] sync: {s.n_delta_syncs} delta ({s.bytes_delta/1e6:.2f} "
+          f"MB) + {s.n_full_syncs} full ({s.bytes_full/1e6:.2f} MB) + "
+          f"{s.n_noop_syncs} no-op; full-resync-per-batch would have moved "
+          f"{(s.n_delta_syncs * len(eng.db) * eng.store.entry_nbytes)/1e6:.1f}"
+          " MB")
+    # logits parity vs the select reference on the final drifted batch
+    # (admission paused so the comparison doesn't mutate the store), plus
+    # prediction agreement vs the UNmemoized model — the quality check
+    # that recovered hits substitute faithfully
+    toks = jnp.asarray(phases[-1].sample(args.batch)[0])
+    out_fast, _ = eng.infer({"tokens": toks})
+    out_plain, _ = eng.infer({"tokens": toks}, use_memo=False)
+    mode = eng.mc.mode
+    eng.mc.mode = "select"
+    out_sel, _ = eng.infer({"tokens": toks})
+    eng.mc.mode = mode
+    ok = np.allclose(np.asarray(out_fast), np.asarray(out_sel),
+                     rtol=2e-3, atol=2e-3)
+    agree = float((np.argmax(np.asarray(out_fast), -1)
+                   == np.argmax(np.asarray(out_plain), -1)).mean())
+    print(f"[online] logits match select: {ok}; "
+          f"prediction agreement vs no-memo: {agree:.2f}")
 
 
 def main():
@@ -44,27 +132,77 @@ def main():
     ap.add_argument("--calib-batches", type=int, default=6)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--selective", action="store_true")
+    ap.add_argument("--online", action="store_true",
+                    help="drift-phase schedule with online admission "
+                         "(MemoStore lifecycle A/B: frozen vs adaptive)")
+    ap.add_argument("--phases", type=int, default=2,
+                    help="--online: number of corpus phases (first = "
+                         "calibration distribution)")
+    ap.add_argument("--phase-batches", type=int, default=8,
+                    help="--online: batches served per phase")
+    ap.add_argument("--budget-mb", type=float, default=256.0,
+                    help="--online: store byte budget for admission")
+    ap.add_argument("--admit-every", type=int, default=1,
+                    help="--online: capture misses every Nth batch")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
+    if args.online and not cfg.n_classes:
+        cfg = cfg.replace(n_classes=4)
     model = build_model(cfg, layer_loop="unroll")
     if args.ckpt:
         params, _, _ = load_checkpoint(args.ckpt)
     else:
         params = model.init(jax.random.PRNGKey(0))
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=args.seq, seed=1)
+    if args.online and not args.ckpt and cfg.n_classes:
+        # a briefly-trained classifier (the paper's BERT/SST-2 analogue):
+        # random-init hiddens embed poorly, which understates adaptation
+        from repro.optim import adamw_init, adamw_update
+        opt = adamw_init(params)
+
+        @jax.jit
+        def _step(p, o, b):
+            loss, g = jax.value_and_grad(model.classify_loss)(p, b)
+            p, o = adamw_update(p, g, o, lr=3e-4)
+            return loss, p, o
+        for b in corpus.batches(50, 32):
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            _, params, opt = _step(params, opt, b)
+        print("[online] trained classifier head (50 steps)")
 
     thr = args.threshold if args.threshold is not None else LEVELS.get(
         args.level, 0.97)
     eng = MemoEngine(model, params, MemoConfig(
         threshold=thr, mode=args.mode, index_kind=args.index,
-        device_fast_path=False if args.no_fast_path else None))
+        device_fast_path=False if args.no_fast_path else None,
+        budget_mb=args.budget_mb if args.online else None,
+        admit_every=args.admit_every,
+        recal_every=2 if args.online else None))
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     t0 = time.perf_counter()
     eng.build(jax.random.PRNGKey(1), calib)
     print(f"[serve] db: {len(eng.db)} entries, "
           f"{eng.db.nbytes/1e6:.1f} MB, build {time.perf_counter()-t0:.1f}s")
+
+    if args.online:
+        if args.threshold is None:
+            # paper Table 2 levels are per-model: autotune from a FRESH
+            # sample of the calibration distribution (percentiles of
+            # predicted top-1 similarity) so phase 0 starts at a
+            # meaningful hit rate — querying with the calibration batches
+            # themselves would give degenerate zero-distance percentiles
+            levels = eng.suggest_levels(
+                [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}])
+            eng.mc.threshold = levels.get(args.level, thr)
+            print(f"[online] autotuned threshold ({args.level}): "
+                  f"{eng.mc.threshold:.3f}")
+        if args.mode == "select":
+            print("[online] note: select mode is the host reference path; "
+                  "admission still works but the fast path is bucket/kernel")
+        _serve_online(eng, corpus, args)
+        return
 
     active = None
     if args.selective:
@@ -73,7 +211,6 @@ def main():
         print("[serve] selective memo active layers:", active)
 
     lat_memo, lat_plain = [], []
-    from repro.core.engine import MemoStats
     st = MemoStats()
     n_batches = max(1, args.requests // args.batch)
     for i in range(n_batches):

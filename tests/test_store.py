@@ -1,0 +1,464 @@
+"""MemoStore lifecycle (ISSUE 2 / DESIGN.md §2.5).
+
+Covers: admission + budget eviction invariants (property-style via the
+hypothesis shim), arena slot recycling without aliasing, index↔DB
+agreement under interleaved admit/evict/sync, impossibility of hits on
+evicted entries, generation-counted no-op sync, delta-sync transfer
+accounting, the bounded MemoStats sim reservoir, miss capture on the
+device fast path (still zero per-layer host syncs), and online
+adaptation (drift → hit-rate collapse → recovery ≥ 2× the frozen store
+with logits still matching select).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st_h
+
+import repro.core.engine as engine_mod
+import repro.core.store as store_mod
+from repro.core.engine import MemoStats, SimReservoir
+from repro.core.index import TOMBSTONE
+from repro.core.store import MemoStore
+
+APM_SHAPE = (2, 4, 4)
+EMB_DIM = 8
+
+
+def _entries(rng, n):
+    """n unique, well-separated entries: embedding i sits at 10·i on the
+    first axis so each entry's nearest neighbor is unambiguous."""
+    apms = rng.random((n, *APM_SHAPE)).astype(np.float16)
+    embs = rng.normal(0, 0.01, (n, EMB_DIM)).astype(np.float32)
+    embs[:, 0] += 10.0 * np.arange(1, n + 1)
+    return apms, embs
+
+
+def _mk_store(budget_entries=None):
+    budget = (None if budget_entries is None
+              else budget_entries * (MemoStore(
+                  APM_SHAPE, EMB_DIM).entry_nbytes))
+    return MemoStore(APM_SHAPE, EMB_DIM, capacity=4, budget_bytes=budget)
+
+
+# ----------------------------------------------------------- admission
+
+def test_admit_assigns_slots_and_lookup_finds_them():
+    rng = np.random.default_rng(0)
+    s = _mk_store()
+    apms, embs = _entries(rng, 5)
+    slots = s.admit(apms, embs)
+    assert slots.shape == (5,)
+    dist, idx = s.lookup(embs, 1)
+    np.testing.assert_array_equal(idx[:, 0], slots)
+    # self-distance ~0 up to the matmul-form f32 cancellation (entries
+    # are 10.0 apart, so the nearest-id assertion above is the real check)
+    assert np.all(dist[:, 0] < 0.1)
+    np.testing.assert_array_equal(
+        s.db.get(slots, count_reuse=False), apms)
+
+
+def test_budget_eviction_keeps_live_within_budget():
+    rng = np.random.default_rng(1)
+    s = _mk_store(budget_entries=6)
+    for _ in range(5):
+        apms, embs = _entries(rng, 3)
+        s.admit(apms, embs)
+    assert s.live_count <= 6
+    assert s.stats.n_evicted >= 15 - 6
+    # arena did not balloon past the budget by much (recycling, not append)
+    assert len(s.db) <= 6 + 3
+
+
+def test_admitting_batch_larger_than_budget_keeps_newest():
+    rng = np.random.default_rng(2)
+    s = _mk_store(budget_entries=4)
+    apms, embs = _entries(rng, 10)
+    slots = s.admit(apms, embs)
+    assert slots.shape == (4,)
+    assert s.live_count == 4
+    np.testing.assert_array_equal(
+        s.db.get(slots, count_reuse=False), apms[-4:])
+
+
+# ------------------------------------------------------------- eviction
+
+def test_evicted_entry_can_never_hit():
+    rng = np.random.default_rng(3)
+    s = _mk_store()
+    apms, embs = _entries(rng, 6)
+    s.admit(apms, embs)
+    s.evict(2)  # reuse counts all zero → clock evicts immediately
+    evicted = [sl for sl in range(len(s.db)) if not s.db._live[sl]]
+    assert len(evicted) == 2
+    for ev in evicted:
+        # query with the EXACT embedding of the evicted entry: the
+        # tombstone must lose to every live entry
+        dist, idx = s.lookup(embs[ev][None], 1)
+        assert int(idx[0, 0]) != ev
+
+
+def test_reuse_clock_protects_hot_entries():
+    rng = np.random.default_rng(4)
+    s = _mk_store()
+    apms, embs = _entries(rng, 4)
+    slots = s.admit(apms, embs)
+    s.note_reuse(np.repeat(slots[1], 5))      # slot 1 is hot
+    ev = s.evict(3)
+    assert int(slots[1]) not in ev            # survived the sweep
+    assert s.db._live[int(slots[1])]
+
+
+def test_slot_recycling_never_aliases_live_entries():
+    rng = np.random.default_rng(5)
+    s = _mk_store()
+    apms, embs = _entries(rng, 4)
+    slots = s.admit(apms, embs)
+    ev = s.evict(2)
+    live = [int(x) for x in slots if int(x) not in ev]
+    apms2, embs2 = _entries(rng, 2)
+    embs2[:, 0] += 1000.0                      # distinct neighborhood
+    slots2 = s.admit(apms2, embs2)
+    assert set(int(x) for x in slots2) == set(ev)   # recycled, not appended
+    # live entries still readable and findable, not clobbered
+    for sl in live:
+        np.testing.assert_array_equal(
+            s.db.get([sl], count_reuse=False)[0],
+            apms[list(slots).index(sl)])
+        _, idx = s.lookup(s._embs_host[sl][None], 1)
+        assert int(idx[0, 0]) == sl
+    # recycled slots serve the NEW entries
+    dist, idx = s.lookup(embs2, 1)
+    np.testing.assert_array_equal(idx[:, 0], slots2)
+    np.testing.assert_array_equal(
+        s.db.get(slots2, count_reuse=False), apms2)
+
+
+# ------------------------------------------- interleaved property test
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st_h.integers(0, 10 ** 6))
+def test_interleaved_admit_evict_sync_invariants(seed):
+    """Random interleavings of admit/evict/note_reuse/sync preserve:
+    index↔DB slot agreement for every live entry, no hits on evicted
+    entries, and device-tier rows matching the host tier after sync."""
+    rng = np.random.default_rng(seed)
+    s = MemoStore(APM_SHAPE, EMB_DIM, capacity=4,
+                  budget_bytes=12 * MemoStore(APM_SHAPE,
+                                              EMB_DIM).entry_nbytes)
+    ledger = {}                                    # slot -> (apm, emb)
+    serial = 0
+    for _ in range(12):
+        op = rng.choice(["admit", "evict", "reuse", "sync"])
+        if op == "admit":
+            k = int(rng.integers(1, 4))
+            apms = rng.random((k, *APM_SHAPE)).astype(np.float16)
+            embs = rng.normal(0, 0.01, (k, EMB_DIM)).astype(np.float32)
+            embs[:, 0] += 10.0 * (serial + 1 + np.arange(k))
+            serial += k
+            slots = s.admit(apms, embs)
+            dead = [sl for sl in ledger if not s.db._live[sl]]
+            for sl in dead:
+                del ledger[sl]
+            for j, sl in enumerate(slots):
+                ledger[int(sl)] = (apms[j], embs[j])
+        elif op == "evict" and s.live_count > 1:
+            for sl in s.evict(int(rng.integers(1, 3))):
+                ledger.pop(int(sl), None)
+        elif op == "reuse" and ledger:
+            sl = int(rng.choice(list(ledger)))
+            s.note_reuse([sl])
+        else:
+            s.sync()
+        # invariant: every live ledger entry is its own nearest neighbor
+        for sl, (apm, emb) in ledger.items():
+            dist, idx = s.lookup(emb[None], 1)
+            assert int(idx[0, 0]) == sl, f"live slot {sl} lost in index"
+            np.testing.assert_array_equal(
+                s.db.get([sl], count_reuse=False)[0], apm)
+        # invariant: dead slots are tombstoned in the index
+        dead = set(range(len(s.db))) - set(ledger)
+        for sl in dead:
+            if sl < len(s.db) and not s.db._live[sl]:
+                assert s._embs_host[sl, 0] == TOMBSTONE
+    s.sync()
+    # device tier mirrors the host tier for every live slot
+    dev_apms = np.asarray(s.device_db.apms)
+    dev_tab = np.asarray(s.device_index.table)
+    for sl, (apm, emb) in ledger.items():
+        np.testing.assert_array_equal(dev_apms[sl], apm)
+        np.testing.assert_allclose(dev_tab[sl], emb, rtol=1e-6)
+
+
+# ------------------------------------------------------------- syncing
+
+def test_sync_is_noop_when_generation_unchanged():
+    """Regression for the pre-store behavior: _sync_device_tier rebuilt a
+    fresh DeviceIndex (re-uploading the whole table) on EVERY resync even
+    when nothing changed. The generation counter makes it a no-op."""
+    rng = np.random.default_rng(7)
+    s = _mk_store()
+    apms, embs = _entries(rng, 6)
+    s.admit(apms, embs)
+    r = s.sync()
+    assert r["kind"] == "full"          # first materialization
+    db_obj, idx_obj = s.device_db, s.device_index
+    total0 = s.stats.bytes_total
+    for _ in range(3):
+        r = s.sync()
+        assert r["kind"] == "noop" and r["bytes"] == 0
+    assert s.device_db is db_obj        # same arrays, nothing re-uploaded
+    assert s.device_index is idx_obj
+    assert s.stats.bytes_total == total0
+    assert s.stats.n_noop_syncs == 3
+
+
+def test_delta_sync_moves_only_changed_slots():
+    """Transfer-size accounting: after the initial materialization, an
+    admission of k entries ships O(k) bytes (k rounded up to a power of
+    two), NOT the arena."""
+    rng = np.random.default_rng(8)
+    s = _mk_store()
+    apms, embs = _entries(rng, 32)
+    s.admit(apms, embs)
+    s.sync()
+    full_bytes = s.stats.bytes_full
+    assert full_bytes > 0
+    apms2, embs2 = _entries(rng, 3)
+    embs2[:, 0] += 1000.0
+    s.admit(apms2, embs2)
+    r = s.sync()
+    assert r["kind"] == "delta"
+    # 3 dirty slots pad to 4 scatter rows; + slot ids
+    per_entry = s.entry_nbytes
+    assert r["bytes"] <= 4 * (per_entry + 8)
+    assert r["bytes"] < full_bytes / 4
+    assert s.stats.bytes_delta == r["bytes"]
+    # the device rows actually landed
+    np.testing.assert_array_equal(
+        np.asarray(s.device_db.apms)[len(s.db) - 3: len(s.db)], apms2)
+
+
+def test_full_resync_when_arena_outgrows_device_slack():
+    rng = np.random.default_rng(9)
+    s = MemoStore(APM_SHAPE, EMB_DIM, capacity=4, device_slack=0.25)
+    apms, embs = _entries(rng, 8)
+    s.admit(apms, embs)
+    s.sync()
+    cap0 = s.device_db.capacity
+    apms2, embs2 = _entries(rng, cap0)     # guaranteed past the slack
+    embs2[:, 0] += 1000.0
+    s.admit(apms2, embs2)
+    r = s.sync()
+    assert r["kind"] == "full"
+    assert s.device_db.capacity > cap0
+    assert len(s.device_db) == len(s.db)
+
+
+def test_out_of_band_db_growth_is_absorbed():
+    """Backstop: code that still calls db.add/index.add directly (not via
+    admit) is detected by the prefix-length check and delta-synced."""
+    rng = np.random.default_rng(10)
+    s = _mk_store()
+    apms, embs = _entries(rng, 6)
+    s.admit(apms, embs)
+    s.sync()
+    extra_apm = rng.random((2, *APM_SHAPE)).astype(np.float16)
+    extra_emb = rng.normal(0, 0.01, (2, EMB_DIM)).astype(np.float32)
+    extra_emb[:, 0] += 5000.0
+    s.db.add(extra_apm)
+    s.index.add(extra_emb)
+    r = s.sync()
+    assert r["kind"] == "delta"
+    assert len(s.device_db) == 8
+    assert len(s.device_index) == 8
+    np.testing.assert_array_equal(np.asarray(s.device_db.apms)[6:8],
+                                  extra_apm)
+
+
+# ------------------------------------------------------- sim reservoir
+
+def test_sim_reservoir_bounded_with_accurate_percentiles():
+    r = SimReservoir(cap=512, seed=0)
+    vals = np.random.default_rng(0).uniform(0, 1, 20_000)
+    r.extend(vals.tolist())
+    assert len(r) == 512                     # bounded
+    assert r.seen == 20_000                  # but the stream was counted
+    for q in (25, 50, 75):
+        assert abs(r.percentile(q) - np.percentile(vals, q)) < 0.06
+    # MemoStats default uses the reservoir
+    st = MemoStats()
+    st.sims.extend(range(10_000))
+    assert len(st.sims) <= st.sims.cap
+
+
+def test_sim_reservoir_small_streams_are_exact():
+    r = SimReservoir(cap=64)
+    r.extend([0.1, 0.5, 0.9])
+    assert sorted(r) == [0.1, 0.5, 0.9]
+    assert r.percentile(50) == 0.5
+
+
+# ----------------------------------------------- engine-level lifecycle
+
+@pytest.fixture(scope="module")
+def online_engine():
+    from repro.configs import get_reduced
+    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.data import TemplateCorpus
+    from repro.models import build_model
+
+    cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=2,
+                                           d_model=128, d_ff=256, n_heads=4)
+    m = build_model(cfg, layer_loop="unroll")
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=32, n_templates=6,
+                            slot_fraction=0.2)
+    eng = MemoEngine(m, params, MemoConfig(threshold=0.6, embed_steps=40,
+                                           mode="bucket", admit=True,
+                                           budget_mb=64.0))
+    batches = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
+               for _ in range(3)]
+    eng.build(jax.random.PRNGKey(1), batches)
+    return eng, corpus
+
+
+class _Counting:
+    def __init__(self, real, counted):
+        self._real = real
+        self.counts = {name: 0 for name in counted}
+        for name in counted:
+            setattr(self, name, self._wrap(name))
+
+    def _wrap(self, name):
+        real_fn = getattr(self._real, name)
+
+        def fn(*a, **k):
+            self.counts[name] += 1
+            return real_fn(*a, **k)
+        return fn
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+def _drift(cfg, seed):
+    from repro.data import TemplateCorpus
+    return TemplateCorpus(vocab=cfg.vocab, seq_len=32, n_templates=6,
+                          slot_fraction=0.2, seed=seed)
+
+
+def test_fast_path_zero_sync_with_miss_capture(online_engine, monkeypatch):
+    """The acceptance invariant: miss capture (APM + embedding staging)
+    must NOT reintroduce per-layer host synchronization — one trailing
+    barrier, O(1) stacked transfers per batch regardless of layer count."""
+    eng, corpus = online_engine
+    drift = _drift(eng.cfg, 31)
+    toks = jnp.asarray(drift.sample(8)[0])
+    eng.infer({"tokens": toks})              # compile capture variants
+    fake_jax = _Counting(jax, ["block_until_ready"])
+    fake_np = _Counting(np, ["asarray", "nonzero"])
+    monkeypatch.setattr(engine_mod, "jax", fake_jax)
+    monkeypatch.setattr(engine_mod, "np", fake_np)
+    toks2 = jnp.asarray(drift.sample(8)[0])
+    _, st = eng.infer({"tokens": toks2})
+    assert fake_jax.counts["block_until_ready"] == 1
+    # payload + slots + embs + apms: four stacked transfers, not per-layer
+    assert fake_np.counts["asarray"] <= 4
+    assert fake_np.counts["nonzero"] == 0
+    assert st.n_admitted > 0                 # capture actually happened
+
+
+def test_admission_delta_syncs_only_changed_slots(online_engine):
+    eng, corpus = online_engine
+    drift = _drift(eng.cfg, 57)
+    s0 = eng.store.stats
+    n_delta0, bytes0 = s0.n_delta_syncs, s0.bytes_delta
+    full0 = s0.n_full_syncs
+    live0 = eng.store.live_count
+    _, st = eng.infer({"tokens": jnp.asarray(drift.sample(8)[0])})
+    assert st.n_admitted > 0
+    s1 = eng.store.stats
+    assert s1.n_delta_syncs > n_delta0
+    assert s1.n_full_syncs == full0          # slack absorbed the batch
+    shipped = s1.bytes_delta - bytes0
+    # ≤ 2× the admitted rows (power-of-2 padding), NOT the arena
+    assert shipped <= 2 * st.n_admitted * eng.store.entry_nbytes + 64
+    assert shipped < live0 * eng.store.entry_nbytes / 2
+
+
+def test_online_adaptation_recovers_vs_frozen_store(online_engine):
+    """Corpus drift collapses the hit rate; admission recovers it to ≥2×
+    the frozen store's post-drift rate, with logits still matching the
+    select reference afterwards."""
+    eng, corpus = online_engine
+    drift = _drift(eng.cfg, 91)
+
+    def run_phase(admit, n_batches, seed):
+        eng.mc.admit = admit
+        d = _drift(eng.cfg, 91)
+        d._rng = np.random.default_rng(seed)
+        st = MemoStats()
+        rates = []
+        for _ in range(n_batches):
+            toks = jnp.asarray(d.sample(16)[0])
+            h0, a0 = st.n_hits, st.n_layer_attempts
+            _, st = eng.infer({"tokens": toks}, stats=st)
+            rates.append((st.n_hits - h0)
+                         / max(1, st.n_layer_attempts - a0))
+        eng.mc.admit = True
+        return rates
+
+    frozen = run_phase(False, 5, seed=7)     # store untouched
+    adaptive = run_phase(True, 5, seed=7)    # same request stream
+    froz_ss = np.mean(frozen[2:])
+    adap_ss = np.mean(adaptive[2:])
+    assert adap_ss >= max(2 * froz_ss, 0.05), (frozen, adaptive)
+    # parity vs select on drifted traffic, admission paused
+    eng.mc.admit = False
+    toks = jnp.asarray(drift.sample(8)[0])
+    out_fast, _ = eng.infer({"tokens": toks})
+    eng.mc.mode = "select"
+    out_sel, _ = eng.infer({"tokens": toks})
+    eng.mc.mode = "bucket"
+    eng.mc.admit = True
+    np.testing.assert_allclose(np.asarray(out_fast), np.asarray(out_sel),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_online_recalibration_refits_sim_cal(online_engine):
+    """Drift makes the build-time dist→similarity map under-predict;
+    recal_every refits it from captured (embedding, true-APM) pairs so
+    predicted sims recover their true-similarity meaning."""
+    eng, corpus = online_engine
+    drift = _drift(eng.cfg, 171)
+    old_every = eng.mc.recal_every
+    cal0 = eng.sim_cal
+    eng.mc.recal_every = 1
+    try:
+        poisoned = (cal0[0], cal0[1] - 10.0)   # predict sim ≈ -9: starved
+        eng.sim_cal = poisoned
+        for _ in range(3):
+            _, st = eng.infer({"tokens": jnp.asarray(drift.sample(16)[0])})
+        assert st.n_admitted > 0               # misses were captured
+        a1, b1 = eng.sim_cal
+        assert b1 > poisoned[1] + 1.0          # refit pulled b back up
+    finally:
+        eng.mc.recal_every = old_every
+        eng.sim_cal = cal0
+
+
+def test_host_path_capture_admits_too(online_engine):
+    """Miss capture is wired through _lookup as well: the host-synchronous
+    path (select mode) admits drifted misses at the batch boundary."""
+    eng, corpus = online_engine
+    drift = _drift(eng.cfg, 131)
+    eng.mc.mode = "select"
+    try:
+        n0 = eng.store.stats.n_admitted
+        _, st = eng.infer({"tokens": jnp.asarray(drift.sample(8)[0])})
+        assert st.n_admitted > 0
+        assert eng.store.stats.n_admitted > n0
+    finally:
+        eng.mc.mode = "bucket"
