@@ -33,7 +33,57 @@ MODULES = [
     "roofline",            # deliverable (g): from the dry-run artifacts
     "serve_fastpath",      # ISSUE 1: device fast path vs host-sync serve
     "serve_online",        # ISSUE 2: MemoStore online adaptation + delta sync
+    "serve_compress",      # ISSUE 3: codec x index sweep (bytes/accuracy)
 ]
+
+
+def _normalized_latencies(doc):
+    """Serve metrics as DIMENSIONLESS ratios, so a regression check is
+    meaningful across machines: fast/host-path ms normalized by the same
+    run's select-reference ms, and the clustered-search inverse speedup.
+    Lower is better for every key."""
+    out = {}
+    for level, blk in ((doc.get("serve") or {}).get("levels") or {}).items():
+        base = (blk.get("modes") or {}).get("select", {}).get("host_ms")
+        if not base:
+            continue
+        for mode, row in blk["modes"].items():
+            if mode == "kernel":
+                # Pallas-interpreter timings (seconds per call on CPU)
+                # swing tens of percent run to run — gating them trains
+                # people to ignore the gate; the kernel path's perf
+                # story is compiled-TPU only
+                continue
+            for k in ("host_ms", "fast_ms"):
+                if k in row:
+                    out[f"serve/{level}/{mode}/{k}"] = row[k] / base
+    micro = (doc.get("serve_compress") or {}).get("search_micro") or {}
+    for key, row in micro.items():
+        if row.get("speedup"):
+            out[f"compress/search_{key}/inv_speedup"] = 1.0 / row["speedup"]
+    return out
+
+
+def check_regress(new_doc, baseline_path, tol=0.10):
+    """Compare this run against the last recorded BENCH_serve.json:
+    any normalized serve latency worse by > tol fails the run. Only keys
+    present in both documents are compared (a missing module is not a
+    regression)."""
+    try:
+        with open(baseline_path) as f:
+            old_doc = json.load(f)
+    except FileNotFoundError:
+        print(f"# --check-regress: no baseline at {baseline_path}, skipping",
+              file=sys.stderr)
+        return []
+    new_n = _normalized_latencies(new_doc)
+    problems = []
+    for key, old_v in _normalized_latencies(old_doc).items():
+        new_v = new_n.get(key)
+        if new_v is not None and new_v > old_v * (1.0 + tol):
+            problems.append({"key": key, "baseline": old_v, "new": new_v,
+                             "regression": new_v / old_v - 1.0})
+    return problems
 
 
 def parity_failures(serve_doc, tag=""):
@@ -56,6 +106,13 @@ def main() -> None:
                     help="comma-separated module substrings")
     ap.add_argument("--json", default=None, metavar="BENCH_serve.json",
                     help="also write rows + serve fast-path detail as JSON")
+    ap.add_argument("--check-regress", default=None, metavar="BASELINE.json",
+                    help="compare this run's serve latencies (normalized "
+                         "to the run's own select reference, so the check "
+                         "is machine-independent) against a previous "
+                         "BENCH_serve.json; exit nonzero on >10%% "
+                         "regression")
+    ap.add_argument("--regress-tol", type=float, default=0.10)
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
@@ -79,7 +136,7 @@ def main() -> None:
             failed_modules.add(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr)
-    if args.json:
+    if args.json or args.check_regress:
         doc = {"rows": rows}
         # lru-cached: free if serve_fastpath already ran; skip if it just
         # failed (lru_cache does not cache exceptions — a retry would
@@ -104,6 +161,30 @@ def main() -> None:
                 print(f"# serve_online detail FAILED:\n"
                       f"{traceback.format_exc()}", file=sys.stderr)
                 failures += 1
+        if wanted("serve_compress"):
+            try:
+                from benchmarks.serve_compress import collect as collect_comp
+                doc["serve_compress"] = collect_comp()
+            except Exception:  # noqa: BLE001
+                print(f"# serve_compress detail FAILED:\n"
+                      f"{traceback.format_exc()}", file=sys.stderr)
+                failures += 1
+        if args.check_regress:
+            bad = check_regress(doc, args.check_regress,
+                                tol=args.regress_tol)
+            if bad:
+                failures += 1
+                print("# LATENCY REGRESSION vs "
+                      f"{args.check_regress} (tol {args.regress_tol:.0%}):",
+                      file=sys.stderr)
+                for b in bad:
+                    print(f"#   {b['key']}: {b['baseline']:.3f} -> "
+                          f"{b['new']:.3f} (+{b['regression']:.0%})",
+                          file=sys.stderr)
+                doc["latency_regressions"] = bad
+            else:
+                print(f"# --check-regress vs {args.check_regress}: OK",
+                      file=sys.stderr)
         # fast-path parity is a HARD gate: divergence from the select
         # reference exits nonzero with a diff report, not just a boolean
         # buried in the JSON
@@ -117,9 +198,10 @@ def main() -> None:
                       f"max|Δlogits| = {b['max_abs_diff']}",
                       file=sys.stderr)
             doc["parity_failures"] = bad
-        with open(args.json, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
-        print(f"# wrote {args.json}", file=sys.stderr)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=2, sort_keys=True)
+            print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,195 @@
+"""Compressed memo tiers: codec × index sweep (ISSUE 3 / DESIGN.md §2.6).
+
+Two sweeps, both CPU-interpret friendly:
+
+* **Search microbenchmark** — flat exhaustive ``DeviceIndex`` vs
+  ``ClusteredDeviceIndex`` over synthetic DBs at increasing N, with
+  serving-shaped query batches (a handful of request templates per
+  batch — the regime batch-shared probing is designed for). Records
+  ms/search, speedup, recall@1 vs the exact oracle, and resident index
+  bytes (int8+scales vs f32). The ISSUE-3 acceptance row is
+  ``search_N16384``: clustered ≥ 3× faster at recall ≥ 0.95.
+
+* **Engine sweep** — one trained reduced encoder served end-to-end
+  under each APM codec: ms/batch, hit rate, codec-true bytes/entry (and
+  the ratio vs the f16 layout), device-tier HBM bytes, delta-sync bytes
+  for a fixed admission (the sync-bandwidth receipt), max|Δlogits| and
+  prediction agreement vs the UNCOMPRESSED (f16) reference engine — the
+  measured accuracy/bytes trade-off table quoted in DESIGN.md §2.6.
+
+Emitted into BENCH_serve.json by ``python -m benchmarks.run --json`` as
+the ``serve_compress`` section.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit_ms, trained_encoder
+from repro.core.engine import MemoConfig, MemoEngine, MemoStats
+from repro.core.index import (
+    ClusteredDeviceIndex, DeviceIndex, ExactIndex, recall_at_1)
+from repro.data import TemplateCorpus
+
+BATCH = 16
+SEQ = 32
+CODECS = ("f16", "int8", "lowrank")
+SEARCH_NS = (4096, 16384)
+SEARCH_DIM = 128
+SEARCH_B = 32
+
+
+def _search_micro():
+    rng = np.random.default_rng(0)
+    out = {}
+    for n in SEARCH_NS:
+        centers = rng.normal(size=(64, SEARCH_DIM)) * 5
+        db = (centers[rng.integers(0, 64, n)]
+              + rng.normal(size=(n, SEARCH_DIM))).astype(np.float32)
+        # serving-shaped batch: SEARCH_B requests over 4 templates
+        rows = db[rng.integers(0, n, 4)]
+        q = (rows[np.repeat(np.arange(4), SEARCH_B // 4)]
+             + 0.1 * rng.normal(size=(SEARCH_B, SEARCH_DIM))
+             ).astype(np.float32)
+        qd = jnp.asarray(q)
+        flat = DeviceIndex(SEARCH_DIM)
+        flat.add(db)
+        cl = ClusteredDeviceIndex(SEARCH_DIM)
+        cl.add(db)
+        f_flat = jax.jit(lambda q, a: flat.search_device(q, args=a)[1])
+        f_cl = jax.jit(lambda q, a: cl.search_device(q, args=a)[1])
+        fargs, cargs = flat.search_args, cl.search_args
+        flat_ms = timeit_ms(lambda: f_flat(qd, fargs), reps=10)
+        cl_ms = timeit_ms(lambda: f_cl(qd, cargs), reps=10)
+        exact = ExactIndex(SEARCH_DIM)
+        exact.add(db)
+        flat_bytes = int(np.prod(fargs.shape)) * 4
+        cl_bytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                       for a in cargs)
+        out[f"N{n}"] = {
+            "n": n, "dim": SEARCH_DIM, "batch": SEARCH_B,
+            "flat_ms": flat_ms, "clustered_ms": cl_ms,
+            "speedup": flat_ms / cl_ms,
+            "recall_at_1": recall_at_1(cl, exact, q),
+            "flat_index_bytes": flat_bytes,
+            "clustered_index_bytes": cl_bytes,
+            "index_bytes_ratio": cl_bytes / flat_bytes,
+            "n_clusters": int(cl._pvecs.shape[0]),
+            "m_pad": int(cl._pvecs.shape[1]),
+        }
+    return out
+
+
+def _engine_sweep():
+    model, params, _ = trained_encoder("bert_base", n_layers=2, seq_len=SEQ)
+    corpus = TemplateCorpus(vocab=model.cfg.vocab, seq_len=SEQ,
+                            n_templates=6, slot_fraction=0.2, seed=0)
+    calib = [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}
+             for _ in range(4)]
+    toks = jnp.asarray(corpus.sample(BATCH)[0])
+    rng = np.random.default_rng(1)
+
+    engines = {}
+    for codec in CODECS:
+        eng = MemoEngine(model, params, MemoConfig(
+            threshold=0.8, mode="bucket", embed_steps=150, apm_codec=codec,
+            device_slack=4.0))
+        eng.build(jax.random.PRNGKey(1), calib)
+        if codec == CODECS[0]:
+            thr = eng.suggest_levels(
+                [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}]
+            )["moderate"]
+        eng.mc.threshold = thr
+        engines[codec] = eng
+
+    # the uncompressed reference: f16 store, select semantics
+    ref_eng = engines["f16"]
+    ref_eng.mc.mode = "select"
+    ref_logits, _ = ref_eng.infer({"tokens": toks})
+    ref_logits = np.asarray(ref_logits)
+    ref_eng.mc.mode = "bucket"
+
+    out = {}
+    for codec, eng in engines.items():
+        st = MemoStats()
+        ts = []
+        for _ in range(6):
+            t0 = time.perf_counter()
+            logits, st = eng.infer({"tokens": toks}, stats=st)
+            jax.block_until_ready(logits)
+            ts.append(time.perf_counter() - t0)
+        logits = np.asarray(logits)
+        store = eng.store
+        # delta-sync receipt: admit a fixed batch of entries, measure
+        # exactly the bytes the incremental sync ships
+        n_new = 8
+        apms = np.asarray(
+            jax.nn.softmax(jnp.asarray(rng.normal(
+                size=(n_new,) + store.apm_shape)), -1), np.float16)
+        embs = rng.normal(size=(n_new, store.embed_dim)).astype(np.float32)
+        embs[:, 0] += 1e4                      # far from live traffic
+        b0 = store.stats.bytes_delta
+        store.admit(apms, embs)
+        r = store.sync()
+        delta_bytes = store.stats.bytes_delta - b0
+        assert r["kind"] == "delta", r
+        out[codec] = {
+            "ms_per_batch": float(np.median(ts[2:]) * 1e3),
+            "memo_rate": st.memo_rate,
+            "entry_nbytes": store.entry_nbytes,
+            "entry_bytes_ratio": store.entry_nbytes
+            / store.logical_entry_nbytes,
+            "apm_entry_nbytes": store.db.entry_nbytes,
+            "apm_bytes_ratio": store.db.entry_nbytes
+            / store.db.logical_entry_nbytes,
+            "device_hbm_bytes": store.device_db.nbytes,
+            "delta_sync_bytes_8_entries": delta_bytes,
+            "max_abs_dlogits_vs_f16_select": float(
+                np.max(np.abs(logits - ref_logits))),
+            "prediction_agreement_vs_f16": float(
+                (logits.argmax(-1) == ref_logits.argmax(-1)).mean()),
+        }
+    f16 = out["f16"]
+    for codec in CODECS:
+        out[codec]["hbm_ratio_vs_f16"] = (out[codec]["device_hbm_bytes"]
+                                          / f16["device_hbm_bytes"])
+        out[codec]["delta_ratio_vs_f16"] = (
+            out[codec]["delta_sync_bytes_8_entries"]
+            / f16["delta_sync_bytes_8_entries"])
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def collect():
+    return {
+        "config": {"backend": jax.default_backend(),
+                   "search": {"dim": SEARCH_DIM, "batch": SEARCH_B,
+                              "ns": list(SEARCH_NS)},
+                   "engine": {"arch": "bert_base (reduced, 2 layers)",
+                              "batch": BATCH, "seq": SEQ}},
+        "search_micro": _search_micro(),
+        "codec_sweep": _engine_sweep(),
+    }
+
+
+def run():
+    out = collect()
+    for key, row in out["search_micro"].items():
+        yield (f"compress_search_{key}_flat", row["flat_ms"] * 1e3,
+               f"N={row['n']}")
+        yield (f"compress_search_{key}_clustered", row["clustered_ms"] * 1e3,
+               f"speedup={row['speedup']:.2f}x;"
+               f"recall={row['recall_at_1']:.3f};"
+               f"bytes_ratio={row['index_bytes_ratio']:.2f}")
+    for codec, row in out["codec_sweep"].items():
+        yield (f"compress_serve_{codec}", row["ms_per_batch"] * 1e3,
+               f"rate={row['memo_rate']:.2f};"
+               f"apm_bytes={row['apm_bytes_ratio']:.2f}x;"
+               f"hbm={row['hbm_ratio_vs_f16']:.2f}x;"
+               f"delta={row['delta_ratio_vs_f16']:.2f}x;"
+               f"dlogits={row['max_abs_dlogits_vs_f16_select']:.4f};"
+               f"agree={row['prediction_agreement_vs_f16']:.3f}")

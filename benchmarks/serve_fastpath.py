@@ -55,17 +55,20 @@ def _phase_micro(eng, toks):
     idx_dev = jnp.asarray(idx_np, jnp.int32)
     apm = jnp.asarray(eng.db.get(idx_np, count_reuse=False))
     search_dev = jax.jit(
-        lambda q, t: eng.device_index.search_device(q, table=t)[1])
-    gather_dev = jax.jit(lambda a, i: jnp.take(a, i, axis=0))
+        lambda q, a: eng.device_index.search_device(q, args=a)[1])
+    codec = eng.store.codec
+    gather_dev = jax.jit(lambda parts, i: codec.decode_rows(
+        tuple(jnp.take(p, i, axis=0) for p in parts)))
     return {
         "embed_ms": timeit_ms(lambda: eng._embed(x)),
         "search_host_ms": timeit_ms(lambda: eng.index.search(emb_np, 1)),
         "search_device_ms": timeit_ms(
-            lambda: search_dev(emb_dev, eng.device_index.table)),
+            lambda: search_dev(emb_dev, eng.device_index.search_args)),
         "fetch_host_ms": timeit_ms(
             lambda: jnp.asarray(eng.db.get(idx_np, count_reuse=False))),
+        # the hot-path fetch: compressed gather + on-device dequant
         "fetch_device_ms": timeit_ms(
-            lambda: gather_dev(eng.device_db.apms, idx_dev)),
+            lambda: gather_dev(eng.device_db.parts, idx_dev)),
         "attn_full_ms": timeit_ms(
             lambda: eng._attn_only(lp, x, kind, positions)),
         "attn_memo_ms": timeit_ms(

@@ -1,23 +1,27 @@
 """Attention database — the big-memory APM store (paper §5.1, §5.3).
 
-Two tiers (DESIGN.md §2):
+Two tiers (DESIGN.md §2), both codec-aware (§2.6):
 
-* ``AttentionDB`` — host-RAM tier. APMs live in one large preallocated
-  float16 arena (the pod host's RAM is the "big memory"); fetches are
-  zero-copy numpy views into the arena, batched into a single device
-  transfer — the engine-level analogue of the paper's mmap gathering.
-  Reuse counts are tracked for the Fig-11 analysis and feed the
-  MemoStore eviction clock. Slots freed by eviction go on a free-list
-  and are recycled in place by ``put`` (no compaction, so slot ids stay
-  stable and the device tier can be delta-patched).
+* ``AttentionDB`` — host-RAM tier. Entries live in one preallocated
+  arena *per codec part* (f16 APMs, or int8 codes + f16 scales, or
+  low-rank factors — see ``core/codec.py``); fetches are zero-copy numpy
+  views into the arenas, batched into a single device transfer — the
+  engine-level analogue of the paper's mmap gathering. Reuse counts are
+  tracked for the Fig-11 analysis and feed the MemoStore eviction clock.
+  Slots freed by eviction go on a free-list and are recycled in place by
+  ``put`` (no compaction, so slot ids stay stable and the device tier
+  can be delta-patched). ``entry_nbytes`` reports the codec-true
+  (compressed) payload, so byte budgets and sync receipts stay honest.
 
-* ``DeviceDB`` — device-resident tier for the pure-JAX serving path: the DB
-  is a jnp array (shardable over the ``data`` mesh axis); lookup is a fused
-  gather the memo_attention Pallas kernel can consume directly by index
-  (the TPU "zero-copy": the APM tile flows HBM→VMEM exactly once). The
-  arena is preallocated with slack so MemoStore's incremental sync can
+* ``DeviceDB`` — device-resident tier for the pure-JAX serving path: each
+  codec part is a jnp array (shardable over the ``data`` mesh axis); the
+  hot path gathers the *compressed* rows by index and dequantizes in the
+  fused layer jit (or inside the memo_attention kernel's VMEM for int8)
+  — the APM tile flows HBM→VMEM once, at the compressed width. The
+  arenas are preallocated with slack so MemoStore's incremental sync can
   land admissions/overwrites with ``.at[slots].set`` deltas instead of a
-  full re-transfer; ``transfer_bytes`` accounts every host→device byte.
+  full re-transfer; ``transfer_bytes`` accounts every host→device byte,
+  at the compressed width.
 """
 from __future__ import annotations
 
@@ -26,6 +30,8 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.codec import ApmCodec, F16Codec, get_codec
 
 
 def pad_delta_pow2(slots: np.ndarray, values: Optional[np.ndarray] = None):
@@ -46,14 +52,31 @@ def pad_delta_pow2(slots: np.ndarray, values: Optional[np.ndarray] = None):
     return slots, values
 
 
+def pad_delta_parts(slots: np.ndarray, parts: Sequence[np.ndarray]):
+    """`pad_delta_pow2` for a multi-part (codec) payload: one padded slot
+    vector shared by every part's scatter."""
+    padded_slots, _ = pad_delta_pow2(slots)
+    pad = padded_slots.size - slots.size
+    if pad == 0:
+        return padded_slots, tuple(np.asarray(p) for p in parts)
+    return padded_slots, tuple(
+        np.concatenate([p, np.repeat(p[:1], pad, axis=0)])
+        for p in (np.asarray(p) for p in parts))
+
+
 class AttentionDB:
     def __init__(self, apm_shape: Tuple[int, int, int], capacity: int = 1024,
-                 dtype=np.float16):
-        """apm_shape: (H, L, L) per entry."""
+                 dtype=np.float16, codec="f16", rank: Optional[int] = None):
+        """apm_shape: (H, L, L) per entry; ``codec`` picks the storage
+        format (``f16`` | ``int8`` | ``lowrank`` or an ApmCodec)."""
         self.apm_shape = tuple(apm_shape)
         self.capacity = capacity
-        self.dtype = dtype
-        self._arena = np.zeros((capacity,) + self.apm_shape, dtype)
+        self.dtype = dtype                    # logical (decode) dtype
+        self.codec: ApmCodec = get_codec(codec, self.apm_shape, rank=rank,
+                                         dtype=dtype)
+        self._arenas: List[np.ndarray] = [
+            np.zeros((capacity,) + p.shape, p.dtype)
+            for p in self.codec.parts]
         self._n = 0
         self.reuse_counts = np.zeros(capacity, np.int64)
         self._live = np.zeros(capacity, bool)
@@ -63,8 +86,23 @@ class AttentionDB:
         return self._n
 
     @property
+    def _arena(self) -> np.ndarray:
+        """The primary part's arena (codes for int8, the f16 arena for
+        identity) — capacity/shape introspection and debugging; readers
+        of *values* must go through ``get``/``parts_at``."""
+        return self._arenas[0]
+
+    @property
     def entry_nbytes(self) -> int:
-        return int(np.prod(self.apm_shape)) * self._arena.itemsize
+        """Codec-true bytes per entry (the compressed payload, NOT the
+        logical f16 shape — budget accounting depends on this)."""
+        return self.codec.entry_nbytes
+
+    @property
+    def logical_entry_nbytes(self) -> int:
+        """Bytes an uncompressed f16 entry would occupy (the baseline
+        the compression receipts are quoted against)."""
+        return int(np.prod(self.apm_shape)) * 2
 
     @property
     def live_count(self) -> int:
@@ -80,6 +118,33 @@ class AttentionDB:
         ``capacity * entry_nbytes``."""
         return self.live_count * self.entry_nbytes
 
+    def parts_at(self, indices) -> Tuple[np.ndarray, ...]:
+        """Raw compressed rows, one gather per codec part."""
+        indices = np.asarray(indices).reshape(-1)
+        return tuple(a[indices] for a in self._arenas)
+
+    def parts_prefix(self, n: int) -> Tuple[np.ndarray, ...]:
+        """Zero-copy views of the first ``n`` rows of every part."""
+        return tuple(a[:n] for a in self._arenas)
+
+    def _grow_to(self, need: int) -> None:
+        if need <= self.capacity:
+            return
+        new_cap = max(2 * self.capacity, need)
+        arenas = []
+        for a in self._arenas:
+            fresh = np.zeros((new_cap,) + a.shape[1:], a.dtype)
+            fresh[: self._n] = a[: self._n]
+            arenas.append(fresh)
+        self._arenas = arenas
+        counts = np.zeros(new_cap, np.int64)
+        counts[: self._n] = self.reuse_counts[: self._n]
+        self.reuse_counts = counts
+        live = np.zeros(new_cap, bool)
+        live[: self._n] = self._live[: self._n]
+        self._live = live
+        self.capacity = new_cap
+
     def add(self, apms: np.ndarray) -> np.ndarray:
         """apms: (B, H, L, L). Appends at the arena tail; returns indices.
 
@@ -87,20 +152,11 @@ class AttentionDB:
         appends) or jumps straight to the requested size, whichever is
         larger — never both, so capacity always equals the allocation."""
         b = apms.shape[0]
-        if self._n + b > self.capacity:
-            new_cap = max(2 * self.capacity, self._n + b)
-            arena = np.zeros((new_cap,) + self.apm_shape, self.dtype)
-            arena[: self._n] = self._arena[: self._n]
-            self._arena = arena
-            counts = np.zeros(new_cap, np.int64)
-            counts[: self._n] = self.reuse_counts[: self._n]
-            self.reuse_counts = counts
-            live = np.zeros(new_cap, bool)
-            live[: self._n] = self._live[: self._n]
-            self._live = live
-            self.capacity = new_cap
+        self._grow_to(self._n + b)
         idx = np.arange(self._n, self._n + b)
-        self._arena[idx] = np.asarray(apms, self.dtype)
+        parts = self.codec.encode(np.asarray(apms, self.dtype))
+        for a, p in zip(self._arenas, parts):
+            a[idx] = p
         self._live[idx] = True
         self._n += b
         return idx
@@ -115,7 +171,9 @@ class AttentionDB:
         slots = np.asarray([self._free.pop() for _ in range(n_reuse)],
                            np.int64)
         if n_reuse:
-            self._arena[slots] = apms[:n_reuse]
+            parts = self.codec.encode(apms[:n_reuse])
+            for a, p in zip(self._arenas, parts):
+                a[slots] = p
             self.reuse_counts[slots] = 0
             self._live[slots] = True
         if b > n_reuse:
@@ -125,7 +183,9 @@ class AttentionDB:
     def overwrite(self, slots: Sequence[int], apms: np.ndarray) -> None:
         """In-place update of existing slots (no allocation, no id churn)."""
         slots = np.asarray(slots).reshape(-1)
-        self._arena[slots] = np.asarray(apms, self.dtype)
+        parts = self.codec.encode(np.asarray(apms, self.dtype))
+        for a, p in zip(self._arenas, parts):
+            a[slots] = p
 
     def release(self, slots: Sequence[int]) -> None:
         """Evict entries: mark slots dead and queue them for recycling.
@@ -140,17 +200,19 @@ class AttentionDB:
                 self._free.append(s)
 
     def get(self, indices, count_reuse: bool = True) -> np.ndarray:
-        """Batched fetch: one fancy-index gather out of the arena (no
-        per-entry copies) — compare benchmarks/table6_gather.py."""
+        """Batched decoded fetch: one fancy-index gather per codec part
+        (no per-entry copies) — compare benchmarks/table6_gather.py."""
         indices = np.asarray(indices).reshape(-1)
         if count_reuse:
             np.add.at(self.reuse_counts, indices, 1)
-        return self._arena[indices]
+        return self.codec.decode(tuple(a[indices] for a in self._arenas))
 
     def get_naive(self, indices) -> np.ndarray:
         """The paper's 'memory copy' strawman: per-entry slice + copy +
         re-stack (what PyTorch-style per-tensor gathering does)."""
-        parts = [self._arena[int(i)].copy() for i in np.asarray(indices)]
+        parts = [self.codec.decode(
+            tuple(a[int(i): int(i) + 1].copy() for a in self._arenas))[0]
+            for i in np.asarray(indices)]
         return np.stack(parts, 0)
 
     def reuse_histogram(self):
@@ -165,63 +227,110 @@ class DeviceDB:
     MemoStore land admissions as ``.at[slots].set`` deltas without changing
     the array shape (stable shapes = no fused-jit recompiles), and a
     generation counter upstream decides when a delta suffices. Every
-    host→device byte is tallied in ``transfer_bytes``."""
+    host→device byte is tallied in ``transfer_bytes`` — at the codec's
+    compressed width; the hot path consumes ``parts`` and dequantizes in
+    its own jit, so the f16 APMs never exist in HBM."""
 
-    def __init__(self, apms, capacity: Optional[int] = None, sharding=None):
-        apms = np.asarray(apms)
-        n = apms.shape[0]
+    def __init__(self, apms, capacity: Optional[int] = None, sharding=None,
+                 codec: Optional[ApmCodec] = None):
+        if codec is None:                 # identity construction from array
+            apms = np.asarray(apms)
+            codec = F16Codec(apms.shape[1:], dtype=apms.dtype)
+            host_parts = (apms,)
+        else:
+            host_parts = tuple(np.asarray(p) for p in apms)
+        self.codec = codec
+        n = host_parts[0].shape[0]
         capacity = max(int(capacity or 0), n)
-        if capacity > n:
-            pad = np.zeros((capacity - n,) + apms.shape[1:], apms.dtype)
-            apms = np.concatenate([apms, pad], 0)
-        self.apms = (jax.device_put(apms, sharding) if sharding is not None
-                     else jnp.asarray(apms))
+        parts = []
+        for p in host_parts:
+            if capacity > n:
+                pad = np.zeros((capacity - n,) + p.shape[1:], p.dtype)
+                p = np.concatenate([p, pad], 0)
+            parts.append(jax.device_put(p, sharding) if sharding is not None
+                         else jnp.asarray(p))
+        self.parts: Tuple[jnp.ndarray, ...] = tuple(parts)
         self._n = n
-        self.transfer_bytes = int(apms.nbytes)
+        self.transfer_bytes = sum(int(p.nbytes) for p in self.parts)
 
     @classmethod
     def from_host(cls, db: AttentionDB, capacity: Optional[int] = None,
                   sharding=None) -> "DeviceDB":
         """Materialize the serving copy of a host arena (one transfer of
-        the live prefix; the host tier stays the source of truth)."""
-        return cls(db._arena[: len(db)], capacity=capacity,
-                   sharding=sharding)
+        the live prefix — compressed parts, codec carried over; the host
+        tier stays the source of truth)."""
+        return cls(db.parts_prefix(len(db)), capacity=capacity,
+                   sharding=sharding, codec=db.codec)
 
-    def update(self, slots, apms) -> int:
-        """Delta sync: scatter ``apms`` into ``slots`` (admissions land in
-        the preallocated slack, overwrites recycle rows in place) — the
-        ONLY transfer is the changed rows, never the arena. Returns the
-        bytes shipped."""
+    @property
+    def apms(self) -> jnp.ndarray:
+        """The full arena, decoded. For the identity codec this is the
+        raw array (zero cost); for compressed codecs it MATERIALIZES the
+        decoded arena — tests/debugging only, never the hot path (which
+        gathers ``parts`` and dequantizes per batch)."""
+        if isinstance(self.codec, F16Codec):
+            return self.parts[0]
+        return self.codec.decode_rows(self.parts)
+
+    def update(self, slots, values) -> int:
+        """Delta sync: scatter compressed rows into ``slots`` (admissions
+        land in the preallocated slack, overwrites recycle rows in place)
+        — the ONLY transfer is the changed rows, never the arena.
+        ``values``: a parts tuple (or a bare decoded array, identity
+        codec only). Returns the bytes shipped."""
         slots = np.asarray(slots).reshape(-1)
         if slots.size == 0:
             return 0
         if int(slots.max()) >= self.capacity:
             raise ValueError("delta update past device capacity; "
                              "caller must full-resync with more slack")
+        if not isinstance(values, (tuple, list)):
+            values = self.codec.encode(np.asarray(values))
         n_max = int(slots.max())
-        slots, values = pad_delta_pow2(slots, np.asarray(apms, self.dtype))
-        values = jnp.asarray(values)
-        self.apms = self.apms.at[jnp.asarray(slots)].set(values)
+        slots, parts = pad_delta_parts(slots, values)
+        slots_dev = jnp.asarray(slots)
+        shipped = int(slots.size * 4)
+        new_parts = []
+        for arr, p in zip(self.parts, parts):
+            p = jnp.asarray(np.asarray(p, arr.dtype))
+            new_parts.append(arr.at[slots_dev].set(p))
+            shipped += int(p.nbytes)
+        self.parts = tuple(new_parts)
         self._n = max(self._n, n_max + 1)
-        shipped = int(values.nbytes + slots.size * 4)
         self.transfer_bytes += shipped
         return shipped
 
     @property
     def capacity(self) -> int:
-        return self.apms.shape[0]
+        return self.parts[0].shape[0]
 
     @property
     def dtype(self):
-        return self.apms.dtype
+        return self.parts[0].dtype
+
+    @property
+    def entry_nbytes(self) -> int:
+        """Compressed bytes per entry actually resident in HBM."""
+        return self.codec.entry_nbytes
+
+    @property
+    def nbytes(self) -> int:
+        """Total HBM bytes of the allocation (all parts, incl. slack)."""
+        return sum(int(p.nbytes) for p in self.parts)
 
     def __len__(self):
         return self._n
 
+    def gather_parts(self, indices) -> Tuple[jnp.ndarray, ...]:
+        """Compressed gather (B,) → per-part rows; traceable. The fused
+        consumer dequantizes via ``codec.decode_rows`` (or inside the
+        memo_attention kernel for int8)."""
+        return tuple(jnp.take(p, indices, axis=0) for p in self.parts)
+
     def gather(self, indices):
-        """Fused XLA gather (B,) → (B, H, L, L); with a sharded DB, XLA
+        """Decoded gather (B,) → (B, H, L, L); with a sharded DB, XLA
         inserts the cross-shard collective automatically."""
-        return jnp.take(self.apms, indices, axis=0)
+        return self.codec.decode_rows(self.gather_parts(indices))
 
 
 def distributed_search(embs, queries, mesh, *, db_axis="data"):

@@ -44,6 +44,23 @@ class MemoConfig:
     threshold: float = 0.97
     mode: str = "select"            # select | bucket | kernel
     index_kind: str = "exact"       # exact | ivf | device
+    # --- compressed memo tiers (DESIGN.md §2.6) ---
+    # APM storage codec for BOTH tiers: f16 | int8 | lowrank. int8
+    # (symmetric per-row, f16 scales) is the default: ~0.53× the f16
+    # bytes end to end (arena, HBM, delta sync) with select-parity
+    # preserved — every mode decodes the SAME stored entry (select vs
+    # bucket bit-identically; kernel mode dequantizes in VMEM without
+    # the f16 round, so it matches within float tolerance); only the
+    # gap to an UNcompressed store is codec error (serve_compress).
+    apm_codec: str = "int8"
+    apm_rank: Optional[int] = None  # lowrank codec rank (None = L//8)
+    # device-tier index: flat (exhaustive) | clustered (IVF) | auto
+    # (flat below cluster_crossover entries, clustered above — the
+    # crossover where two-stage routing beats one big matmul)
+    device_index: str = "auto"
+    cluster_crossover: int = 4096
+    nprobe: int = 16
+    n_clusters: Optional[int] = None    # clustered: None = sqrt(N)
     embed_dim: int = 128
     embed_pool: int = 8
     embed_act: str = "linear"
@@ -230,7 +247,11 @@ class MemoEngine:
             index_kind=self.mc.index_kind, budget_bytes=budget,
             capacity=n, interpret=self._interpret,
             device_slack=self.mc.device_slack,
-            n_lists=max(4, int(np.sqrt(n))))
+            n_lists=max(4, int(np.sqrt(n))),
+            codec=self.mc.apm_codec, apm_rank=self.mc.apm_rank,
+            device_index_kind=self.mc.device_index,
+            cluster_crossover=self.mc.cluster_crossover,
+            nprobe=self.mc.nprobe, n_clusters=self.mc.n_clusters)
 
         k1, k2 = jax.random.split(key)
         emb = Embedder.init(k1, L, H, dim=self.mc.embed_dim,
@@ -441,18 +462,28 @@ class MemoEngine:
           memo_attention kernel gathers its own tiles from the device DB
           by scalar-prefetched index and skips QKᵀ per-sequence via
           pl.when; misses route through the clamped-gather (ops.py), so
-          they never touch the host arena.
+          they never touch the host arena. Under the int8 codec the
+          kernel gathers codes + scale slivers and dequantizes in VMEM
+          (the fused-dequant gather, DESIGN.md §2.6).
+
+        Compression plumbing: the device DB rides in as its codec
+        ``parts`` tuple and the index as its ``search_args`` pytree, so
+        dequant happens INSIDE this jit (bucket) or inside the kernel
+        (int8 kernel mode) — an index rebuild or codec-shape change
+        retraces automatically because the traced pytree changes.
         """
         cfg = self.cfg
         kernel_path = self.mc.mode == "kernel" and kind == "attn"
+        store = self.store
         key = ("fused", kernel_path, kind, li if cfg.moe else 0, h.shape,
-               self.mc.device_quanta, capture)
+               self.mc.device_quanta, capture, store.codec.key,
+               type(store.device_index).__name__)
         fn = self._jit_cache.get(key)
         if fn is None:
             pool, act = self.embedder.pool, self.embedder.act
             from repro.core.embedding import embed_apply
-            dindex = self.device_index
             interpret = self._interpret
+            codec_name = store.codec.name
             f_memo = (attn_mod.gqa_apply_memo if kind == "attn"
                       else attn_mod.mla_apply_memo)
             f_attn = (attn_mod.gqa_apply if kind == "attn"
@@ -492,30 +523,60 @@ class MemoEngine:
                                              ops),
                     (xs, apm, hit, pos))
 
-            def run(lp, emb_p, table, arena, h, thr, a, b, positions):
+            def run(lp, emb_p, sargs, db_parts, h, thr, a, b, positions):
                 x = bb.norm_apply(lp["norm1"], h, cfg.norm)
                 emb = embed_apply(emb_p, x, pool, act)
-                d2, idx = dindex.search_device(emb, table=table)
+                d2, idx = store.device_index.search_device(emb, args=sargs)
                 dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
                 sim = a * dist + b
                 hit = sim > thr
                 idx0 = idx[:, 0].astype(jnp.int32)
+
+                def gather_apm():
+                    """Compressed gather + on-device dequant — the only
+                    place the decoded APM batch exists. Decoded THROUGH
+                    f16 (host-decode parity) but returned as f32: the
+                    cast fuses the rounding into the dequant pipeline,
+                    whereas an f16 result would materialize as a cond
+                    operand — software-emulated f16 stores are ~4× the
+                    whole dequant cost on CPU."""
+                    rows = tuple(jnp.take(p, idx0, axis=0)
+                                 for p in db_parts)
+                    return store.codec.decode_rows(rows).astype(
+                        jnp.float32)
+
                 if kernel_path:
                     from repro.kernels.memo_attention.ops import \
                         memo_attention
                     qq, kk, vv = attn_mod._qkv(lp["mix"], x, cfg, positions)
                     S = x.shape[1]
                     blk = max(8, min(128, S))
-                    out = memo_attention(
-                        qq, kk, vv, arena, idx0, hit.astype(jnp.int32),
-                        causal=cfg.causal, window=cfg.sliding_window,
-                        block_q=blk, block_k=blk, interpret=interpret)
+                    kw = dict(causal=cfg.causal, window=cfg.sliding_window,
+                              block_q=blk, block_k=blk, interpret=interpret)
+                    if codec_name == "int8":
+                        # fused-dequant gather: int8 tiles + scale slivers,
+                        # dequantized in the kernel's VMEM
+                        out = memo_attention(
+                            qq, kk, vv, db_parts[0], idx0,
+                            hit.astype(jnp.int32), db_scales=db_parts[1],
+                            **kw)
+                    elif codec_name == "f16":
+                        out = memo_attention(
+                            qq, kk, vv, db_parts[0], idx0,
+                            hit.astype(jnp.int32), **kw)
+                    else:
+                        # factorized codecs: decode the B gathered rows
+                        # (not the DB) and feed them as a B-row database
+                        out = memo_attention(
+                            qq, kk, vv, gather_apm(),
+                            jnp.arange(B, dtype=jnp.int32),
+                            hit.astype(jnp.int32), **kw)
                     y = jnp.einsum("bshe,hed->bsd", out, lp["mix"]["wo"])
                 elif nq == 1:
-                    apm = jnp.take(arena, idx0, axis=0)
+                    apm = gather_apm()
                     y = bucketed(lp, x, apm, hit, positions, B)
                 else:
-                    apm = jnp.take(arena, idx0, axis=0)
+                    apm = gather_apm()
                     order = jnp.argsort(jnp.logical_not(hit))  # hits first
                     qs = B // nq
                     x_s = jnp.take(x, order, 0)
@@ -547,8 +608,8 @@ class MemoEngine:
             fn = jax.jit(run)
             self._jit_cache[key] = fn
         a, b = self.sim_cal
-        return fn(lp, self.embedder.params, self.device_index.table,
-                  self.device_db.apms, h, thr_dev, jnp.float32(a),
+        return fn(lp, self.embedder.params, self.device_index.search_args,
+                  self.device_db.parts, h, thr_dev, jnp.float32(a),
                   jnp.float32(b), positions)
 
     def _capture_now(self, use_memo: bool) -> bool:
@@ -832,24 +893,37 @@ class MemoEngine:
         hit_idx = jnp.asarray(memo.idx, jnp.int32)
         hit = jnp.asarray(memo.hit, jnp.int32)
         interpret = self._interpret
-        key = ("kernel", li if cfg.moe else 0, h.shape)
+        store = self.store
+        key = ("kernel", li if cfg.moe else 0, h.shape, store.codec.key)
         fn = self._jit_cache.get(key)
         if fn is None:
-            def run(lp, h, db, hit_idx, hit, positions):
+            codec_name = store.codec.name
+
+            def run(lp, h, db_parts, hit_idx, hit, positions):
                 from repro.kernels.memo_attention.ops import memo_attention
                 x = bb.norm_apply(lp["norm1"], h, cfg.norm)
                 q, k, v = attn_mod._qkv(lp["mix"], x, cfg, positions)
                 S = x.shape[1]
                 blk = max(8, min(128, S))
-                out = memo_attention(
-                    q, k, v, db, hit_idx, hit, causal=cfg.causal,
-                    window=cfg.sliding_window,
-                    block_q=blk, block_k=blk, interpret=interpret)
+                kw = dict(causal=cfg.causal, window=cfg.sliding_window,
+                          block_q=blk, block_k=blk, interpret=interpret)
+                if codec_name == "int8":   # fused-dequant gather in VMEM
+                    out = memo_attention(q, k, v, db_parts[0], hit_idx, hit,
+                                         db_scales=db_parts[1], **kw)
+                elif codec_name == "f16":
+                    out = memo_attention(q, k, v, db_parts[0], hit_idx, hit,
+                                         **kw)
+                else:                      # factorized: decode B rows only
+                    rows = tuple(jnp.take(p, hit_idx, axis=0)
+                                 for p in db_parts)
+                    out = memo_attention(
+                        q, k, v, store.codec.decode_rows(rows),
+                        jnp.arange(h.shape[0], dtype=jnp.int32), hit, **kw)
                 y = jnp.einsum("bshe,hed->bsd", out, lp["mix"]["wo"])
                 return self._chan_tail(lp, h + y, li)
             fn = jax.jit(run)
             self._jit_cache[key] = fn
-        return fn(lp, h, self.device_db.apms, hit_idx, hit, positions)
+        return fn(lp, h, self.device_db.parts, hit_idx, hit, positions)
 
     def _memo_only(self, lp, x, kind, apm):
         key = ("memo_only", kind, x.shape)
@@ -899,12 +973,46 @@ class MemoEngine:
         return fn(lp, h)
 
     # ------------------------------------------------------------- selective
+    def _fused_lookup_probe(self, x):
+        """The memo overhead the FAST PATH actually pays, as one jitted
+        dispatch: embed → device search → compressed gather → dequant —
+        exactly the lookup portion of ``_layer_fused``, minus the
+        attention both branches share. Used by ``profile``; the old
+        host-synchronous chain (numpy search + arena fetch + per-step
+        barriers) overstated t_overhead by the round-trips and disabled
+        layers the fused path would win on."""
+        store = self.store
+        key = ("profov", x.shape, store.codec.key,
+               type(store.device_index).__name__)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            pool, act = self.embedder.pool, self.embedder.act
+            from repro.core.embedding import embed_apply
+
+            def run(emb_p, x, sargs, db_parts, a, b):
+                emb = embed_apply(emb_p, x, pool, act)
+                d2, idx = store.device_index.search_device(emb, args=sargs)
+                dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
+                idx0 = idx[:, 0].astype(jnp.int32)
+                rows = tuple(jnp.take(p, idx0, axis=0) for p in db_parts)
+                return (a * dist + b,
+                        store.codec.decode_rows(rows).astype(jnp.float32))
+            fn = self._jit_cache[key] = jax.jit(run)
+        a, b = self.sim_cal
+        return fn(self.embedder.params, x, self.device_index.search_args,
+                  self.device_db.parts, jnp.float32(a), jnp.float32(b))
+
     def profile(self, batch, *, alpha_from: Optional[MemoStats] = None
                 ) -> PerfModel:
         """Offline profiler (paper §5.4): measure per-layer attention time
         and memo overhead on a calibration batch; α comes from calibration
-        stats (or a dry lookup pass)."""
+        stats (or a dry lookup pass). t_overhead is measured on the path
+        that will serve: the fused-jit lookup when the device fast path
+        is active, the host-synchronous chain otherwise."""
         cfg = self.cfg
+        fast = self._use_fast_path()
+        if fast:
+            self.store.sync()      # materialize the tier the probe times
         h = bb.embed_tokens(self.params, batch["tokens"], cfg)
         positions = jnp.broadcast_to(
             jnp.arange(batch["tokens"].shape[1], dtype=jnp.int32),
@@ -921,14 +1029,17 @@ class MemoEngine:
             t_attn = timeit_median(
                 lambda lp=lp, h=h, k=kind: self._attn_only(lp, h, k,
                                                            positions), reps=3)
-            t_over = timeit_median(
-                lambda h=h: self._embed(h), reps=3)
-            emb = np.asarray(self._embed(h))
-            t0 = time.perf_counter()
-            dist, idx = self.index.search(emb, 1)
-            self.db.get(idx[:, 0], count_reuse=False)
-            t_over += time.perf_counter() - t0
-            B = batch["tokens"].shape[0]
+            if fast:
+                t_over = timeit_median(
+                    lambda h=h: self._fused_lookup_probe(h), reps=3)
+            else:
+                t_over = timeit_median(
+                    lambda h=h: self._embed(h), reps=3)
+                emb = np.asarray(self._embed(h))
+                t0 = time.perf_counter()
+                dist, idx = self.index.search(emb, 1)
+                self.db.get(idx[:, 0], count_reuse=False)
+                t_over += time.perf_counter() - t0
             alpha = (alpha_from.per_layer_hits.get(li, 0)
                      / max(1, alpha_from.n_inputs))
             profiles[li] = LayerProfile(t_attn=t_attn, t_overhead=t_over,

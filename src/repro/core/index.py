@@ -13,6 +13,15 @@ and to SPMD, so we provide matmul-shaped indexes (DESIGN.md §2):
                     CPU/interpret, ``distributed_search`` under a mesh),
                     so the engine's embed→search→threshold→gather pipeline
                     never leaves the accelerator.
+* ``ClusteredDeviceIndex`` — the scale tier (DESIGN.md §2.6): an IVF
+                    layout of the device table. k-means centroids route
+                    each query to its ``nprobe`` nearest clusters; the
+                    candidate set (member ids + a small exact-searched
+                    overflow buffer of post-build admissions) is gathered
+                    from an int8-quantized table (per-entry f16 scales)
+                    and scored exactly. Search cost drops from O(N·D) to
+                    O((C + nprobe·m + o)·D) while staying matmul/gather
+                    shaped and traceable inside the engine's fused jit.
 
 All three share the host ``search`` API returning (distances, indices);
 the engine converts distance → predicted similarity (the Siamese loss
@@ -103,6 +112,25 @@ def _sq_dists(q, d):
     return qn - 2.0 * (q @ d.T) + dn[None, :]
 
 
+def _kmeans(x: np.ndarray, k: int, iters: int, seed: int):
+    """Plain Lloyd k-means (matmul-shaped assignment steps); returns
+    (centroids (k, dim) f32, assignment (n,) int64). Shared by the host
+    IVFIndex and the device ClusteredDeviceIndex build."""
+    n = x.shape[0]
+    k = max(1, min(k, n))
+    rng = np.random.default_rng(seed)
+    cent = x[rng.choice(n, k, replace=False)].copy()
+    for _ in range(iters):
+        d2 = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(cent)))
+        assign = d2.argmin(1)
+        for c in range(k):
+            m = assign == c
+            if m.any():
+                cent[c] = x[m].mean(0)
+    d2 = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(cent)))
+    return cent, d2.argmin(1)
+
+
 class IVFIndex:
     """k-means coarse quantizer; lists stored as a padded dense array so the
     probe search stays one gather + one matmul."""
@@ -146,17 +174,8 @@ class IVFIndex:
         x = self._embs
         n = x.shape[0]
         k = min(self.n_lists, n)
-        rng = np.random.default_rng(self.seed)
-        cent = x[rng.choice(n, k, replace=False)].copy()
-        for _ in range(self.kmeans_iters):
-            d2 = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(cent)))
-            assign = d2.argmin(1)
-            for c in range(k):
-                m = assign == c
-                if m.any():
-                    cent[c] = x[m].mean(0)
-        d2 = np.asarray(_sq_dists(jnp.asarray(x), jnp.asarray(cent)))
-        assign = d2.argmin(1)
+        cent, assign = _kmeans(x, k, self.kmeans_iters, self.seed)
+        k = cent.shape[0]
         cap = max(1, int(np.bincount(assign, minlength=k).max()))
         lists = np.full((k, cap), -1, np.int64)
         fill = np.zeros(k, np.int64)
@@ -288,13 +307,24 @@ class DeviceIndex:
             self._table = self._table.at[jnp.asarray(slots)].set(TOMBSTONE)
             self.transfer_bytes += int(slots.size * 4)
 
+    @property
+    def search_args(self):
+        """The pytree of device arrays ``search_device`` consumes —
+        jitted callers pass this as a traced argument so index growth or
+        a rebuild re-specializes (shape change → retrace) instead of
+        serving stale closures. Flat index: just the table."""
+        return self._table
+
     def search_device(self, q, k: int = 1, *, table: Optional[jnp.ndarray]
-                      = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                      = None, args=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Traceable search. q: (B, dim) device array →
         (sq_dists (B, k), idx (B, k)) device arrays — SQUARED L2, unlike the
         host API (sqrt belongs to the caller's fused sim calculation).
-        ``table`` lets a jitted caller pass the table as a traced argument
-        so index growth re-specializes instead of staleness."""
+        ``table``/``args`` let a jitted caller pass the index state as a
+        traced argument so index growth re-specializes instead of
+        staleness."""
+        if table is None and args is not None:
+            table = args
         t = self._table if table is None else table
         q = jnp.asarray(q, jnp.float32)
         if k == 1:
@@ -318,6 +348,424 @@ class DeviceIndex:
     def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
         """Host-compat API, same contract as ExactIndex.search: L2 (not
         squared) distances as numpy."""
+        d2, idx = self.search_device(jnp.asarray(q, jnp.float32), k)
+        return (np.sqrt(np.maximum(np.asarray(d2), 0.0)), np.asarray(idx))
+
+
+class ClusteredDeviceIndex(DeviceIndex):
+    """Two-stage clustered (IVF) device index — the serving tier once N
+    outgrows the exhaustive-search crossover (DESIGN.md §2.6).
+
+    The flat ``DeviceIndex`` is one (B, N) matmul: unbeatable small, but
+    O(N·D) FLOPs *and* O(N·D) streamed bytes per layer per batch. This
+    index routes first and scores second, with a layout chosen so every
+    step is a dense BLAS/MXU op — no per-query gathers (a per-query
+    (B, K, dim) candidate gather materializes more bytes than the
+    exhaustive matmul reads, and is exactly the trap that makes naive
+    IVF slower than brute force on wide batches):
+
+    * **packed clusters** — int8-quantized member vectors stored
+      contiguously per cluster: ``pvecs (C, m_pad, dim) int8`` +
+      per-entry ``pscales (C, m_pad) f16`` + slot ids ``pids (C, m_pad)
+      i32`` (−1 pads masked at score time). Cluster assignment is
+      k-means with a **balance cap** (≤ ~1.5× the mean size; spillovers
+      go to their next-nearest cluster with room), so ``m_pad`` — which
+      every probe pays for — stays near N/C.
+    * **batch-shared, vote-priority probes** — stage 1 scores centroids
+      (one (B, C) matmul) and probes a single deduplicated set for the
+      whole batch: every cluster that is some query's top-1 ranks ahead
+      of every cluster that is no one's (votes form the integer part of
+      the priority; normalized batch-min distance fills the remainder).
+      Stage 1 is therefore exact per query whenever the batch's
+      distinct top-1 clusters fit in ``nprobe`` — the serving regime,
+      where batches are homogeneous (that is why memoization hits at
+      all) — and degrades gracefully toward most-voted clusters on
+      adversarially scattered batches. The probed blocks are whole
+      contiguous rows (nprobe block copies, not B·K element gathers)
+      and stage 2 is ONE dense (B, nprobe·m_pad) matmul against the
+      dequantized candidates. Recall is measured, not assumed
+      (tests/test_codec.py property test; benchmarks/serve_compress.py).
+    * **overflow buffer** — entries admitted/overwritten since the last
+      rebuild live in a small dense side table (``ovecs/oscales/oids``,
+      power-of-2 padded) that is scored alongside every probe, so fresh
+      admissions are findable immediately. Overwritten slots also patch
+      their packed row in place (the value must be current even if the
+      cluster is now wrong — a stale pointer is at worst a redundant
+      candidate scored at its true distance). When the buffer exceeds
+      ``rebuild_frac``·N, a host k-means rebuild folds everything back
+      in (ships centroids + packed arrays — int8, NOT the f32 table).
+
+    Quantization is symmetric per entry; candidates are scored as the
+    true distance to the *quantized* point, whose error 2(d−q)·Δ
+    vanishes as q → d: exactly the memo-hit regime, where the argmin
+    must not flip. (The asymmetric exact-norm form was tried and
+    rejected: its −2q·Δ error scales with ‖q‖.)
+
+    Under a mesh, search falls back to ``distributed_search`` over a
+    lazily-cached dequantized f32 replica (the clustered stages are a
+    single-replica optimization; the pod path keeps its O(shards·B)
+    collective).
+
+    search/search_device may return duplicate ids for k>1 (an entry can
+    appear in both its packed row and the overflow buffer); top-1 — the
+    serving path — is unaffected.
+    """
+
+    def __init__(self, dim: int, *, n_clusters: Optional[int] = None,
+                 nprobe: int = 16, kmeans_iters: int = 8,
+                 rebuild_frac: float = 0.25, balance_cap: float = 1.5,
+                 seed: int = 0, interpret: Optional[bool] = None, mesh=None,
+                 db_axis: str = "data", capacity: int = 0):
+        self.dim = dim
+        self.interpret = (jax.default_backend() == "cpu"
+                          if interpret is None else interpret)
+        self.use_kernel = False      # candidate scoring is one dense matmul
+        self.block_q, self.block_n = 128, 512     # parent-API compat
+        self.mesh = mesh
+        self.db_axis = db_axis
+        self.n_clusters = n_clusters
+        self.nprobe = nprobe
+        self.kmeans_iters = kmeans_iters
+        self.rebuild_frac = rebuild_frac
+        self.balance_cap = balance_cap
+        self.seed = seed
+        self._host: Optional[np.ndarray] = None      # f32 mirror (rebuilds)
+        self._slot_loc: Optional[np.ndarray] = None  # (cap, 2) packed (c,pos)
+        self._centroids: Optional[jnp.ndarray] = None
+        self._pvecs: Optional[jnp.ndarray] = None    # (C, m_pad, dim) int8
+        self._pscales: Optional[jnp.ndarray] = None  # (C, m_pad) f16
+        self._pids: Optional[jnp.ndarray] = None     # (C, m_pad) i32
+        self._overflow: List[int] = []               # slot ids, insert order
+        self._opos: dict = {}                        # slot -> overflow pos
+        self._overflow_base = 0                      # size seeded by rebuild
+        self._ovecs: Optional[jnp.ndarray] = None
+        self._oscales: Optional[jnp.ndarray] = None
+        self._oids: Optional[jnp.ndarray] = None
+        self._mesh_table: Optional[jnp.ndarray] = None
+        self._built = False
+        self._n = 0
+        self.n_rebuilds = 0
+        self.transfer_bytes = 0
+        if capacity:
+            self._ensure_capacity(capacity)
+
+    # -------------------------------------------------------------- storage
+    @staticmethod
+    def _quant(rows: np.ndarray):
+        from repro.core.codec import _quantize_rows
+        return _quantize_rows(rows)
+
+    @property
+    def capacity(self) -> int:
+        return 0 if self._host is None else self._host.shape[0]
+
+    @property
+    def table(self) -> Optional[jnp.ndarray]:
+        """f32 replica of the live prefix (mesh fallback / debug only —
+        lazily materialized from the host mirror, NOT the hot path)."""
+        if self._host is None:
+            return None
+        if self._mesh_table is None:
+            self._mesh_table = jnp.asarray(self._host)
+            self.transfer_bytes += int(self._host.nbytes)
+        return self._mesh_table
+
+    @property
+    def _embs(self):
+        return None if self._host is None else self._host[: self._n]
+
+    def _ensure_capacity(self, need: int):
+        cap = self.capacity
+        if need <= cap:
+            return
+        new_cap = max(need, 2 * cap, 8)
+        host = np.full((new_cap, self.dim), TOMBSTONE, np.float32)
+        loc = np.full((new_cap, 2), -1, np.int32)
+        if self._host is not None and self._n:
+            host[: self._n] = self._host[: self._n]
+            loc[: self._n] = self._slot_loc[: self._n]
+        self._host = host
+        self._slot_loc = loc
+
+    # ------------------------------------------------------------ mutation
+    def add(self, embs):
+        embs = np.asarray(embs, np.float32)
+        b = embs.shape[0]
+        if b == 0:
+            return
+        self._ensure_capacity(self._n + b)
+        slots = np.arange(self._n, self._n + b)
+        self._host[slots] = embs
+        self._n += b
+        self._on_rows_changed(slots)
+
+    def assign(self, slots: Sequence[int], embs):
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size == 0:
+            return
+        self._ensure_capacity(int(slots.max()) + 1)
+        self._host[slots] = np.asarray(embs, np.float32)
+        self._n = max(self._n, int(slots.max()) + 1)
+        self._on_rows_changed(slots)
+
+    def remove(self, slots: Sequence[int]):
+        slots = np.asarray(slots).reshape(-1)
+        if slots.size == 0 or self._host is None:
+            return
+        self._host[slots] = TOMBSTONE
+        self._on_rows_changed(slots, removing=True)
+
+    def _on_rows_changed(self, slots: np.ndarray, removing: bool = False):
+        """Propagate mirror changes to the device copies. Pre-build this
+        is a no-op (the first build covers everything); post-build it
+        patches packed rows in place and routes new/overwritten slots
+        through the overflow buffer."""
+        self._mesh_table = None
+        if not self._built:
+            return
+        slots = np.asarray(slots).reshape(-1)
+        packed = slots[self._slot_loc[slots, 0] >= 0]
+        if packed.size:
+            self._patch_packed(packed)
+        changed = [int(s) for s in slots if int(s) in self._opos]
+        if not removing:
+            for s in slots:
+                s = int(s)
+                if s not in self._opos:
+                    self._opos[s] = len(self._overflow)
+                    self._overflow.append(s)
+                    changed.append(s)
+        if changed:
+            self._sync_overflow(changed=changed)
+        # trigger on post-rebuild GROWTH only: the rebuild itself seeds
+        # the buffer with balance-cap spills, which must not re-trigger
+        grown = len(self._overflow) - getattr(self, "_overflow_base", 0)
+        if grown > max(8, int(self.rebuild_frac * max(1, self._n))):
+            self.rebuild()
+
+    def _patch_packed(self, slots: np.ndarray):
+        """Scatter current (possibly tombstoned) rows into their packed
+        positions: values stay truthful even when the cluster is stale."""
+        from repro.core.database import pad_delta_pow2
+        locs = self._slot_loc[slots]                       # (k, 2)
+        m_pad = self._pvecs.shape[1]
+        flat = (locs[:, 0].astype(np.int64) * m_pad + locs[:, 1])
+        codes, scales = self._quant(self._host[slots])
+        flat, codes = pad_delta_pow2(flat, codes)
+        _, scales = pad_delta_pow2(self._slot_loc[slots][:, 0], scales)
+        fl = jnp.asarray(flat)
+        C = self._pvecs.shape[0]
+        self._pvecs = self._pvecs.reshape(C * m_pad, self.dim).at[fl].set(
+            jnp.asarray(codes)).reshape(C, m_pad, self.dim)
+        self._pscales = self._pscales.reshape(C * m_pad).at[fl].set(
+            jnp.asarray(scales)).reshape(C, m_pad)
+        self.transfer_bytes += int(codes.nbytes + scales.nbytes
+                                   + flat.size * 4)
+
+    def _sync_overflow(self, changed=None):
+        """Ship the overflow side table (pow2-padded). A full re-upload
+        happens only when the padded capacity changes (or on rebuild,
+        ``changed=None``); otherwise exactly the changed positions move
+        as a padded scatter — the same delta discipline as every other
+        device array in the sync path."""
+        from repro.core.database import pad_delta_pow2
+        ids = np.asarray(self._overflow, np.int64)
+        p = 1
+        while p < max(1, ids.size):
+            p *= 2
+        if changed is None or self._oids is None or self._oids.shape[0] != p:
+            vecs = np.zeros((p, self.dim), np.float32)
+            if ids.size:
+                vecs[: ids.size] = self._host[ids]
+            codes, scales = self._quant(vecs)
+            oids = np.full(p, -1, np.int32)
+            oids[: ids.size] = ids
+            self._ovecs = jnp.asarray(codes)
+            self._oscales = jnp.asarray(scales)
+            self._oids = jnp.asarray(oids)
+            self.transfer_bytes += int(codes.nbytes + scales.nbytes
+                                       + oids.nbytes)
+            return
+        pos = sorted({self._opos[int(s)] for s in changed
+                      if int(s) in self._opos})
+        if not pos:
+            return
+        pos = np.asarray(pos, np.int64)
+        slot_ids = ids[pos]
+        codes, scales = self._quant(self._host[slot_ids])
+        pos_p, codes = pad_delta_pow2(pos, codes)
+        _, scales = pad_delta_pow2(pos, scales)
+        _, oid_vals = pad_delta_pow2(pos, slot_ids.astype(np.int32))
+        pl = jnp.asarray(pos_p)
+        self._ovecs = self._ovecs.at[pl].set(jnp.asarray(codes))
+        self._oscales = self._oscales.at[pl].set(jnp.asarray(scales))
+        self._oids = self._oids.at[pl].set(jnp.asarray(oid_vals))
+        self.transfer_bytes += int(codes.nbytes + scales.nbytes
+                                   + oid_vals.nbytes + pos_p.size * 4)
+
+    # ------------------------------------------------------------- build
+    def _live_slots(self) -> np.ndarray:
+        if self._host is None or self._n == 0:
+            return np.zeros(0, np.int64)
+        rows = self._host[: self._n]
+        return np.flatnonzero(np.abs(rows[:, 0]) < TOMBSTONE / 2)
+
+    def rebuild(self):
+        """Host k-means over the live mirror with balance-capped
+        assignment; ships centroids + packed int8 arrays."""
+        live = self._live_slots()
+        if live.size == 0:
+            # degenerate-but-searchable: one tombstone centroid, an empty
+            # packed row, an empty overflow buffer — every candidate is
+            # id −1, so searches return BIG distances (a guaranteed miss)
+            # instead of crashing; the flat index handles the same state
+            # via its TOMBSTONE rows
+            self._centroids = jnp.full((1, self.dim), TOMBSTONE, jnp.float32)
+            self._pvecs = jnp.zeros((1, 1, self.dim), jnp.int8)
+            self._pscales = jnp.zeros((1, 1), jnp.float16)
+            self._pids = jnp.full((1, 1), -1, jnp.int32)
+            if self._slot_loc is not None:
+                self._slot_loc[:, :] = -1
+            self._overflow = []
+            self._opos = {}
+            self._overflow_base = 0
+            self._sync_overflow()
+            self._built = True
+            return
+        x = self._host[live]
+        k = self.n_clusters or max(1, int(np.sqrt(live.size)))
+        cent, assign = _kmeans(x, k, self.kmeans_iters, self.seed)
+        # balance: every probe pays for m_pad, so one fat cluster taxes
+        # them all. Over-cap clusters are recursively 2-means SPLIT (the
+        # centroid count adapts to the data's true granularity); the few
+        # entries still over cap afterwards are NOT exiled to a far
+        # cluster (a spilled entry becomes unfindable exactly when its
+        # query probes the right cluster — measured as a hard recall
+        # cliff) — they go to the always-scored overflow buffer.
+        cap = max(1, int(np.ceil(self.balance_cap * live.size / k)))
+        for _ in range(4):
+            sizes = np.bincount(assign, minlength=cent.shape[0])
+            fat = np.flatnonzero(sizes > cap)
+            if fat.size == 0:
+                break
+            for c in fat:
+                m = np.flatnonzero(assign == c)
+                sub_c, sub_a = _kmeans(x[m], 2, 4, self.seed + int(c) + 1)
+                if sub_c.shape[0] < 2:
+                    continue
+                new_id = cent.shape[0]
+                cent = np.concatenate([cent, sub_c[1:]], 0)
+                cent[c] = sub_c[0]
+                assign[m[sub_a == 1]] = new_id
+        k = cent.shape[0]
+        top1 = assign
+        fill = np.zeros(k, np.int64)
+        assign = np.full(live.size, -1, np.int64)
+        spills: List[int] = []
+        for i in range(live.size):
+            c = top1[i]
+            if fill[c] < cap:
+                assign[i] = c
+                fill[c] += 1
+            else:
+                spills.append(i)
+        m_pad = max(1, int(fill.max()))
+        pvecs = np.zeros((k, m_pad, self.dim), np.float32)
+        pids = np.full((k, m_pad), -1, np.int32)
+        pos = np.zeros(k, np.int64)
+        self._slot_loc[:, :] = -1
+        for i, (slot, c) in enumerate(zip(live, assign)):
+            if c < 0:
+                continue
+            p = pos[c]
+            pvecs[c, p] = x[i]
+            pids[c, p] = slot
+            self._slot_loc[slot] = (c, p)
+            pos[c] += 1
+        codes, scales = self._quant(pvecs.reshape(k * m_pad, self.dim))
+        self._pvecs = jnp.asarray(codes.reshape(k, m_pad, self.dim))
+        self._pscales = jnp.asarray(scales.reshape(k, m_pad))
+        self._pids = jnp.asarray(pids)
+        self._centroids = jnp.asarray(cent)
+        self._overflow = [int(live[i]) for i in spills]
+        self._opos = {s: j for j, s in enumerate(self._overflow)}
+        self._overflow_base = len(self._overflow)
+        self._sync_overflow()
+        self.transfer_bytes += int(cent.nbytes + codes.nbytes
+                                   + scales.nbytes + pids.nbytes)
+        self._built = True
+        self.n_rebuilds += 1
+
+    @property
+    def search_args(self):
+        """(centroids, pvecs, pscales, pids, ovecs, oscales, oids) — the
+        traced pytree; rebuilds/growth change shapes and retrace the
+        consumer jit automatically. Under a mesh the args ARE the f32
+        table (the mesh branch of ``search_device`` consumes it as a
+        traced value — closing over ``self.table`` at trace time would
+        bake a stale constant into the caller's jit)."""
+        if self.mesh is not None:
+            return self.table
+        if not self._built:
+            self.rebuild()
+        return (self._centroids, self._pvecs, self._pscales, self._pids,
+                self._ovecs, self._oscales, self._oids)
+
+    # ------------------------------------------------------------- search
+    def search_device(self, q, k: int = 1, *, table=None, args=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        q = jnp.asarray(q, jnp.float32)
+        if self.mesh is not None:
+            # args is the traced f32 table here (see search_args); the
+            # clustered stages are a single-replica optimization
+            t = (args if args is not None and not isinstance(args, tuple)
+                 else (table if table is not None else self.table))
+            if k == 1:
+                from repro.core.database import distributed_search
+                d2, idx = distributed_search(t, q, self.mesh,
+                                             db_axis=self.db_axis)
+                return d2[:, None], idx[:, None]
+            neg, idx = jax.lax.top_k(-_sq_dists(q, t), k)
+            return -neg, idx.astype(jnp.int32)
+        if args is None:
+            args = self.search_args
+        centroids, pvecs, pscales, pids, ovecs, oscales, oids = args
+        C, m_pad, dim = pvecs.shape
+        # stage 1: one (B, C) matmul → vote-priority probes. Every
+        # cluster that is SOME query's top-1 outranks every cluster that
+        # is no one's (votes are the integer part of the priority, the
+        # normalized batch-min distance breaks ties below 1.0) — so as
+        # long as the batch's distinct top-1 clusters fit in nprobe,
+        # stage 1 is exact for every query; leftover probes go to the
+        # next-nearest clusters batch-wide.
+        d2c = _sq_dists(q, centroids)
+        nprobe = min(self.nprobe, C)
+        votes = jnp.zeros((C,), jnp.float32).at[jnp.argmin(d2c, 1)].add(1.0)
+        dmin = jnp.min(d2c, axis=0)
+        priority = votes - dmin / (jnp.max(dmin) + 1e-9)
+        _, probes = jax.lax.top_k(priority, nprobe)                # (P,)
+        # stage 2: P contiguous block copies + the overflow side table,
+        # dequantized once, scored with ONE dense (B, K) matmul
+        vec_blocks = jnp.take(pvecs, probes, axis=0).reshape(-1, dim)
+        sc_blocks = jnp.take(pscales, probes, axis=0).reshape(-1)
+        id_blocks = jnp.take(pids, probes, axis=0).reshape(-1)
+        cand_vecs = jnp.concatenate([vec_blocks, ovecs], 0)
+        cand_sc = jnp.concatenate([sc_blocks, oscales], 0)
+        cand_ids = jnp.concatenate([id_blocks, oids], 0)           # (K,)
+        vecs = cand_vecs.astype(jnp.float32) * cand_sc.astype(
+            jnp.float32)[:, None]
+        d2 = _sq_dists(q, vecs)                                    # (B, K)
+        # BIG (not inf): downstream sqrt/calibration must stay NaN-free
+        d2 = jnp.where((cand_ids >= 0)[None, :], d2, 1e30)
+        if k == 1:
+            best = jnp.argmin(d2, axis=-1)
+            idx = jnp.take(cand_ids, best).astype(jnp.int32)
+            return jnp.take_along_axis(d2, best[:, None], -1), idx[:, None]
+        neg, pos = jax.lax.top_k(-d2, k)
+        return -neg, jnp.take(cand_ids, pos.reshape(-1)).reshape(
+            pos.shape).astype(jnp.int32)
+
+    def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
         d2, idx = self.search_device(jnp.asarray(q, jnp.float32), k)
         return (np.sqrt(np.maximum(np.asarray(d2), 0.0)), np.asarray(idx))
 

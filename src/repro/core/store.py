@@ -28,6 +28,13 @@ slot-aligned host index) and the device tier (`DeviceDB` + `DeviceIndex`)
 The engine calls ``sync`` once per batch boundary; because deltas are
 host→device pushes of staged numpy rows, the fast path's
 zero-per-layer-host-sync invariant (tests/test_fastpath.py) is untouched.
+
+Compression is first-class (DESIGN.md §2.6): the ``codec`` selects the
+APM storage format for BOTH tiers (f16 | int8 | lowrank — see
+``core/codec.py``), byte budgets and sync receipts are denominated in
+codec-true bytes, and the device index flips from exhaustive to the
+clustered (IVF) layout once the entry count crosses
+``cluster_crossover`` (``device_index_kind="auto"``).
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ import numpy as np
 
 from repro.core.database import AttentionDB, DeviceDB
 from repro.core.index import (
-    TOMBSTONE, DeviceIndex, ExactIndex, IVFIndex)
+    TOMBSTONE, ClusteredDeviceIndex, DeviceIndex, ExactIndex, IVFIndex)
 
 
 @dataclass
@@ -64,7 +71,10 @@ class MemoStore:
                  index_kind: str = "exact", budget_bytes: Optional[int] = None,
                  capacity: int = 64, interpret: Optional[bool] = None,
                  device_slack: float = 1.0, n_lists: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, codec: str = "f16", apm_rank: Optional[int] = None,
+                 device_index_kind: str = "auto",
+                 cluster_crossover: int = 4096, nprobe: int = 16,
+                 n_clusters: Optional[int] = None):
         self.apm_shape = tuple(apm_shape)
         self.embed_dim = embed_dim
         self.index_kind = index_kind
@@ -72,7 +82,13 @@ class MemoStore:
         self.device_slack = device_slack
         self._interpret = interpret
         self._mesh = mesh
-        self.db = AttentionDB(self.apm_shape, capacity=capacity)
+        # device-tier compression + search scaling (DESIGN.md §2.6)
+        self.device_index_kind = device_index_kind  # flat|clustered|auto
+        self.cluster_crossover = cluster_crossover  # auto: IVF when n >= this
+        self.nprobe = nprobe
+        self.n_clusters = n_clusters
+        self.db = AttentionDB(self.apm_shape, capacity=capacity,
+                              codec=codec, rank=apm_rank)
         if index_kind == "ivf":
             self.index = IVFIndex(embed_dim, n_lists=n_lists or 8)
         elif index_kind == "device":
@@ -98,8 +114,20 @@ class MemoStore:
 
     # ------------------------------------------------------------ accounting
     @property
+    def codec(self):
+        return self.db.codec
+
+    @property
     def entry_nbytes(self) -> int:
+        """Codec-true bytes per entry (compressed APM payload + the f32
+        embedding row) — what the byte budget and the delta-vs-full
+        receipts are denominated in."""
         return self.db.entry_nbytes + self.embed_dim * 4
+
+    @property
+    def logical_entry_nbytes(self) -> int:
+        """What an uncompressed f16 entry would cost (receipt baseline)."""
+        return self.db.logical_entry_nbytes + self.embed_dim * 4
 
     @property
     def live_count(self) -> int:
@@ -216,6 +244,23 @@ class MemoStore:
         return evicted
 
     # ---------------------------------------------------------------- sync
+    def _device_index_kind(self, n: int) -> str:
+        """flat | clustered. ``auto`` flips to the IVF index once the
+        entry count crosses ``cluster_crossover`` — below it, exhaustive
+        search is one well-shaped matmul and the two-stage overhead
+        (centroid matmul + candidate gather) doesn't pay (DESIGN.md
+        §2.6); above it, search cost drops ~N/(nprobe·m)."""
+        if self.device_index_kind == "auto":
+            return ("clustered" if n >= self.cluster_crossover else "flat")
+        return self.device_index_kind
+
+    @staticmethod
+    def _device_index_kind_of(index) -> Optional[str]:
+        if index is None:
+            return None
+        return ("clustered" if isinstance(index, ClusteredDeviceIndex)
+                else "flat")
+
     def _absorb_external_growth(self) -> None:
         """Backstop for out-of-band mutation (code that still calls
         ``db.add``/``index.add`` directly): any arena prefix growth since
@@ -251,13 +296,26 @@ class MemoStore:
         need_full = (force_full or self.device_db is None
                      or n > self.device_db.capacity
                      or self.device_index is None
-                     or n > self.device_index.capacity)
+                     or n > self.device_index.capacity
+                     or self._device_index_kind(n)
+                     != self._device_index_kind_of(self.device_index))
         if need_full:
             cap = n + max(8, int(n * self.device_slack))
             self.device_db = DeviceDB.from_host(self.db, capacity=cap)
-            di = DeviceIndex(self.embed_dim, interpret=self._interpret,
-                             capacity=cap, mesh=self._mesh)
+            if self._device_index_kind(n) == "clustered":
+                di = ClusteredDeviceIndex(
+                    self.embed_dim, nprobe=self.nprobe,
+                    n_clusters=self.n_clusters, interpret=self._interpret,
+                    capacity=cap, mesh=self._mesh)
+            else:
+                di = DeviceIndex(self.embed_dim, interpret=self._interpret,
+                                 capacity=cap, mesh=self._mesh)
             di.add(self._embs_host[:n])
+            if isinstance(di, ClusteredDeviceIndex):
+                # build eagerly: the k-means belongs on the sync (batch)
+                # boundary, not inside the first serving dispatch, and
+                # the full-sync receipt must include the shipped clusters
+                di.rebuild()
             if isinstance(self.index, DeviceIndex):
                 # the device table IS the host-tier index: swap in the
                 # re-materialized one so both roles stay one object
@@ -271,9 +329,20 @@ class MemoStore:
         else:
             slots = np.asarray(sorted(self._dirty), np.int64)
             slots = slots[slots < n]
-            shipped = self.device_db.update(slots, self.db._arena[slots])
+            # ship the COMPRESSED rows: delta bytes shrink by the codec
+            # ratio, same as the resident arenas
+            shipped = self.device_db.update(slots, self.db.parts_at(slots))
             b0 = self.device_index.transfer_bytes
-            self.device_index.assign(slots, self._embs_host[slots])
+            # evicted slots go through remove(), not assign(): for the
+            # clustered index an assign() would append the tombstone row
+            # to the always-scored overflow buffer (and count toward the
+            # rebuild trigger); remove() tombstones in place
+            dead = slots[~self.db._live[slots]]
+            live = slots[self.db._live[slots]]
+            if live.size:
+                self.device_index.assign(live, self._embs_host[live])
+            if dead.size:
+                self.device_index.remove(dead)
             shipped += self.device_index.transfer_bytes - b0
             self.stats.n_delta_syncs += 1
             self.stats.bytes_delta += shipped

@@ -14,6 +14,12 @@ prefetched:
 
 Scalar prefetch is what lets the gather index be data-dependent per
 sequence while the grid stays static.
+
+Quantized DB (DESIGN.md §2.6): with ``db_scales`` the database holds
+int8 codes + per-row f16 scales (the ``int8`` APM codec); the kernel
+gathers the int8 tile (half the HBM→VMEM bytes) plus its (block_q,)
+scale sliver and dequantizes IN VMEM immediately before the APM·V
+matmul — the f16 APM never exists anywhere, on either memory level.
 """
 from __future__ import annotations
 
@@ -27,9 +33,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, o_ref,
-                 m_scr, l_scr, acc_scr, *, scale, causal, window, block_q,
-                 block_k, seq_len):
+def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, *rest,
+                 scale, causal, window, block_q, block_k, seq_len,
+                 quantized=False):
+    if quantized:      # static: the int8 variant carries a scale sliver
+        sc_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+        sc_ref = None
     b = pl.program_id(0)
     iq, ik = pl.program_id(2), pl.program_id(3)
     hit = hit_ref[b] == 1
@@ -45,6 +56,10 @@ def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, o_ref,
     @pl.when(hit)
     def _memo_path():
         apm = apm_ref[0, 0].astype(jnp.float32)          # (block_q, block_k)
+        if quantized:
+            # fused dequant: int8 codes × per-row scale, in VMEM, right
+            # before the APM·V matmul
+            apm = apm * sc_ref[0, 0].astype(jnp.float32)[:, None]
         acc_scr[...] += jax.lax.dot_general(
             apm, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -82,11 +97,15 @@ def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, causal=True,
-                        window=None, block_q=128, block_k=128,
+def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, db_scales=None,
+                        causal=True, window=None, block_q=128, block_k=128,
                         interpret=False):
     """q: (B, H, S, d); k, v: (B, Hkv, S, d); db_apm: (N, H, S, S) —
-    the device-resident attention DB; hit_idx, hit: (B,) int32."""
+    the device-resident attention DB; hit_idx, hit: (B,) int32.
+
+    ``db_scales`` (N, H, S) f16 switches the DB to the int8 codec:
+    ``db_apm`` holds int8 codes and each gathered tile is dequantized in
+    VMEM against its per-row scale sliver (fused-dequant gather)."""
     B, H, S, d = q.shape
     Hkv = k.shape[1]
     group = H // Hkv
@@ -94,25 +113,34 @@ def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, causal=True,
     block_k = min(block_k, S)
     assert S % block_q == 0 and S % block_k == 0, "pad upstream"
     nq, nk = S // block_q, S // block_k
+    quantized = db_scales is not None
 
     kernel = functools.partial(
         _memo_kernel, scale=d ** -0.5, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, seq_len=S)
+        block_q=block_q, block_k=block_k, seq_len=S, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, iq, ik, *_: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
+        # the DB gather: data-dependent entry via scalar prefetch
+        pl.BlockSpec((1, 1, block_q, block_k),
+                     lambda b, h, iq, ik, hit_idx, hit:
+                     (hit_idx[b], h, iq, ik)),
+    ]
+    operands = [q, k, v, db_apm]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, iq, ik, hit_idx, hit:
+                         (hit_idx[b], h, iq)))
+        operands.append(db_scales)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d),
-                         lambda b, h, iq, ik, *_: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
-            # the DB gather: data-dependent entry via scalar prefetch
-            pl.BlockSpec((1, 1, block_q, block_k),
-                         lambda b, h, iq, ik, hit_idx, hit:
-                         (hit_idx[b], h, iq, ik)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, d),
                                lambda b, h, iq, ik, *_: (b, h, iq, 0)),
         scratch_shapes=[
@@ -125,4 +153,4 @@ def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, causal=True,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(hit_idx.astype(jnp.int32), hit.astype(jnp.int32), q, k, v, db_apm)
+    )(hit_idx.astype(jnp.int32), hit.astype(jnp.int32), *operands)

@@ -10,9 +10,9 @@ from repro.kernels.memo_attention.kernel import memo_attention_bhsd
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
-                                   "interpret"))
-def _memo_attention_jit(q, k, v, db_apm, hit_idx, hit, *, causal, window,
-                        block_q, block_k, interpret):
+                                   "interpret", "has_scales"))
+def _memo_attention_jit(q, k, v, db_apm, db_scales, hit_idx, hit, *, causal,
+                        window, block_q, block_k, interpret, has_scales):
     B, S, H, dh = q.shape
     Hkv = k.shape[2]
     qt = q.transpose(0, 2, 1, 3)
@@ -20,20 +20,28 @@ def _memo_attention_jit(q, k, v, db_apm, hit_idx, hit, *, causal, window,
     vt = v.transpose(0, 2, 1, 3)
     hit_idx = jnp.where(hit.astype(bool), hit_idx, 0)
     out = memo_attention_bhsd(qt, kt, vt, db_apm, hit_idx, hit,
+                              db_scales=db_scales if has_scales else None,
                               causal=causal, window=window,
                               block_q=block_q, block_k=block_k,
                               interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 
-def memo_attention(q, k, v, db_apm, hit_idx, hit, *, causal=True, window=None,
-                   block_q=128, block_k=128, interpret=None):
+def memo_attention(q, k, v, db_apm, hit_idx, hit, *, db_scales=None,
+                   causal=True, window=None, block_q=128, block_k=128,
+                   interpret=None):
     """Model layout: q (B,S,H,dh), k/v (B,S,Hkv,dh), db_apm (N,H,S,S),
     hit_idx/hit (B,). Misses clamp the gather index to 0 (the tile fetch is
-    speculative; its result is ignored). ``interpret=None`` resolves per
-    backend: Pallas interpreter on CPU, compiled on TPU."""
+    speculative; its result is ignored). With ``db_scales`` (N,H,S) the DB
+    is int8-quantized (the ``int8`` APM codec) and tiles dequantize in
+    VMEM — the fused-dequant gather (DESIGN.md §2.6). ``interpret=None``
+    resolves per backend: Pallas interpreter on CPU, compiled on TPU."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    return _memo_attention_jit(q, k, v, db_apm, hit_idx, hit, causal=causal,
-                               window=window, block_q=block_q,
-                               block_k=block_k, interpret=interpret)
+    has_scales = db_scales is not None
+    if db_scales is None:      # static placeholder keeps the jit signature
+        db_scales = jnp.zeros((1, 1, 1), jnp.float16)
+    return _memo_attention_jit(q, k, v, db_apm, db_scales, hit_idx, hit,
+                               causal=causal, window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret,
+                               has_scales=has_scales)

@@ -5,6 +5,17 @@ import jax
 import jax.numpy as jnp
 
 
+def memo_attention_q8_ref(q, k, v, db_codes, db_scales, hit_idx, hit, *,
+                          causal=True, window=None):
+    """Oracle for the fused-dequant (int8 codec) kernel variant: dequantize
+    the whole DB up front, then run the f16 oracle — what the kernel must
+    match while never materializing the dequantized DB itself."""
+    db = (db_codes.astype(jnp.float32)
+          * db_scales.astype(jnp.float32)[..., None])
+    return memo_attention_ref(q, k, v, db, hit_idx, hit, causal=causal,
+                              window=window)
+
+
 def memo_attention_ref(q, k, v, db_apm, hit_idx, hit, *, causal=True,
                        window=None):
     """q: (B,H,S,d); k,v: (B,Hkv,S,d); db_apm: (N,H,S,S); hit_idx/hit: (B,)."""

@@ -28,6 +28,20 @@ from repro.models import build_model
 from repro.train.checkpoint import load_checkpoint
 
 
+def _autotune_threshold(eng, corpus, args, tag):
+    """Paper Table 2 levels are per-model: autotune from a FRESH sample
+    of the calibration distribution (percentiles of predicted top-1
+    similarity). Querying with the calibration batches themselves would
+    give degenerate zero-distance percentiles, and the stock 0.97
+    threshold can sit above every predicted sim (α = 0 at every layer,
+    starving both serving and the selective perf model)."""
+    levels = eng.suggest_levels(
+        [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}])
+    eng.mc.threshold = levels.get(args.level, eng.mc.threshold)
+    print(f"[{tag}] autotuned threshold ({args.level}): "
+          f"{eng.mc.threshold:.3f}")
+
+
 def _run_phase(eng, corpus, n_batches, batch_size, st):
     """Serve one phase; returns (per-batch hit rates, ms/batch list)."""
     rates, times = [], []
@@ -125,6 +139,19 @@ def main():
                     choices=["select", "bucket", "kernel"])
     ap.add_argument("--index", default="exact",
                     choices=["exact", "ivf", "device"])
+    ap.add_argument("--codec", default="int8",
+                    choices=["f16", "int8", "lowrank"],
+                    help="APM storage codec for both memo tiers "
+                         "(DESIGN.md §2.6)")
+    ap.add_argument("--apm-rank", type=int, default=None,
+                    help="lowrank codec rank (default L//8)")
+    ap.add_argument("--device-index", default="auto",
+                    choices=["auto", "flat", "clustered"],
+                    help="device-tier search: exhaustive matmul vs "
+                         "two-stage clustered (IVF); auto flips at "
+                         "--cluster-crossover entries")
+    ap.add_argument("--cluster-crossover", type=int, default=4096)
+    ap.add_argument("--nprobe", type=int, default=16)
     ap.add_argument("--no-memo", action="store_true")
     ap.add_argument("--no-fast-path", action="store_true",
                     help="force the host-synchronous serving path "
@@ -175,6 +202,9 @@ def main():
         args.level, 0.97)
     eng = MemoEngine(model, params, MemoConfig(
         threshold=thr, mode=args.mode, index_kind=args.index,
+        apm_codec=args.codec, apm_rank=args.apm_rank,
+        device_index=args.device_index,
+        cluster_crossover=args.cluster_crossover, nprobe=args.nprobe,
         device_fast_path=False if args.no_fast_path else None,
         budget_mb=args.budget_mb if args.online else None,
         admit_every=args.admit_every,
@@ -183,21 +213,15 @@ def main():
              for _ in range(args.calib_batches)]
     t0 = time.perf_counter()
     eng.build(jax.random.PRNGKey(1), calib)
+    store = eng.store
     print(f"[serve] db: {len(eng.db)} entries, "
-          f"{eng.db.nbytes/1e6:.1f} MB, build {time.perf_counter()-t0:.1f}s")
+          f"{eng.db.nbytes/1e6:.1f} MB ({args.codec}: "
+          f"{store.entry_nbytes/store.logical_entry_nbytes:.2f}x f16 "
+          f"bytes/entry), build {time.perf_counter()-t0:.1f}s")
 
     if args.online:
         if args.threshold is None:
-            # paper Table 2 levels are per-model: autotune from a FRESH
-            # sample of the calibration distribution (percentiles of
-            # predicted top-1 similarity) so phase 0 starts at a
-            # meaningful hit rate — querying with the calibration batches
-            # themselves would give degenerate zero-distance percentiles
-            levels = eng.suggest_levels(
-                [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}])
-            eng.mc.threshold = levels.get(args.level, thr)
-            print(f"[online] autotuned threshold ({args.level}): "
-                  f"{eng.mc.threshold:.3f}")
+            _autotune_threshold(eng, corpus, args, "online")
         if args.mode == "select":
             print("[online] note: select mode is the host reference path; "
                   "admission still works but the fast path is bucket/kernel")
@@ -206,8 +230,14 @@ def main():
 
     active = None
     if args.selective:
+        if args.threshold is None:
+            _autotune_threshold(eng, corpus, args, "serve")
+        # profiles t_overhead on the path that will serve (the fused-jit
+        # lookup on the fast path); infer() below restricts memoization
+        # to the layers whose predicted benefit is positive
         pm = eng.profile(calib[0])
         active = pm.active_layers()
+        print(pm.summary())
         print("[serve] selective memo active layers:", active)
 
     lat_memo, lat_plain = [], []

@@ -37,14 +37,32 @@ def _install_hypothesis_shim():
 
     def given(**strats):
         def deco(fn):
-            n = getattr(fn, "_shim_max_examples", 10)
+            import inspect
 
-            # NOT functools.wraps: pytest must see a fixture-free signature,
-            # not the strategy parameter names of the wrapped test
-            def wrapper():
+            # parameters NOT drawn from strategies (pytest.mark.parametrize
+            # / fixtures) pass straight through; pytest must see exactly
+            # those in the signature — not the strategy names, hence the
+            # exec-built wrapper instead of functools.wraps
+            passthrough = [p for p in inspect.signature(fn).parameters
+                           if p not in strats]
+
+            def body(*args):
+                # read max_examples lazily: @settings usually sits ABOVE
+                # @given, so it decorates (and tags) this wrapper
+                n = getattr(wrapper, "_shim_max_examples", 10)
                 rng = np.random.default_rng(0)
+                kw = dict(zip(passthrough, args))
                 for _ in range(n):
-                    fn(**{k: s.draw(rng) for k, s in strats.items()})
+                    fn(**kw, **{k: s.draw(rng) for k, s in strats.items()})
+
+            if passthrough:
+                ns = {"body": body}
+                argstr = ", ".join(passthrough)
+                exec(f"def wrapper({argstr}):\n    return body({argstr})", ns)
+                wrapper = ns["wrapper"]
+            else:
+                def wrapper():
+                    return body()
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             wrapper.__module__ = fn.__module__

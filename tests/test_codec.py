@@ -1,0 +1,414 @@
+"""Compressed memo tiers (ISSUE 3 / DESIGN.md §2.6).
+
+Covers: codec round-trip error bounds (int8 per-row scale bound, lowrank
+truncation-energy bound), host/device decode parity (bit-exact for int8),
+quantized-store serve parity vs the select reference under every codec
+(select and the fast paths decode the SAME stored entry, so they must
+agree), the int8 fused-dequant kernel path end to end, the
+ClusteredDeviceIndex recall@1 ≥ 0.95 property vs the ExactIndex oracle,
+the flat→clustered crossover in MemoStore.sync, and the
+one-barrier-per-batch invariant on the quantized + clustered fast path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st_h
+
+import repro.core.engine as engine_mod
+from repro.core.codec import F16Codec, Int8Codec, LowRankCodec, get_codec
+from repro.core.index import ClusteredDeviceIndex, ExactIndex, recall_at_1
+from repro.core.store import MemoStore
+
+CODECS = ["f16", "int8", "lowrank"]
+
+
+def _rand_apms(seed, n=8, h=2, l=16):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, h, l, l))
+    e = np.exp(x - x.max(-1, keepdims=True))
+    return (e / e.sum(-1, keepdims=True)).astype(np.float16)
+
+
+# ------------------------------------------------------------ round trips
+
+def test_int8_roundtrip_error_bounded_by_row_scale():
+    """|decode(encode(x)) − x| ≤ the per-row quantization step (scale):
+    half a step from rounding plus f16 scale storage slack."""
+    apms = _rand_apms(0)
+    c = Int8Codec(apms.shape[1:])
+    codes, scales = c.encode(apms)
+    dec = c.decode((codes, scales)).astype(np.float32)
+    err = np.abs(dec - apms.astype(np.float32))
+    bound = scales.astype(np.float32)[..., None]        # one full step
+    assert (err <= bound + 1e-6).all()
+    # softmax rows have amax ≤ 1 → absolute error ≤ 1/127 everywhere
+    assert err.max() <= 1.0 / 127 + 1e-6
+    # decoded rows still ~sum to 1 (the memo kernel's no-renorm shortcut)
+    assert np.abs(dec.sum(-1) - 1.0).max() < 0.05
+
+
+def test_int8_decode_bit_parity_host_vs_device():
+    """The host (numpy) and device (jnp) decoders perform the identical
+    f32-multiply → f16-round sequence — bit-for-bit equal, which is what
+    keeps select vs fast-path logits parity EXACT under compression."""
+    apms = _rand_apms(1)
+    c = Int8Codec(apms.shape[1:])
+    parts = c.encode(apms)
+    host = c.decode(parts)
+    dev = np.asarray(c.decode_rows(tuple(jnp.asarray(p) for p in parts)))
+    np.testing.assert_array_equal(host, dev)
+
+
+def test_lowrank_roundtrip_error_bounded_by_truncation_energy():
+    """‖APM − decode‖_F per (entry, head) is bounded by the discarded
+    singular mass (the rank-r optimum) plus int8 quantization slack."""
+    apms = _rand_apms(2)
+    c = LowRankCodec(apms.shape[1:], rank=6)
+    dec = c.decode(c.encode(apms)).astype(np.float32)
+    x = apms.astype(np.float32)
+    _, s, _ = np.linalg.svd(x)
+    tail = np.sqrt((s[..., c.rank:] ** 2).sum(-1))      # (n, h)
+    frob = np.sqrt(((dec - x) ** 2).sum((-1, -2)))
+    # quant slack: per-row step ≤ amax/127 over L·r elements per factor
+    assert (frob <= tail + 0.35).all(), (frob.max(), tail.max())
+
+
+@pytest.mark.parametrize("codec,atol", [("f16", 0.0), ("int8", 2e-6),
+                                        ("lowrank", 5e-3)])
+def test_roundtrip_is_stable(codec, atol):
+    """Re-encoding a decoded value doesn't drift: exactly reproduced for
+    f16/int8 (rounding is a projection), within one quantization step for
+    lowrank (the SVD of U·Vᵀ re-rotates the factors before requantizing)
+    — admissions re-captured from served outputs stay put."""
+    apms = _rand_apms(3)
+    c = get_codec(codec, apms.shape[1:])
+    dec1 = c.decode(c.encode(apms))
+    dec2 = c.decode(c.encode(dec1))
+    np.testing.assert_allclose(dec2.astype(np.float32),
+                               dec1.astype(np.float32), atol=atol, rtol=0)
+
+
+def test_codec_bytes_ratios():
+    """The acceptance bookkeeping: codec-true entry bytes vs the logical
+    f16 entry. int8 ≈ 0.5× + scales; lowrank(r) ≈ (r+2)/L."""
+    h, l = 4, 64
+    base = h * l * l * 2
+    assert F16Codec((h, l, l)).entry_nbytes == base
+    i8 = Int8Codec((h, l, l)).entry_nbytes
+    assert i8 == h * l * l + h * l * 2
+    assert 0.5 <= i8 / base <= 0.55
+    lr = LowRankCodec((h, l, l), rank=8).entry_nbytes
+    assert lr == 2 * (h * l * 8 + h * l * 2)
+    assert lr / base <= 0.30                 # the compressed-tier target
+
+
+# ------------------------------------------------- store-level integration
+
+@pytest.mark.parametrize("codec", ["int8", "lowrank"])
+def test_store_roundtrip_and_sync_ship_compressed_bytes(codec):
+    apm_shape, dim = (2, 16, 16), 8
+    s = MemoStore(apm_shape, dim, capacity=4, codec=codec)
+    apms = _rand_apms(4, n=6, h=2, l=16)
+    rng = np.random.default_rng(4)
+    embs = rng.normal(0, 0.01, (6, dim)).astype(np.float32)
+    embs[:, 0] += 10 * np.arange(1, 7)
+    slots = s.admit(apms, embs)
+    c = s.codec
+    np.testing.assert_allclose(
+        s.db.get(slots, count_reuse=False).astype(np.float32),
+        c.decode(c.encode(apms)).astype(np.float32), atol=2e-6, rtol=0)
+    r = s.sync()
+    assert r["kind"] == "full"
+    # the device tier holds compressed rows; bytes/entry < the f16 layout
+    assert s.device_db.entry_nbytes < s.db.logical_entry_nbytes
+    apms2 = _rand_apms(5, n=2, h=2, l=16)
+    embs2 = rng.normal(0, 0.01, (2, dim)).astype(np.float32)
+    embs2[:, 0] += 1000.0
+    s.admit(apms2, embs2)
+    r = s.sync()
+    assert r["kind"] == "delta"
+    # delta ships ≤ padded compressed rows (+ index f32 rows + slot ids),
+    # strictly less than the equivalent f16 shipment
+    f16_equiv = 2 * (s.db.logical_entry_nbytes + dim * 4 + 16)
+    assert r["bytes"] < f16_equiv
+    np.testing.assert_allclose(
+        np.asarray(s.device_db.gather(jnp.asarray(slots[:3]))).astype(
+            np.float32),
+        s.db.get(slots[:3], count_reuse=False).astype(np.float32),
+        atol=2e-6, rtol=0)
+
+
+def test_store_flips_flat_to_clustered_at_crossover():
+    apm_shape, dim = (1, 4, 4), 8
+    s = MemoStore(apm_shape, dim, capacity=4, cluster_crossover=12)
+    rng = np.random.default_rng(6)
+
+    def batch(n, off):
+        apms = rng.random((n, *apm_shape)).astype(np.float16)
+        embs = rng.normal(0, 0.01, (n, dim)).astype(np.float32)
+        embs[:, 0] += 10.0 * (off + np.arange(n))
+        return apms, embs
+
+    s.admit(*batch(6, 1))
+    s.sync()
+    assert type(s.device_index).__name__ == "DeviceIndex"
+    s.admit(*batch(10, 100))
+    s.sync()
+    assert isinstance(s.device_index, ClusteredDeviceIndex)
+    # device search still finds every live entry (near-dup regime)
+    q = jnp.asarray(s._embs_host[: len(s.db)])
+    _, idx = s.device_index.search_device(q)
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0],
+                                  np.arange(len(s.db)))
+
+
+def test_clustered_sync_routes_evictions_through_remove():
+    """Regression: the sync delta path must tombstone evicted slots via
+    remove(), not assign() — an assign would append the tombstone row to
+    the clustered index's always-scored overflow buffer and count toward
+    the rebuild trigger, so a steady eviction stream would force
+    spurious k-means rebuilds mid-serving."""
+    apm_shape, dim = (1, 4, 4), 8
+    s = MemoStore(apm_shape, dim, capacity=4, cluster_crossover=1)
+    rng = np.random.default_rng(11)
+    apms = rng.random((12, *apm_shape)).astype(np.float16)
+    embs = rng.normal(0, 0.01, (12, dim)).astype(np.float32)
+    embs[:, 0] += 10.0 * np.arange(1, 13)
+    slots = s.admit(apms, embs)
+    s.sync()
+    di = s.device_index
+    assert isinstance(di, ClusteredDeviceIndex)
+    rebuilds0 = di.n_rebuilds
+    ev = s.evict(3)
+    s.sync()
+    # no overflow pollution, no spurious rebuild
+    assert not any(int(e) in di._opos for e in ev)
+    assert di.n_rebuilds == rebuilds0
+    # evicted entries can never be returned, even for their own embedding
+    for e in ev:
+        _, idx = di.search(embs[list(slots).index(e)][None], 1)
+        assert int(idx[0, 0]) != int(e)
+
+
+# ----------------------------------------------- clustered index properties
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st_h.integers(0, 10 ** 6))
+def test_clustered_recall_at_1_property(seed):
+    """Serving-regime recall: a request batch drawn from a handful of
+    templates, each query near a stored entry (the memo-hit case — far
+    queries are threshold-rejected misses regardless of which stranger
+    wins the argmin, and batch-shared probing guarantees stage-1
+    exactness while the batch's distinct top-1 clusters fit in nprobe).
+    recall@1 ≥ 0.95 vs the exact oracle."""
+    rng = np.random.default_rng(seed)
+    n_centers = int(rng.integers(4, 24))
+    dim = int(rng.choice([16, 32, 64]))
+    centers = rng.normal(size=(n_centers, dim)) * 5
+    db = (centers[rng.integers(0, n_centers, 1500)]
+          + rng.normal(size=(1500, dim))).astype(np.float32)
+    n_templates = int(rng.integers(1, 9))       # requests per batch cluster
+    rows = db[rng.integers(0, 1500, n_templates)]
+    q = (rows[rng.integers(0, n_templates, 64)]
+         + 0.1 * rng.normal(size=(64, dim))).astype(np.float32)
+    exact = ExactIndex(dim)
+    exact.add(db)
+    cl = ClusteredDeviceIndex(dim, seed=seed % 17)
+    cl.add(db)
+    assert recall_at_1(cl, exact, q) >= 0.95
+
+
+def test_clustered_lifecycle_assign_remove_topk():
+    rng = np.random.default_rng(7)
+    db = rng.normal(size=(600, 32)).astype(np.float32)
+    cl = ClusteredDeviceIndex(32, nprobe=6)
+    cl.add(db)
+    # fresh admissions are findable immediately (overflow buffer, no
+    # rebuild needed)
+    rebuilds0 = cl.n_rebuilds
+    extra = rng.normal(size=(4, 32)).astype(np.float32) + 50.0
+    cl.assign(np.arange(600, 604), extra)
+    assert cl.n_rebuilds == rebuilds0
+    _, idx = cl.search(extra, 1)
+    np.testing.assert_array_equal(idx[:, 0], np.arange(600, 604))
+    # removed entries can never be returned, even for their own embedding
+    cl.remove([600])
+    _, idx = cl.search(extra[:1], 1)
+    assert int(idx[0, 0]) != 600
+    # top-k comes back sorted
+    d, i = cl.search(db[:5], 3)
+    assert i.shape == (5, 3)
+    assert (d[:, 0] <= d[:, 1]).all() and (d[:, 1] <= d[:, 2]).all()
+    np.testing.assert_array_equal(i[:, 0], np.arange(5))
+
+
+def test_clustered_rebuild_absorbs_overflow():
+    rng = np.random.default_rng(8)
+    db = rng.normal(size=(200, 16)).astype(np.float32)
+    # default nprobe ≥ C here → every cluster probed: the test isolates
+    # overflow/rebuild bookkeeping, not probe selectivity
+    cl = ClusteredDeviceIndex(16, rebuild_frac=0.1)
+    cl.add(db)
+    cl.search(db[:1], 1)                        # force the initial build
+    r0 = cl.n_rebuilds
+    assert r0 == 1
+    extra = rng.normal(size=(40, 16)).astype(np.float32)
+    cl.assign(np.arange(200, 240), extra)       # 40 > 0.1·N → rebuild
+    assert cl.n_rebuilds > r0
+    assert len(cl._overflow) == 0
+    _, idx = cl.search(extra, 1)
+    np.testing.assert_array_equal(idx[:, 0], np.arange(200, 240))
+
+
+def test_clustered_search_traceable_and_retraces_on_rebuild():
+    rng = np.random.default_rng(9)
+    db = rng.normal(size=(300, 16)).astype(np.float32)
+    cl = ClusteredDeviceIndex(16, nprobe=4)
+    cl.add(db)
+    traces = []
+
+    @jax.jit
+    def fused(q, args):
+        traces.append(1)
+        d2, idx = cl.search_device(q, args=args)
+        return idx[:, 0]
+
+    q = jnp.asarray(db[:4])
+    i1 = fused(q, cl.search_args)
+    np.testing.assert_array_equal(np.asarray(i1), np.arange(4))
+    fused(q, cl.search_args)
+    assert len(traces) == 1                     # cache hit, no retrace
+    cl.assign(np.arange(300, 364),              # force a rebuild
+              rng.normal(size=(64, 16)).astype(np.float32))
+    cl.rebuild()
+    i2 = fused(q, cl.search_args)               # new shapes → retrace
+    np.testing.assert_array_equal(np.asarray(i2), np.arange(4))
+    assert len(traces) == 2
+
+
+# ------------------------------------------------- engine-level serve parity
+
+@pytest.fixture(scope="module")
+def engine_factory():
+    from repro.configs import get_reduced
+    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.data import TemplateCorpus
+    from repro.models import build_model
+
+    cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=2,
+                                           d_model=128, d_ff=256, n_heads=4)
+    m = build_model(cfg, layer_loop="unroll")
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=32, n_templates=6,
+                            slot_fraction=0.2)
+    batches = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
+               for _ in range(3)]
+    cache = {}
+
+    def make(**mc_kw):
+        key = tuple(sorted(mc_kw.items()))
+        if key not in cache:
+            eng = MemoEngine(m, params, MemoConfig(
+                threshold=0.6, embed_steps=40, mode="bucket", **mc_kw))
+            eng.build(jax.random.PRNGKey(1), batches)
+            cache[key] = eng
+        return cache[key], corpus
+
+    return make
+
+
+def _select_logits(eng, toks):
+    mode = eng.mc.mode
+    eng.mc.mode = "select"
+    try:
+        out, st = eng.infer({"tokens": toks})
+    finally:
+        eng.mc.mode = mode
+    return np.asarray(out), st
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_quantized_store_fast_path_matches_select(engine_factory, codec):
+    """Select and the device fast path decode the SAME stored entry, so
+    compression cannot break parity: logits agree within the float
+    tolerance for every codec (bit-identical decode for f16/int8; matmul
+    reassociation only for lowrank)."""
+    eng, corpus = engine_factory(apm_codec=codec)
+    toks = jnp.asarray(corpus.sample(8)[0])
+    ref, st_ref = _select_logits(eng, toks)
+    out, st = eng.infer({"tokens": toks})
+    assert st.n_hits == st_ref.n_hits          # same hit decisions
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_int8_kernel_mode_fused_dequant_matches_select(engine_factory):
+    """End-to-end int8 kernel path: the Pallas memo_attention variant
+    gathers int8 tiles + scale slivers and dequantizes in VMEM."""
+    eng, corpus = engine_factory(apm_codec="int8")
+    toks = jnp.asarray(corpus.sample(4)[0])
+    ref, _ = _select_logits(eng, toks)
+    eng.mc.mode = "kernel"
+    try:
+        out, st = eng.infer({"tokens": toks})
+    finally:
+        eng.mc.mode = "bucket"
+    assert st.n_layer_attempts == 4 * 2
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_int8_store_tracks_uncompressed_reference(engine_factory):
+    """The gap to an UNcompressed store is codec error only: predictions
+    agree and logits stay close (the documented tolerance)."""
+    eng8, corpus = engine_factory(apm_codec="int8")
+    eng16, _ = engine_factory(apm_codec="f16")
+    toks = jnp.asarray(corpus.sample(16)[0])
+    out8, st8 = eng8.infer({"tokens": toks})
+    out16, st16 = eng16.infer({"tokens": toks})
+    assert st8.n_hits == st16.n_hits           # index tier is uncompressed
+    agree = (np.argmax(np.asarray(out8), -1)
+             == np.argmax(np.asarray(out16), -1)).mean()
+    assert agree >= 0.99
+    assert np.max(np.abs(np.asarray(out8) - np.asarray(out16))) < 0.25
+
+
+class _Counting:
+    def __init__(self, real, counted):
+        self._real = real
+        self.counts = {name: 0 for name in counted}
+        for name in counted:
+            setattr(self, name, self._wrap(name))
+
+    def _wrap(self, name):
+        real_fn = getattr(self._real, name)
+
+        def fn(*a, **k):
+            self.counts[name] += 1
+            return real_fn(*a, **k)
+        return fn
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+def test_quantized_clustered_fast_path_one_barrier(engine_factory,
+                                                   monkeypatch):
+    """The ISSUE-3 acceptance invariant: int8 store + clustered device
+    index still serve with exactly ONE host barrier per batch — the
+    two-stage search and the fused dequant both trace inside the layer
+    jit."""
+    eng, corpus = engine_factory(apm_codec="int8", device_index="clustered",
+                                 cluster_crossover=1)
+    assert isinstance(eng.device_index, ClusteredDeviceIndex)
+    toks = jnp.asarray(corpus.sample(8)[0])
+    eng.infer({"tokens": toks})              # compile outside the count
+    fake_jax = _Counting(jax, ["block_until_ready"])
+    fake_np = _Counting(np, ["asarray", "nonzero"])
+    monkeypatch.setattr(engine_mod, "jax", fake_jax)
+    monkeypatch.setattr(engine_mod, "np", fake_np)
+    _, st = eng.infer({"tokens": toks})
+    assert fake_jax.counts["block_until_ready"] == 1
+    assert fake_np.counts["asarray"] <= 2
+    assert fake_np.counts["nonzero"] == 0
+    assert st.n_layer_attempts == 8 * 2

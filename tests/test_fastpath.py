@@ -60,8 +60,12 @@ class _CountingModule:
 def test_fast_path_zero_per_layer_host_sync(fast_engine, monkeypatch, mode):
     """The whole forward must issue exactly ONE block_until_ready (the
     trailing barrier) and at most the one-shot stats materialization —
-    independent of layer count (acceptance criterion, ISSUE 1)."""
+    independent of layer count (acceptance criterion, ISSUE 1). The
+    engine default is the int8 APM codec (ISSUE 3), so this also pins
+    the QUANTIZED fast path: on-device dequant must not add host syncs
+    (the clustered-index variant is pinned in tests/test_codec.py)."""
     eng, corpus = fast_engine
+    assert eng.store.codec.name == "int8"
     eng.mc.mode = mode
     try:
         toks = jnp.asarray(corpus.sample(8)[0])

@@ -24,6 +24,9 @@ from repro.core.store import MemoStore
 
 APM_SHAPE = (2, 4, 4)
 EMB_DIM = 8
+# lifecycle invariants must hold under every storage codec (ISSUE 3):
+# the compressed payloads ride the same slots/free-list/delta machinery
+CODECS = ["f16", "int8", "lowrank"]
 
 
 def _entries(rng, n):
@@ -35,18 +38,33 @@ def _entries(rng, n):
     return apms, embs
 
 
-def _mk_store(budget_entries=None):
+def _mk_store(budget_entries=None, codec="f16"):
     budget = (None if budget_entries is None
               else budget_entries * (MemoStore(
-                  APM_SHAPE, EMB_DIM).entry_nbytes))
-    return MemoStore(APM_SHAPE, EMB_DIM, capacity=4, budget_bytes=budget)
+                  APM_SHAPE, EMB_DIM, codec=codec).entry_nbytes))
+    return MemoStore(APM_SHAPE, EMB_DIM, capacity=4, budget_bytes=budget,
+                     codec=codec)
+
+
+def _rt(s, apms):
+    """What the store must return for ``apms``: the codec round trip
+    (bit-exact for f16/int8; lowrank within einsum reassociation)."""
+    c = s.db.codec
+    return c.decode(c.encode(apms))
+
+
+def _assert_payload(got, expect):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=1e-3, rtol=0)
 
 
 # ----------------------------------------------------------- admission
 
-def test_admit_assigns_slots_and_lookup_finds_them():
+@pytest.mark.parametrize("codec", CODECS)
+def test_admit_assigns_slots_and_lookup_finds_them(codec):
     rng = np.random.default_rng(0)
-    s = _mk_store()
+    s = _mk_store(codec=codec)
     apms, embs = _entries(rng, 5)
     slots = s.admit(apms, embs)
     assert slots.shape == (5,)
@@ -55,13 +73,13 @@ def test_admit_assigns_slots_and_lookup_finds_them():
     # self-distance ~0 up to the matmul-form f32 cancellation (entries
     # are 10.0 apart, so the nearest-id assertion above is the real check)
     assert np.all(dist[:, 0] < 0.1)
-    np.testing.assert_array_equal(
-        s.db.get(slots, count_reuse=False), apms)
+    _assert_payload(s.db.get(slots, count_reuse=False), _rt(s, apms))
 
 
-def test_budget_eviction_keeps_live_within_budget():
+@pytest.mark.parametrize("codec", CODECS)
+def test_budget_eviction_keeps_live_within_budget(codec):
     rng = np.random.default_rng(1)
-    s = _mk_store(budget_entries=6)
+    s = _mk_store(budget_entries=6, codec=codec)
     for _ in range(5):
         apms, embs = _entries(rng, 3)
         s.admit(apms, embs)
@@ -71,15 +89,15 @@ def test_budget_eviction_keeps_live_within_budget():
     assert len(s.db) <= 6 + 3
 
 
-def test_admitting_batch_larger_than_budget_keeps_newest():
+@pytest.mark.parametrize("codec", CODECS)
+def test_admitting_batch_larger_than_budget_keeps_newest(codec):
     rng = np.random.default_rng(2)
-    s = _mk_store(budget_entries=4)
+    s = _mk_store(budget_entries=4, codec=codec)
     apms, embs = _entries(rng, 10)
     slots = s.admit(apms, embs)
     assert slots.shape == (4,)
     assert s.live_count == 4
-    np.testing.assert_array_equal(
-        s.db.get(slots, count_reuse=False), apms[-4:])
+    _assert_payload(s.db.get(slots, count_reuse=False), _rt(s, apms[-4:]))
 
 
 # ------------------------------------------------------------- eviction
@@ -110,10 +128,12 @@ def test_reuse_clock_protects_hot_entries():
     assert s.db._live[int(slots[1])]
 
 
-def test_slot_recycling_never_aliases_live_entries():
+@pytest.mark.parametrize("codec", CODECS)
+def test_slot_recycling_never_aliases_live_entries(codec):
     rng = np.random.default_rng(5)
-    s = _mk_store()
+    s = _mk_store(codec=codec)
     apms, embs = _entries(rng, 4)
+    rt = _rt(s, apms)
     slots = s.admit(apms, embs)
     ev = s.evict(2)
     live = [int(x) for x in slots if int(x) not in ev]
@@ -123,30 +143,30 @@ def test_slot_recycling_never_aliases_live_entries():
     assert set(int(x) for x in slots2) == set(ev)   # recycled, not appended
     # live entries still readable and findable, not clobbered
     for sl in live:
-        np.testing.assert_array_equal(
-            s.db.get([sl], count_reuse=False)[0],
-            apms[list(slots).index(sl)])
+        _assert_payload(s.db.get([sl], count_reuse=False)[0],
+                        rt[list(slots).index(sl)])
         _, idx = s.lookup(s._embs_host[sl][None], 1)
         assert int(idx[0, 0]) == sl
     # recycled slots serve the NEW entries
     dist, idx = s.lookup(embs2, 1)
     np.testing.assert_array_equal(idx[:, 0], slots2)
-    np.testing.assert_array_equal(
-        s.db.get(slots2, count_reuse=False), apms2)
+    _assert_payload(s.db.get(slots2, count_reuse=False), _rt(s, apms2))
 
 
 # ------------------------------------------- interleaved property test
 
-@settings(max_examples=15, deadline=None)
+@pytest.mark.parametrize("codec", CODECS)
+@settings(max_examples=8, deadline=None)
 @given(seed=st_h.integers(0, 10 ** 6))
-def test_interleaved_admit_evict_sync_invariants(seed):
+def test_interleaved_admit_evict_sync_invariants(codec, seed):
     """Random interleavings of admit/evict/note_reuse/sync preserve:
     index↔DB slot agreement for every live entry, no hits on evicted
-    entries, and device-tier rows matching the host tier after sync."""
+    entries, and device-tier rows matching the host tier after sync —
+    under every storage codec."""
     rng = np.random.default_rng(seed)
-    s = MemoStore(APM_SHAPE, EMB_DIM, capacity=4,
-                  budget_bytes=12 * MemoStore(APM_SHAPE,
-                                              EMB_DIM).entry_nbytes)
+    s = MemoStore(APM_SHAPE, EMB_DIM, capacity=4, codec=codec,
+                  budget_bytes=12 * MemoStore(APM_SHAPE, EMB_DIM,
+                                              codec=codec).entry_nbytes)
     ledger = {}                                    # slot -> (apm, emb)
     serial = 0
     for _ in range(12):
@@ -157,12 +177,13 @@ def test_interleaved_admit_evict_sync_invariants(seed):
             embs = rng.normal(0, 0.01, (k, EMB_DIM)).astype(np.float32)
             embs[:, 0] += 10.0 * (serial + 1 + np.arange(k))
             serial += k
+            rt = _rt(s, apms)        # ledger holds the codec round trip
             slots = s.admit(apms, embs)
             dead = [sl for sl in ledger if not s.db._live[sl]]
             for sl in dead:
                 del ledger[sl]
             for j, sl in enumerate(slots):
-                ledger[int(sl)] = (apms[j], embs[j])
+                ledger[int(sl)] = (rt[j], embs[j])
         elif op == "evict" and s.live_count > 1:
             for sl in s.evict(int(rng.integers(1, 3))):
                 ledger.pop(int(sl), None)
@@ -175,19 +196,18 @@ def test_interleaved_admit_evict_sync_invariants(seed):
         for sl, (apm, emb) in ledger.items():
             dist, idx = s.lookup(emb[None], 1)
             assert int(idx[0, 0]) == sl, f"live slot {sl} lost in index"
-            np.testing.assert_array_equal(
-                s.db.get([sl], count_reuse=False)[0], apm)
+            _assert_payload(s.db.get([sl], count_reuse=False)[0], apm)
         # invariant: dead slots are tombstoned in the index
         dead = set(range(len(s.db))) - set(ledger)
         for sl in dead:
             if sl < len(s.db) and not s.db._live[sl]:
                 assert s._embs_host[sl, 0] == TOMBSTONE
     s.sync()
-    # device tier mirrors the host tier for every live slot
+    # device tier mirrors the host tier for every live slot (decoded)
     dev_apms = np.asarray(s.device_db.apms)
     dev_tab = np.asarray(s.device_index.table)
     for sl, (apm, emb) in ledger.items():
-        np.testing.assert_array_equal(dev_apms[sl], apm)
+        _assert_payload(dev_apms[sl], apm)
         np.testing.assert_allclose(dev_tab[sl], emb, rtol=1e-6)
 
 
@@ -214,12 +234,14 @@ def test_sync_is_noop_when_generation_unchanged():
     assert s.stats.n_noop_syncs == 3
 
 
-def test_delta_sync_moves_only_changed_slots():
+@pytest.mark.parametrize("codec", CODECS)
+def test_delta_sync_moves_only_changed_slots(codec):
     """Transfer-size accounting: after the initial materialization, an
     admission of k entries ships O(k) bytes (k rounded up to a power of
-    two), NOT the arena."""
+    two), NOT the arena — and under compression, O(k) *compressed*
+    bytes (``entry_nbytes`` is codec-true)."""
     rng = np.random.default_rng(8)
-    s = _mk_store()
+    s = _mk_store(codec=codec)
     apms, embs = _entries(rng, 32)
     s.admit(apms, embs)
     s.sync()
@@ -235,14 +257,16 @@ def test_delta_sync_moves_only_changed_slots():
     assert r["bytes"] <= 4 * (per_entry + 8)
     assert r["bytes"] < full_bytes / 4
     assert s.stats.bytes_delta == r["bytes"]
-    # the device rows actually landed
-    np.testing.assert_array_equal(
-        np.asarray(s.device_db.apms)[len(s.db) - 3: len(s.db)], apms2)
+    # the device rows actually landed (decoded comparison under codecs)
+    _assert_payload(np.asarray(s.device_db.apms)[len(s.db) - 3: len(s.db)],
+                    _rt(s, apms2))
 
 
-def test_full_resync_when_arena_outgrows_device_slack():
+@pytest.mark.parametrize("codec", CODECS)
+def test_full_resync_when_arena_outgrows_device_slack(codec):
     rng = np.random.default_rng(9)
-    s = MemoStore(APM_SHAPE, EMB_DIM, capacity=4, device_slack=0.25)
+    s = MemoStore(APM_SHAPE, EMB_DIM, capacity=4, device_slack=0.25,
+                  codec=codec)
     apms, embs = _entries(rng, 8)
     s.admit(apms, embs)
     s.sync()
