@@ -1,0 +1,108 @@
+"""Open-loop serving-runtime benchmark (ISSUE 4 / DESIGN.md §2.7).
+
+Serves one Poisson-arrival, variable-length, mid-run-drifting request
+trace through the MemoServer runtime twice — synchronous batch-boundary
+maintenance vs the off-thread worker — on identically rebuilt engines,
+and records throughput + p50/p99 latency + hit rate for both. Emitted
+into BENCH_serve.json as the ``serve_runtime`` section; the regression
+gate tracks the async/sync p99 ratio (``--check-regress``), which is
+machine-independent because both legs run on the same box back to back.
+
+Engines are built fresh per leg (NOT the lru-shared ``built_engine``):
+serving mutates the store, and the A/B is only honest if both legs start
+from the identical calibration state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_encoder
+from repro.core.engine import MemoConfig, MemoEngine
+from repro.data import TemplateCorpus
+from repro.launch.server import probe_rate, serve_trace
+
+SEQ = 32
+BATCH = 8
+REQUESTS = 120
+BUCKETS = (16, 32)
+
+
+def _build_engine():
+    model, params, corpus = trained_encoder("bert_base", n_layers=2,
+                                            seq_len=SEQ)
+    eng = MemoEngine(model, params, MemoConfig(
+        mode="bucket", embed_steps=120, admit=True, budget_mb=256.0,
+        recal_every=2, device_slack=8.0))
+    # dedicated rng: both A/B legs must build the IDENTICAL store (the
+    # shared corpus rng advances between calls)
+    rng = np.random.default_rng(123)
+    eng.build(jax.random.PRNGKey(1),
+              [{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}
+               for _ in range(4)])
+    eng.mc.threshold = eng.suggest_levels(
+        [{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}
+         ])["aggressive"]
+    return eng, corpus
+
+
+def _workload(corpus, rate: float):
+    """Poisson arrivals; two lengths per bucket (so the length-gated
+    store adapts quickly and both legs reach the same steady hit rate);
+    corpus drifts at the midpoint — the phase where maintenance
+    (admission + delta sync + recal) is busiest."""
+    rng = np.random.default_rng(7)
+    drifted = TemplateCorpus(vocab=corpus.vocab, seq_len=SEQ, seed=117,
+                             n_templates=corpus.n_templates,
+                             slot_fraction=corpus.slot_fraction)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, REQUESTS))
+    wl = []
+    for i in range(REQUESTS):
+        src = corpus if i < REQUESTS // 2 else drifted
+        bucket = int(rng.choice(BUCKETS))
+        length = bucket - int(rng.choice([0, 2]))
+        wl.append((float(arrivals[i]), src.sample(1, rng)[0][0, :length]))
+    return wl
+
+
+@functools.lru_cache(maxsize=1)
+def collect():
+    eng, corpus = _build_engine()
+    rate = probe_rate(eng, buckets=BUCKETS, max_batch=BATCH, seq=SEQ)
+    # the probe serves (and admits) at real sync-mode cost, mutating the
+    # store — rebuild so BOTH legs start from the identical fresh state
+    eng, _ = _build_engine()
+    workload = _workload(corpus, rate)
+
+    out = {"config": {"arch": "bert_base (reduced, 2 layers)",
+                      "requests": REQUESTS, "rate_rps": float(rate),
+                      "buckets": list(BUCKETS), "max_batch": BATCH,
+                      "threshold": float(eng.mc.threshold),
+                      "backend": jax.default_backend()}}
+    kw = dict(buckets=BUCKETS, max_batch=BATCH, max_delay=4e-3)
+    out["sync"] = serve_trace(eng, workload, async_maintenance=False,
+                              **kw)
+    eng2, _ = _build_engine()        # identical fresh store for the A/B
+    out["async"] = serve_trace(eng2, workload, async_maintenance=True,
+                               **kw)
+    out["p99_async_over_sync"] = (out["async"]["p99_ms"]
+                                  / max(out["sync"]["p99_ms"], 1e-9))
+    out["hit_rate_gap"] = abs(out["async"]["hit_rate"]
+                              - out["sync"]["hit_rate"])
+    return out
+
+
+def run():
+    out = collect()
+    for mode in ("sync", "async"):
+        r = out[mode]
+        yield (f"serve_runtime_{mode}", r["p99_ms"] * 1e3,
+               f"p50={r['p50_ms']:.1f}ms;p99={r['p99_ms']:.1f}ms;"
+               f"rps={r['throughput_rps']:.1f};"
+               f"hit={r['hit_rate']:.3f}")
+    yield ("serve_runtime_overlap", 0.0,
+           f"p99_ratio={out['p99_async_over_sync']:.3f};"
+           f"hit_gap={out['hit_rate_gap']:.3f}")

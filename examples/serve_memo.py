@@ -1,6 +1,10 @@
-"""Serving example: batched request stream through the memoized engine
-with selective memoization (Eq. 3) and hit/miss bucketing — the paper's
-online inference engine end to end.
+"""Serving example — the MemoStore-era engine end to end.
+
+Walks the full lifecycle the store exposes (DESIGN.md §2.5–2.7):
+build → lookup → online admission under a byte budget → CLOCK eviction →
+generation-counted delta sync → atomic snapshot publish — then serves an
+open-loop variable-length request stream through the MemoServer runtime
+with off-thread maintenance.
 
     PYTHONPATH=src python examples/serve_memo.py
 """
@@ -11,55 +15,98 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.engine import LEVELS, MemoConfig, MemoEngine, MemoStats
+from repro.core.engine import MemoConfig, MemoEngine
+from repro.core.runtime import MemoServer
 from repro.data import TemplateCorpus
 from repro.models import build_model
 from repro.optim import adamw_init, adamw_update
 
-cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=4)
+SEQ = 32
+cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=2)
 model = build_model(cfg, layer_loop="unroll")
 params = model.init(jax.random.PRNGKey(0))
-corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=64, seed=2)
+corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, seed=2,
+                        n_templates=6, slot_fraction=0.2)
 
+# a briefly-trained classifier (the paper's BERT/SST-2 analogue)
 opt = adamw_init(params)
-step = jax.jit(lambda p, o, b: _s(p, o, b))
-def _s(p, o, b):
+
+
+@jax.jit
+def _step(p, o, b):
     loss, g = jax.value_and_grad(model.classify_loss)(p, b)
-    return (*adamw_update(p, g, o, lr=3e-4), loss)
-for b in corpus.batches(40, 32):
+    p, o = adamw_update(p, g, o, lr=3e-4)
+    return p, o, loss
+
+
+for b in corpus.batches(30, 32):
     b = {k: jnp.asarray(v) for k, v in b.items()}
-    params, opt, loss = step(params, opt, b)
+    params, opt, loss = _step(params, opt, b)
 
-engine = MemoEngine(model, params, MemoConfig(threshold=LEVELS["moderate"],
-                                              mode="bucket"))
-calib = [{"tokens": jnp.asarray(corpus.sample(32)[0])} for _ in range(6)]
+# --- build: calibration corpus becomes the store's first epoch ---------
+engine = MemoEngine(model, params, MemoConfig(
+    threshold=0.8, mode="bucket", embed_steps=80,
+    admit=True, budget_mb=64.0, recal_every=2, device_slack=8.0))
+calib = [{"tokens": jnp.asarray(corpus.sample(16)[0])} for _ in range(4)]
 engine.build(jax.random.PRNGKey(1), calib)
+# per-model threshold autotune (paper Table 2 / §5.4) from a fresh sample
+engine.mc.threshold = engine.suggest_levels(
+    [{"tokens": jnp.asarray(corpus.sample(16)[0])}])["aggressive"]
+store = engine.store
+print(f"[store] built: {len(store.db)} entries, "
+      f"{store.live_count * store.entry_nbytes / 1e6:.2f} MB "
+      f"({store.codec.name} codec), threshold "
+      f"{engine.mc.threshold:.3f} (autotuned)")
 
-# offline profiler -> selective memoization plan (Eq. 3)
-pm = engine.profile({"tokens": jnp.asarray(corpus.sample(32)[0])})
-print(pm.summary())
-active = pm.active_layers()
-print(f"[serve] memoizing layers {active} of {engine.layers}\n")
+# --- lookup: the host-tier search API ----------------------------------
+# (the engine embeds internally; query with stored calibration
+# embeddings to show the raw store API)
+q = store.embeddings_at(np.arange(4))
+dist, slots = store.lookup(q, k=1)
+print(f"[store] lookup: top-1 slots {slots[:, 0].tolist()} at L2 "
+      f"{np.round(dist[:, 0], 4).tolist()} (self-queries → 0)")
 
-# request loop
-stats = MemoStats()
-lat = {"plain": [], "memo": []}
-for req in range(8):
-    toks = jnp.asarray(corpus.sample(16)[0])
-    t0 = time.perf_counter()
-    out, _ = engine.infer({"tokens": toks}, use_memo=False)
-    jax.block_until_ready(out)
-    lat["plain"].append(time.perf_counter() - t0)
-    t0 = time.perf_counter()
-    out, stats = engine.infer({"tokens": toks}, stats=stats,
-                              active_layers=active)
-    jax.block_until_ready(out)
-    lat["memo"].append(time.perf_counter() - t0)
+# --- online admission: drifted traffic, captured misses, delta sync ----
+drifted = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, seed=117,
+                         n_templates=6, slot_fraction=0.2)
+rates = []
+for i in range(6):
+    toks = jnp.asarray(drifted.sample(16)[0])
+    _, st = engine.infer({"tokens": toks})
+    rates.append(st.memo_rate)
+s = store.stats
+print(f"[store] drift hit-rate {' '.join(f'{r:.2f}' for r in rates)} — "
+      f"{s.n_admitted} admitted, {s.n_delta_syncs} delta syncs "
+      f"({s.bytes_delta / 1e6:.2f} MB shipped vs "
+      f"{s.n_delta_syncs * len(store.db) * store.entry_nbytes / 1e6:.1f} MB "
+      f"full-resync strawman)")
 
-p = np.median(lat["plain"][1:]) * 1e3
-m = np.median(lat["memo"][1:]) * 1e3
-print(f"[serve] plain {p:7.1f} ms/batch | memo {m:7.1f} ms/batch "
-      f"({(1 - m/p)*100:+.1f}%)")
-print(f"[serve] memo rate {stats.memo_rate*100:.0f}%  "
-      f"embed {stats.t_embed:.2f}s search {stats.t_search:.2f}s "
-      f"fetch {stats.t_fetch:.2f}s")
+# --- eviction: reuse-aware CLOCK, tombstoned index rows ----------------
+before = store.live_count
+store.evict(8)
+store.sync()                       # ships the tombstones, publishes
+print(f"[store] evicted {before - store.live_count} cold entries "
+      f"(live {store.live_count}); snapshot generation "
+      f"{store.snapshot.generation}")
+
+# --- the serving runtime: open-loop variable-length requests -----------
+server = MemoServer(engine, buckets=(SEQ // 2, SEQ), max_batch=8,
+                    async_maintenance=True)
+server.warmup()
+rng = np.random.default_rng(7)
+wl = []
+t = 0.0
+for i in range(32):
+    t += float(rng.exponential(0.01))
+    ln = int(rng.choice([SEQ // 2, SEQ]))
+    wl.append((t, np.asarray(drifted.sample(1)[0][0, :ln])))
+t0 = time.perf_counter()
+with server:
+    comps = server.run(wl)
+wall = time.perf_counter() - t0
+lat = np.asarray([c.latency for c in comps]) * 1e3
+print(f"[serve] {len(comps)} requests in {wall:.2f}s "
+      f"({len(comps) / wall:.0f} req/s) | p50 {np.percentile(lat, 50):.1f} "
+      f"ms p99 {np.percentile(lat, 99):.1f} ms | hit rate "
+      f"{server.stats.memo_rate * 100:.0f}% | "
+      f"{server.stats.n_admitted} admitted off-thread")

@@ -49,19 +49,65 @@ class Embedder:
         }
         return Embedder(params, pool, act)
 
-    def __call__(self, hidden):
-        return embed_apply(self.params, hidden, self.pool, self.act)
+    def __call__(self, hidden, lengths=None):
+        return embed_apply(self.params, hidden, self.pool, self.act,
+                           lengths=lengths)
 
 
 def _maybe_act(x, act):
     return jnp.tanh(x) if act == "tanh" else x
 
 
-def embed_apply(params, hidden, pool: int, act: str):
-    """hidden: (B, L, H) → (B, dim)."""
+def n_segments(params, hidden_dim: int) -> int:
+    """The token-pool segment count the embedder was trained with —
+    recoverable from the input layer: d_in = n_seg * H."""
+    return int(params["w1"].shape[0]) // int(hidden_dim)
+
+
+def _masked_pool(hidden, lengths, n_seg: int, pool: int, full_len: int):
+    """Length-scaled integer-chunk pooling: each sequence's VALID prefix
+    is split into ``n_seg`` contiguous chunks of ``max(1, len·pool //
+    full_len)`` tokens and mean-pooled, so the pooled feature count —
+    and hence the embedder input width — is independent of both the
+    padded bucket length and the true length. Padded positions get
+    weight 0, so a sequence padded to any bucket embeds identically to
+    its unpadded run (mask-aware memo lookup, DESIGN.md §2.7).
+
+    The chunk size is scaled against ``full_len`` (the calibration /
+    arena sequence length) so that a FULL-length sequence reproduces the
+    ``lengths=None`` layout exactly — chunks of ``pool`` tokens,
+    truncated past ``n_seg·pool`` — for every ``full_len``, including
+    ones not divisible by ``pool``; otherwise full-length serving
+    queries would systematically miss calibration entries embedded by
+    the contiguous path."""
     B, L, H = hidden.shape
-    pooled = max(1, L // pool)
-    h = hidden[:, : pooled * pool].reshape(B, pooled, pool, H).mean(2)
+    ln = lengths.astype(jnp.int32)
+    chunk = jnp.maximum((ln * pool) // max(int(full_len), 1), 1)   # (B,)
+    t = jnp.arange(L, dtype=jnp.int32)
+    seg = t[None, :] // chunk[:, None]                             # (B, L)
+    valid = t[None, :] < jnp.minimum(ln, chunk * n_seg)[:, None]
+    w = ((seg[:, :, None] == jnp.arange(n_seg)[None, None, :])
+         & valid[:, :, None]).astype(jnp.float32)       # (B, L, n_seg)
+    pooled = jnp.einsum("bls,blh->bsh", w, hidden.astype(jnp.float32))
+    return pooled / jnp.maximum(w.sum(1), 1.0)[:, :, None]
+
+
+def embed_apply(params, hidden, pool: int, act: str, lengths=None,
+                full_len=None):
+    """hidden: (B, L, H) → (B, dim). With ``lengths`` (B,), pooling is
+    mask-aware (padded rows ignored, chunks span the true length);
+    ``full_len`` is the calibration sequence length the chunk scale is
+    anchored to (default: the embedder's covered length ``n_seg·pool``,
+    exact whenever the training length was divisible by ``pool``)."""
+    B, L, H = hidden.shape
+    if lengths is None:
+        pooled = max(1, L // pool)
+        h = hidden[:, : pooled * pool].reshape(B, pooled, pool, H).mean(2)
+    else:
+        n_seg = n_segments(params, H)
+        if full_len is None:
+            full_len = n_seg * pool
+        h = _masked_pool(hidden, lengths, n_seg, pool, full_len)
     h = h.reshape(B, -1).astype(jnp.float32)
     h = _maybe_act(h @ params["w1"] + params["b1"], act)
     h = _maybe_act(h @ params["w2"] + params["b2"], act)

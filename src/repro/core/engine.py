@@ -18,9 +18,10 @@ calibration corpus, train the Siamese embedder, index the embeddings.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +32,7 @@ from repro.core.embedding import Embedder, train_embedder
 from repro.core.index import DeviceIndex
 from repro.core.selective import LayerProfile, PerfModel, timeit_median
 from repro.core.similarity import similarity_score
-from repro.core.store import MemoStore
+from repro.core.store import MemoStore, StoreSnapshot
 from repro.models import attention as attn_mod
 from repro.models import backbone as bb
 
@@ -99,6 +100,12 @@ class SimReservoir:
     threads one MemoStats through the whole run leaked forever. The
     reservoir keeps a uniform sample, so percentile summaries (the
     `suggest_levels`-style reporting) stay accurate while memory is O(cap).
+
+    Mutation and summary are lock-guarded: under the MemoServer runtime
+    the serving thread and the maintenance worker both merge per-batch
+    stats into one shared reservoir (DESIGN.md §2.7) — without the lock,
+    interleaved Algorithm-R updates lose or duplicate samples and the
+    ``seen`` counter drifts from reality.
     """
 
     def __init__(self, cap: int = 4096, seed: int = 0):
@@ -106,8 +113,9 @@ class SimReservoir:
         self.seen = 0                 # total values offered
         self._vals: List[float] = []
         self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
 
-    def append(self, v: float) -> None:
+    def _append_locked(self, v: float) -> None:
         self.seen += 1
         if len(self._vals) < self.cap:
             self._vals.append(float(v))
@@ -116,25 +124,31 @@ class SimReservoir:
             if j < self.cap:
                 self._vals[j] = float(v)
 
+    def append(self, v: float) -> None:
+        with self._lock:
+            self._append_locked(v)
+
     def extend(self, values) -> None:
         values = list(values)
-        if len(self._vals) + len(values) <= self.cap:
-            self.seen += len(values)
-            self._vals.extend(float(v) for v in values)
-            return
-        for v in values:
-            self.append(v)
+        with self._lock:
+            if len(self._vals) + len(values) <= self.cap:
+                self.seen += len(values)
+                self._vals.extend(float(v) for v in values)
+                return
+            for v in values:
+                self._append_locked(v)
 
     def percentile(self, q) -> float:
-        if not self._vals:
-            return float("nan")
-        return float(np.percentile(self._vals, q))
+        with self._lock:
+            if not self._vals:
+                return float("nan")
+            return float(np.percentile(self._vals, q))
 
     def __len__(self):
         return len(self._vals)        # retained (bounded); .seen = total
 
     def __iter__(self):
-        return iter(self._vals)
+        return iter(list(self._vals))
 
 
 @dataclass
@@ -151,10 +165,77 @@ class MemoStats:
     t_total: float = 0.0            # whole-batch wall time (fast path)
     per_layer_hits: Dict[int, int] = field(default_factory=dict)
     n_admitted: int = 0             # entries admitted via miss capture
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     @property
     def memo_rate(self) -> float:
         return self.n_hits / max(1, self.n_layer_attempts)
+
+    def merge(self, other: "MemoStats") -> "MemoStats":
+        """Fold another stats object into this one under the lock — the
+        MemoServer accumulates per-batch stats this way so the serving
+        thread and the off-thread maintenance worker never race on the
+        counters (they used to be bare ``+=`` on shared fields)."""
+        with self._lock:
+            self.n_inputs += other.n_inputs
+            self.n_layer_attempts += other.n_layer_attempts
+            self.n_hits += other.n_hits
+            self.t_embed += other.t_embed
+            self.t_search += other.t_search
+            self.t_fetch += other.t_fetch
+            self.t_attn += other.t_attn
+            self.t_other += other.t_other
+            self.t_total += other.t_total
+            self.n_admitted += other.n_admitted
+            for li, nh in other.per_layer_hits.items():
+                self.per_layer_hits[li] = self.per_layer_hits.get(li, 0) + nh
+        self.sims.extend(other.sims)          # reservoir has its own lock
+        return self
+
+    def add_admitted(self, n: int) -> None:
+        """Maintenance-side counter bump (worker thread under the async
+        runtime), guarded like ``merge``."""
+        with self._lock:
+            self.n_admitted += int(n)
+
+
+@dataclass
+class PreparedBatch:
+    """Everything ``run_layers``/``finalize`` need for one device-resident
+    batch — produced by ``prepare_batch``, which is where the runtime's
+    batching policy hands over to the engine (DESIGN.md §2.7)."""
+    tokens: jnp.ndarray
+    h: jnp.ndarray
+    positions: jnp.ndarray
+    kpad: Optional[jnp.ndarray]          # (B, S) bool key-validity mask
+    lengths_dev: Optional[jnp.ndarray]   # (B,) int32 true lengths (device)
+    lengths: Optional[np.ndarray]        # host copy (drain/admission)
+    n_valid: int                         # real rows; the rest are padding
+    thr: float
+    active: set
+    capture: bool
+    view: StoreSnapshot                  # the store generation this batch
+    #                                      serves against, end to end
+    t0: float = 0.0
+    pend: list = field(default_factory=list)
+
+
+@dataclass
+class MaintenancePayload:
+    """Host-tier store work drained from one finished batch. Applying it
+    (``MemoEngine.apply_maintenance``) is the ONLY thing that mutates the
+    MemoStore — the runtime either does it inline (sync mode) or hands it
+    to the background worker (async mode, overlapped with batch t+1's
+    device compute)."""
+    reuse_slots: Optional[np.ndarray] = None        # device-tier hits
+    admissions: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = \
+        field(default_factory=list)                 # (apms, embs, lens)
+
+    @property
+    def empty(self) -> bool:
+        return not self.admissions and (
+            self.reuse_slots is None or self.reuse_slots.size == 0)
 
 
 class MemoEngine:
@@ -293,14 +374,23 @@ class MemoEngine:
             return self.mc.device_fast_path
         return self.mc.store == "device"
 
-    def _embed(self, hiddens):
-        fn = self._jit_cache.get("embed")
+    def _embed(self, hiddens, lengths=None):
+        key = ("embed", lengths is not None)
+        fn = self._jit_cache.get(key)
         if fn is None:
             pool, act = self.embedder.pool, self.embedder.act
             from repro.core.embedding import embed_apply
-            fn = jax.jit(lambda p, h: embed_apply(p, h, pool, act))
-            self._jit_cache["embed"] = fn
-        return fn(self.embedder.params, hiddens)
+            if lengths is None:
+                fn = jax.jit(lambda p, h: embed_apply(p, h, pool, act))
+            else:
+                fl = self.store.apm_shape[-1]   # chunk-scale anchor
+                fn = jax.jit(lambda p, h, ln: embed_apply(
+                    p, h, pool, act, lengths=ln, full_len=fl))
+            self._jit_cache[key] = fn
+        if lengths is None:
+            return fn(self.embedder.params, hiddens)
+        return fn(self.embedder.params, hiddens,
+                  jnp.asarray(lengths, jnp.int32))
 
     def _calibrate(self, hiddens, apms, n_pairs=256):
         """Fit sim ≈ a·dist + b so search distances predict similarity."""
@@ -350,30 +440,60 @@ class MemoEngine:
     def infer(self, batch, *, threshold: Optional[float] = None,
               active_layers: Optional[Sequence[int]] = None,
               stats: Optional[MemoStats] = None, use_memo: bool = True):
-        """Memoized forward. Returns (logits, stats)."""
+        """Memoized forward. Returns (logits, stats).
+
+        ``batch`` may carry ``lengths`` (B,) for padded variable-length
+        inputs (tokens past a sequence's length are padding: masks flow
+        through attention, memo lookup and the head) and ``n_valid`` (the
+        runtime's batch padding — trailing rows are shape filler and are
+        excluded from stats and admission). Variable length is served by
+        the device fast path and the select reference; the host
+        bucket/kernel paths stay fixed-length."""
         thr = self.mc.threshold if threshold is None else threshold
         active = set(self.layers if active_layers is None else active_layers)
         st = stats or MemoStats()
         cfg = self.cfg
         if self.is_encdec:
             return self._infer_encdec(batch, thr, active, st, use_memo)
+        if use_memo and self._use_fast_path():
+            # step-wise executor with inline (synchronous batch-boundary)
+            # maintenance — the MemoServer runtime calls the same three
+            # steps but moves apply_maintenance onto its worker thread
+            prep = self.prepare_batch(batch, threshold=thr,
+                                      active_layers=active)
+            self.run_layers(prep)
+            out, st, payload = self.finalize(prep, stats=st)
+            self.apply_maintenance(payload, stats=st)
+            return out, st
         capture = self._capture_now(use_memo)
         if use_memo:
             self._serve_batches += 1
-        if use_memo and self._use_fast_path():
-            return self._infer_device(batch, thr, active, st, capture)
         tokens = batch["tokens"]
-        st.n_inputs += tokens.shape[0]
+        lengths = batch.get("lengths")
+        if lengths is not None and use_memo and self.mc.mode != "select":
+            raise ValueError(
+                "variable-length batches are served by the device fast "
+                "path or the select reference; the host-synchronous "
+                "bucket/kernel paths are fixed-length")
+        B, S = tokens.shape[0], tokens.shape[1]
+        n_valid = int(batch.get("n_valid", B))
+        st.n_inputs += n_valid
         h = bb.embed_tokens(self.params, tokens, cfg)
         positions = jnp.broadcast_to(
-            jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+            jnp.arange(S, dtype=jnp.int32), (B, S))
+        kpad = None
+        if lengths is not None:
+            kpad = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                    < jnp.asarray(lengths, jnp.int32)[:, None])
 
         for li, kind, lp in self._iter_layers():
             memo = None
             if use_memo and li in active and kind in ("attn", "mla") \
                     and self.db is not None:
                 memo = self._lookup(lp, h, kind, thr, st, li,
-                                    positions=positions, capture=capture)
+                                    positions=positions, capture=capture,
+                                    lengths=lengths, kpad=kpad,
+                                    n_valid=n_valid)
             t0 = time.perf_counter()
             if memo is not None and self.mc.mode == "bucket":
                 h = self._layer_bucket(lp, h, kind, li, memo, positions)
@@ -381,67 +501,131 @@ class MemoEngine:
                     and kind == "attn":
                 h = self._layer_kernel(lp, h, li, memo, positions)
             else:
-                h = self._layer_plain(lp, h, kind, li, memo, positions)
+                h = self._layer_plain(lp, h, kind, li, memo, positions,
+                                      kpad=kpad)
             jax.block_until_ready(h)
             st.t_attn += time.perf_counter() - t0
         self._flush_admissions(st)        # batch boundary: admit + sync
         if cfg.n_classes:
-            return bb.classify_from_hidden(self.params, h, cfg), st
+            return bb.classify_from_hidden(self.params, h, cfg,
+                                           kpad=kpad), st
         return bb.logits_from_hidden(self.params, h, cfg), st
 
-    # -------------------------------------------------- device fast path
-    def _infer_device(self, batch, thr, active, st: MemoStats,
-                      capture: bool = False):
-        """Device-resident serving loop (DESIGN.md §2): every layer is a
-        chained jitted dispatch — fused lookup (embed → nn_search →
-        threshold → gather) feeding the layer body — with ZERO per-layer
-        host synchronization. Stats are event-based: hit masks, predicted
-        sims and matched slots accumulate as device arrays and are
-        materialized once per batch after the single trailing barrier.
-        With ``capture`` (online admission), miss embeddings + APMs are
-        STAGED ON DEVICE the same way and drained at the batch boundary —
-        the per-layer loop still never blocks."""
+    # ------------------------------------- step-wise fast-path executor
+    def prepare_batch(self, batch, *, threshold: Optional[float] = None,
+                      active_layers: Optional[Sequence[int]] = None,
+                      sync_store: bool = True) -> PreparedBatch:
+        """Stage one device-resident batch (DESIGN.md §2.7): freeze the
+        policy inputs (threshold, active layers, admission sampling), read
+        the store snapshot the WHOLE batch will serve against, and run the
+        prologue jit (token embed, positions, padding mask). The serving
+        runtime owns batching and calls prepare/run/finalize itself;
+        ``infer`` composes them with inline maintenance.
+
+        ``sync_store=False`` is the async-maintenance contract: the
+        serving thread never mutates the store — it reads the latest
+        atomically-published snapshot and leaves sync to the worker."""
+        if not self._use_fast_path():
+            raise RuntimeError(
+                "prepare_batch drives the device fast path; build() the "
+                "engine in bucket/kernel mode (select and host paths go "
+                "through infer())")
         cfg = self.cfg
-        self.store.sync()    # generation-counted: no-op unless stale
-        tokens = batch["tokens"]
-        st.n_inputs += tokens.shape[0]
+        tokens = jnp.asarray(batch["tokens"])
+        lengths = batch.get("lengths")
+        if lengths is not None and self.mc.mode == "kernel":
+            raise ValueError(
+                "variable-length serving supports bucket mode; the "
+                "memo_attention kernel path is fixed-length")
+        thr = self.mc.threshold if threshold is None else float(threshold)
+        active = set(self.layers if active_layers is None
+                     else active_layers)
+        capture = self._capture_now(True)
+        self._serve_batches += 1
+        if sync_store:
+            self.store.sync()     # generation-counted: no-op unless stale
+        view = self.store.snapshot
+        if view is None:          # bootstrap: materialize + publish once
+            self.store.sync()
+            view = self.store.snapshot
+        B, S = tokens.shape[0], tokens.shape[1]
+        n_valid = int(batch.get("n_valid", B))
         t0 = time.perf_counter()
-        prolog = self._jit_cache.get("prolog")
+        key = ("prolog", lengths is not None)
+        prolog = self._jit_cache.get(key)
         if prolog is None:
-            def prolog(params, tokens):
+            def prolog(params, tokens, ln):
                 h = bb.embed_tokens(params, tokens, cfg)
+                S = tokens.shape[1]
                 positions = jnp.broadcast_to(
-                    jnp.arange(tokens.shape[1], dtype=jnp.int32),
-                    tokens.shape)
-                return h, positions
-            prolog = self._jit_cache["prolog"] = jax.jit(prolog)
-        h, positions = prolog(self.params, tokens)
-        thr_dev = jnp.float32(thr)
-        pend = []          # per-layer device arrays, drained post-barrier
+                    jnp.arange(S, dtype=jnp.int32), tokens.shape[:2])
+                kpad = (None if ln is None else
+                        jnp.arange(S, dtype=jnp.int32)[None, :]
+                        < ln[:, None])
+                return h, positions, kpad
+            prolog = self._jit_cache[key] = jax.jit(prolog)
+        len_dev = (None if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
+        if lengths is not None and not isinstance(lengths, np.ndarray):
+            lengths = np.asarray(lengths)
+        h, positions, kpad = prolog(self.params, tokens, len_dev)
+        return PreparedBatch(
+            tokens=tokens, h=h, positions=positions, kpad=kpad,
+            lengths_dev=len_dev, lengths=lengths,
+            n_valid=n_valid, thr=thr, active=active, capture=capture,
+            view=view, t0=t0)
+
+    def run_layers(self, prep: PreparedBatch) -> PreparedBatch:
+        """The device-resident serving loop (DESIGN.md §2): every layer is
+        a chained jitted dispatch — fused lookup (embed → nn_search →
+        threshold → length gate → gather) feeding the layer body — with
+        ZERO per-layer host synchronization (the one barrier lives in
+        ``finalize``). Stats are event-based: hit masks, predicted sims
+        and matched slots accumulate as device arrays in ``prep.pend``.
+        With ``prep.capture`` (online admission), miss embeddings + APMs
+        are STAGED ON DEVICE the same way — the loop never blocks."""
+        thr_dev = jnp.float32(prep.thr)
+        h = prep.h
         for li, kind, lp in self._iter_layers():
-            if li in active and kind in ("attn", "mla"):
-                h, *rest = self._layer_fused(lp, h, kind, li, thr_dev,
-                                             positions, capture=capture)
-                pend.append((li, *rest))
+            if li in prep.active and kind in ("attn", "mla"):
+                h, *rest = self._layer_fused(
+                    lp, h, kind, li, thr_dev, prep.positions,
+                    view=prep.view, kpad=prep.kpad,
+                    qlen=prep.lengths_dev, capture=prep.capture)
+                prep.pend.append((li, *rest))
             else:
-                h = self._layer_plain(lp, h, kind, li, None, positions)
-        head = self._jit_cache.get("head")
+                h = self._layer_plain(lp, h, kind, li, None, prep.positions,
+                                      kpad=prep.kpad)
+        prep.h = h
+        return prep
+
+    def finalize(self, prep: PreparedBatch,
+                 stats: Optional[MemoStats] = None):
+        """Head jit + the ONE trailing barrier, then the event-based stats
+        drain. Returns ``(outputs, stats, payload)`` — the payload carries
+        every piece of host-tier store work from this batch; the caller
+        decides WHERE it runs (inline vs the maintenance worker)."""
+        st = stats or MemoStats()
+        cfg = self.cfg
+        key = ("head", prep.kpad is not None)
+        head = self._jit_cache.get(key)
         if head is None:
-            def head(params, h):
-                return (bb.classify_from_hidden(params, h, cfg)
+            def head(params, h, kpad):
+                return (bb.classify_from_hidden(params, h, cfg, kpad=kpad)
                         if cfg.n_classes
                         else bb.logits_from_hidden(params, h, cfg))
-            head = self._jit_cache["head"] = jax.jit(head)
-        out = jax.block_until_ready(head(self.params, h))   # ONE barrier
-        dt = time.perf_counter() - t0
+            head = self._jit_cache[key] = jax.jit(head)
+        out = jax.block_until_ready(
+            head(self.params, prep.h, prep.kpad))           # ONE barrier
+        dt = time.perf_counter() - prep.t0
+        st.n_inputs += prep.n_valid
         st.t_total += dt
         st.t_attn += dt
-        self._drain_stats(pend, st, capture)
-        self._flush_admissions(st)
-        return out, st
+        payload = self._drain_stats(prep, st)
+        return out, st, payload
 
-    def _layer_fused(self, lp, h, kind, li, thr_dev, positions,
-                     capture: bool = False):
+    def _layer_fused(self, lp, h, kind, li, thr_dev, positions, view,
+                     kpad=None, qlen=None, capture: bool = False):
         """The fused serving layer: embed → nn_search → threshold → gather
         → attention → channel mixer, ONE jitted dispatch per layer, device
         arrays in and out (no np.asarray, no block_until_ready). Returns
@@ -467,23 +651,38 @@ class MemoEngine:
           (the fused-dequant gather, DESIGN.md §2.6).
 
         Compression plumbing: the device DB rides in as its codec
-        ``parts`` tuple and the index as its ``search_args`` pytree, so
-        dequant happens INSIDE this jit (bucket) or inside the kernel
-        (int8 kernel mode) — an index rebuild or codec-shape change
-        retraces automatically because the traced pytree changes.
+        ``parts`` tuple and the index as its ``search_args`` pytree —
+        read from the ``view`` (a StoreSnapshot), so one batch serves one
+        atomically-published store generation end to end; an index
+        rebuild or codec-shape change retraces automatically because the
+        traced pytree changes.
+
+        Variable length (``qlen``/``kpad`` both set): the embedding pools
+        mask-aware over the true length, the hit decision additionally
+        requires the matched entry's stored length to EQUAL the query's
+        (a padded APM row is only valid at its own length), the gathered
+        arena rows are sliced to the bucket length, and every attention
+        branch masks pad keys.
         """
         cfg = self.cfg
         kernel_path = self.mc.mode == "kernel" and kind == "attn"
-        store = self.store
+        varlen = qlen is not None
         key = ("fused", kernel_path, kind, li if cfg.moe else 0, h.shape,
-               self.mc.device_quanta, capture, store.codec.key,
-               type(store.device_index).__name__)
+               self.mc.device_quanta, capture, view.codec_key,
+               view.index_key, varlen)
         fn = self._jit_cache.get(key)
         if fn is None:
             pool, act = self.embedder.pool, self.embedder.act
             from repro.core.embedding import embed_apply
             interpret = self._interpret
-            codec_name = store.codec.name
+            codec = self.store.codec
+            codec_name = codec.name
+            # search_device is pure given ``args``; the instance only
+            # contributes static config (nprobe/backend), which is fixed
+            # per store — so closing over this view's index is safe even
+            # after a rebuild swaps in a new instance of the same class
+            # (the class itself is part of the jit key via index_key)
+            index = view.index
             f_memo = (attn_mod.gqa_apply_memo if kind == "attn"
                       else attn_mod.mla_apply_memo)
             f_attn = (attn_mod.gqa_apply if kind == "attn"
@@ -495,24 +694,24 @@ class MemoEngine:
                   if (1 < self.mc.device_quanta <= B
                       and B % self.mc.device_quanta == 0) else 1)
 
-            def bucketed(lp, xs, apm, hit, pos, size):
+            def bucketed(lp, xs, apm, hit, pos, kp, size):
                 def all_hit(ops):
-                    xs, apm, hit, pos = ops
+                    xs, apm, hit, pos, kp = ops
                     return f_memo(lp["mix"], xs, cfg,
                                   apm.astype(jnp.float32))
 
                 def all_miss(ops):
-                    xs, apm, hit, pos = ops
+                    xs, apm, hit, pos, kp = ops
                     y, _ = f_attn(lp["mix"], xs, cfg, positions=pos,
                                   mask_kind=mask_kind,
-                                  window=cfg.sliding_window)
+                                  window=cfg.sliding_window, kpad=kp)
                     return y
 
                 def mixed(ops):
-                    xs, apm, hit, pos = ops
+                    xs, apm, hit, pos, kp = ops
                     y, _ = f_attn(lp["mix"], xs, cfg, positions=pos,
                                   mask_kind=mask_kind,
-                                  window=cfg.sliding_window,
+                                  window=cfg.sliding_window, kpad=kp,
                                   memo=attn_mod.Memo(apm=apm, hit=hit))
                     return y
 
@@ -521,16 +720,28 @@ class MemoEngine:
                     n_hit == size, all_hit,
                     lambda ops: jax.lax.cond(n_hit == 0, all_miss, mixed,
                                              ops),
-                    (xs, apm, hit, pos))
+                    (xs, apm, hit, pos, kp))
 
-            def run(lp, emb_p, sargs, db_parts, h, thr, a, b, positions):
+            arena_len = self.store.apm_shape[-1]
+
+            def run(lp, emb_p, sargs, db_parts, ent_lens, h, thr, a, b,
+                    positions, qlen, kpad):
                 x = bb.norm_apply(lp["norm1"], h, cfg.norm)
-                emb = embed_apply(emb_p, x, pool, act)
-                d2, idx = store.device_index.search_device(emb, args=sargs)
+                emb = embed_apply(emb_p, x, pool, act, lengths=qlen,
+                                  full_len=arena_len)
+                d2, idx = index.search_device(emb, args=sargs)
                 dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
                 sim = a * dist + b
                 hit = sim > thr
                 idx0 = idx[:, 0].astype(jnp.int32)
+                S = x.shape[1]
+                # the length gate — ALWAYS on: a hit may only reuse an
+                # APM captured at the query's own true length (a
+                # fixed-length batch's true length is S); without it a
+                # fixed-length query could replay a shorter entry whose
+                # rows past its length are hard zeros
+                hit = hit & (jnp.take(ent_lens, idx0)
+                             == (qlen if varlen else S))
 
                 def gather_apm():
                     """Compressed gather + on-device dequant — the only
@@ -539,17 +750,21 @@ class MemoEngine:
                     cast fuses the rounding into the dequant pipeline,
                     whereas an f16 result would materialize as a cond
                     operand — software-emulated f16 stores are ~4× the
-                    whole dequant cost on CPU."""
+                    whole dequant cost on CPU. Arena rows are stored at
+                    the calibration length; padded-row gathers slice to
+                    this bucket's length (parity with the select path's
+                    host-side slice)."""
                     rows = tuple(jnp.take(p, idx0, axis=0)
                                  for p in db_parts)
-                    return store.codec.decode_rows(rows).astype(
-                        jnp.float32)
+                    apm = codec.decode_rows(rows).astype(jnp.float32)
+                    if apm.shape[-1] != S:
+                        apm = apm[..., :S, :S]
+                    return apm
 
                 if kernel_path:
                     from repro.kernels.memo_attention.ops import \
                         memo_attention
                     qq, kk, vv = attn_mod._qkv(lp["mix"], x, cfg, positions)
-                    S = x.shape[1]
                     blk = max(8, min(128, S))
                     kw = dict(causal=cfg.causal, window=cfg.sliding_window,
                               block_q=blk, block_k=blk, interpret=interpret)
@@ -574,7 +789,7 @@ class MemoEngine:
                     y = jnp.einsum("bshe,hed->bsd", out, lp["mix"]["wo"])
                 elif nq == 1:
                     apm = gather_apm()
-                    y = bucketed(lp, x, apm, hit, positions, B)
+                    y = bucketed(lp, x, apm, hit, positions, kpad, B)
                 else:
                     apm = gather_apm()
                     order = jnp.argsort(jnp.logical_not(hit))  # hits first
@@ -583,10 +798,14 @@ class MemoEngine:
                     apm_s = jnp.take(apm, order, 0)
                     hit_s = jnp.take(hit, order, 0)
                     pos_s = jnp.take(positions, order, 0)
+                    kp_s = (None if kpad is None
+                            else jnp.take(kpad, order, 0))
                     parts = [bucketed(lp, x_s[g * qs:(g + 1) * qs],
                                       apm_s[g * qs:(g + 1) * qs],
                                       hit_s[g * qs:(g + 1) * qs],
-                                      pos_s[g * qs:(g + 1) * qs], qs)
+                                      pos_s[g * qs:(g + 1) * qs],
+                                      None if kp_s is None
+                                      else kp_s[g * qs:(g + 1) * qs], qs)
                              for g in range(nq)]
                     y = jnp.take(jnp.concatenate(parts, 0),
                                  jnp.argsort(order), 0)
@@ -602,15 +821,15 @@ class MemoEngine:
                                         positions=positions,
                                         mask_kind=mask_kind,
                                         window=cfg.sliding_window,
-                                        return_apm=True)
+                                        kpad=kpad, return_apm=True)
                     out = out + (emb, apm_cap.astype(jnp.float16))
                 return out
             fn = jax.jit(run)
             self._jit_cache[key] = fn
-        a, b = self.sim_cal
-        return fn(lp, self.embedder.params, self.device_index.search_args,
-                  self.device_db.parts, h, thr_dev, jnp.float32(a),
-                  jnp.float32(b), positions)
+        return fn(lp, self.embedder.params, view.search_args,
+                  view.db_parts, view.lengths, h, thr_dev,
+                  jnp.float32(view.sim_a), jnp.float32(view.sim_b),
+                  positions, qlen, kpad)
 
     def _capture_now(self, use_memo: bool) -> bool:
         """Admission sampling: capture misses on every Nth served batch
@@ -619,34 +838,87 @@ class MemoEngine:
                 and not self.is_encdec
                 and self._serve_batches % max(1, self.mc.admit_every) == 0)
 
-    def _drain_stats(self, pend, st: MemoStats, capture: bool = False):
+    def _drain_stats(self, prep: PreparedBatch,
+                     st: MemoStats) -> MaintenancePayload:
         """Materialize the per-layer device counters in O(1) stacked host
         transfers per batch (TWO: sims+hits as one f32 block, slots as one
         i32 block — plus embs and APMs under capture), after the trailing
-        barrier. Device-tier hits feed the store's reuse clock here."""
+        barrier. Rows past ``n_valid`` (runtime batch padding) are
+        dropped. Returns the MaintenancePayload — reuse slots and captured
+        misses — WITHOUT touching the store: the caller decides where
+        maintenance runs (inline vs the MemoServer worker)."""
+        pend = prep.pend
+        out = MaintenancePayload()
         if not pend:
-            return
+            return out
+        nv = prep.n_valid
         payload = np.asarray(jnp.stack(
             [jnp.stack([p[1], p[2].astype(jnp.float32)]) for p in pend]))
-        slots = np.asarray(jnp.stack([p[3] for p in pend]))      # (L, B)
-        hits = payload[:, 1] > 0.5                               # (L, B)
-        for p, s_row, h_row, i_row in zip(pend, payload[:, 0], hits, slots):
+        slots = np.asarray(jnp.stack([p[3] for p in pend]))[:, :nv]
+        hits = payload[:, 1, :nv] > 0.5                          # (L, nv)
+        sims = payload[:, 0, :nv]
+        for p, s_row, h_row in zip(pend, sims, hits):
             li = p[0]
             st.n_layer_attempts += int(s_row.shape[0])
             nh = int(h_row.sum())
             st.n_hits += nh
             st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + nh
             st.sims.extend(s_row.tolist())
-        if self.store is not None and hits.any():
-            self.store.note_reuse(slots[hits])
-        if capture and len(pend[0]) > 4:
-            embs = np.asarray(jnp.stack([p[4] for p in pend]))
-            apms = np.asarray(jnp.stack([p[5] for p in pend]))
+        if hits.any():
+            out.reuse_slots = slots[hits]
+        if prep.capture and len(pend[0]) > 4:
+            embs = np.asarray(jnp.stack([p[4] for p in pend]))[:, :nv]
+            apms = np.asarray(jnp.stack([p[5] for p in pend]))[:, :nv]
+            lens = None if prep.lengths is None else prep.lengths[:nv]
             for l in range(embs.shape[0]):
                 miss = ~hits[l]
                 if miss.any():
-                    self._pending_admissions.append(
-                        (apms[l][miss], embs[l][miss]))
+                    out.admissions.append(self._stage_capture(
+                        apms[l][miss], embs[l][miss],
+                        None if lens is None else lens[miss]))
+        return out
+
+    def _stage_capture(self, apms, embs, lens):
+        """Normalize one captured miss block for admission: pad the APMs
+        to the arena (calibration) length and zero the pad-query rows, so
+        a stored entry is identical no matter which bucket captured it —
+        only its true length matters (the length gate guarantees it is
+        only ever replayed at that length)."""
+        S_max = self.store.apm_shape[-1]
+        B, H, S = apms.shape[:3]
+        if lens is None:
+            lens = np.full(B, S, np.int32)
+        elif isinstance(lens, np.ndarray):
+            lens = lens.astype(np.int32, copy=False)
+        else:
+            lens = np.asarray(lens, np.int32)
+        if S < S_max:
+            padded = np.zeros((B, H, S_max, S_max), apms.dtype)
+            padded[:, :, :S, :S] = apms
+            apms = padded
+        if (lens < S_max).any():
+            row_ok = np.arange(S_max)[None, :] < lens[:, None]
+            apms = apms * row_ok[:, None, :, None].astype(apms.dtype)
+        return apms, embs, lens
+
+    def apply_maintenance(self, payload: Optional[MaintenancePayload],
+                          stats: Optional[MemoStats] = None) -> None:
+        """Run one batch's host-tier store work — reuse-clock feeding,
+        budgeted admission + eviction, generation-counted delta sync, and
+        periodic recalibration — finishing with an atomic snapshot
+        publish. ``infer`` calls this inline (synchronous batch-boundary
+        maintenance); the MemoServer's background worker calls it
+        off-thread, double-buffered against the next batch's device
+        compute (DESIGN.md §2.7). Exactly one maintenance actor may run
+        at a time; the MemoStore's lock backstops misuse."""
+        if payload is None or self.store is None or payload.empty:
+            return
+        st = stats or MemoStats()
+        if payload.reuse_slots is not None and payload.reuse_slots.size:
+            self.store.note_reuse(payload.reuse_slots)
+        if payload.admissions:
+            self._pending_admissions.extend(payload.admissions)
+        self._flush_admissions(st)
 
     def _flush_admissions(self, st: MemoStats):
         """Batch-boundary admission: push captured misses into the host
@@ -655,11 +927,12 @@ class MemoEngine:
         if not self._pending_admissions:
             return
         pend, self._pending_admissions = self._pending_admissions, []
-        apms = np.concatenate([a for a, _ in pend], 0)
-        embs = np.concatenate([e for _, e in pend], 0)
+        apms = np.concatenate([a for a, _, _ in pend], 0)
+        embs = np.concatenate([e for _, e, _ in pend], 0)
+        lens = np.concatenate([l for _, _, l in pend], 0)
         if apms.shape[0]:
-            slots = self.store.admit(apms, embs)
-            st.n_admitted += int(slots.size)
+            slots = self.store.admit(apms, embs, lens)
+            st.add_admitted(int(slots.size))
             self.store.sync()
             self._flush_count += 1
             if self.mc.recal_every:
@@ -667,6 +940,9 @@ class MemoEngine:
                 self._recal_buf = self._recal_buf[-16:]   # rolling window
                 if self._flush_count % self.mc.recal_every == 0:
                     self._recalibrate_online()
+                    # recal changed sim_cal: re-publish so the next batch
+                    # serves the refreshed calibration
+                    self.store.publish()
 
     def _recalibrate_online(self, n_pairs: int = 192, blend: float = 0.5):
         """Refit sim ≈ a·dist + b from recently captured misses — each
@@ -734,41 +1010,56 @@ class MemoEngine:
         return hd @ params["embed"].T, st
 
     def _lookup(self, lp, h, kind, thr, st: MemoStats, li,
-                positions=None, capture: bool = False):
+                positions=None, capture: bool = False, lengths=None,
+                kpad=None, n_valid: Optional[int] = None):
         cfg = self.cfg
+        S = h.shape[1]
+        nv = h.shape[0] if n_valid is None else n_valid
         t0 = time.perf_counter()
         x = bb.norm_apply(lp["norm1"], h, cfg.norm)
-        emb = self._embed(x)
+        emb = self._embed(x, lengths=lengths)
         jax.block_until_ready(emb)
         t1 = time.perf_counter()
         emb_np = np.asarray(emb)
         dist, idx = self.store.lookup(emb_np, 1)
         sim_est = self.predict_sim(dist[:, 0])
         hit = sim_est > thr
+        # length gate (host leg), ALWAYS on — mirrors the fused path: a
+        # fixed-length batch's true length is S
+        ent = self.store.entry_lengths(idx[:, 0])
+        hit = hit & (ent == (np.asarray(lengths, np.int32)
+                             if lengths is not None else S))
         t2 = time.perf_counter()
         apm = self.db.get(idx[:, 0])                     # host arena gather
+        if apm.shape[-1] != S:
+            apm = apm[:, :, :S, :S]      # arena rows sliced to the bucket
         t3 = time.perf_counter()
         st.t_embed += t1 - t0
         st.t_search += t2 - t1
         st.t_fetch += t3 - t2
-        st.n_layer_attempts += hit.shape[0]
-        st.n_hits += int(hit.sum())
-        st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + int(hit.sum())
-        st.sims.extend(sim_est.tolist())
-        if capture and positions is not None and (~hit).any():
-            apm_true = np.asarray(self._apm_probe(lp, x, kind, positions))
-            self._pending_admissions.append(
-                (apm_true[~hit], emb_np[~hit]))
+        st.n_layer_attempts += nv
+        nh = int(hit[:nv].sum())
+        st.n_hits += nh
+        st.per_layer_hits[li] = st.per_layer_hits.get(li, 0) + nh
+        st.sims.extend(sim_est[:nv].tolist())
+        if capture and positions is not None and (~hit[:nv]).any():
+            apm_true = np.asarray(self._apm_probe(lp, x, kind, positions,
+                                                  kpad=kpad))
+            miss = ~hit[:nv]
+            self._pending_admissions.append(self._stage_capture(
+                apm_true[:nv][miss], emb_np[:nv][miss],
+                None if lengths is None
+                else np.asarray(lengths, np.int32)[:nv][miss]))
         # keep the APM batch in the arena dtype (f16) and on the host —
         # the jitted consumer casts on-device (one transfer, no copies)
         return attn_mod.Memo(apm=apm, hit=hit, idx=idx[:, 0])
 
-    def _apm_probe(self, lp, x, kind, positions):
+    def _apm_probe(self, lp, x, kind, positions, kpad=None):
         """The true APM of the normed input, computed with the exact miss
         path semantics — the host-path analogue of the fused capture (only
         the apm output is used, so the probe's APM·V + output projection
         are dead-code-eliminated inside the jit)."""
-        key = ("apm_probe", kind, x.shape)
+        key = ("apm_probe", kind, x.shape, kpad is not None)
         fn = self._jit_cache.get(key)
         if fn is None:
             cfg = self.cfg
@@ -776,14 +1067,14 @@ class MemoEngine:
                       else attn_mod.mla_apply)
             mask_kind = "causal" if cfg.causal else "bidir"
 
-            def run(lp, x, positions):
+            def run(lp, x, positions, kpad):
                 _, apm = f_attn(lp["mix"], x, cfg, positions=positions,
-                                mask_kind=mask_kind,
+                                mask_kind=mask_kind, kpad=kpad,
                                 window=cfg.sliding_window, return_apm=True)
                 return apm.astype(jnp.float16)
             fn = jax.jit(run)
             self._jit_cache[key] = fn
-        return fn(lp, x, positions)
+        return fn(lp, x, positions, kpad)
 
     # -- layer application --------------------------------------------------
     def _chan_tail(self, lp, h, li):
@@ -800,21 +1091,21 @@ class MemoEngine:
             out = mlp_apply(lp["chan"], x, cfg.act, cfg.glu)
         return h + out
 
-    def _layer_plain(self, lp, h, kind, li, memo, positions):
+    def _layer_plain(self, lp, h, kind, li, memo, positions, kpad=None):
         key = ("plain", kind, li if self.cfg.moe else 0, memo is not None,
-               h.shape)
+               h.shape, kpad is not None)
         fn = self._jit_cache.get(key)
         if fn is None:
             cfg = self.cfg
 
-            def run(lp, h, memo, positions):
+            def run(lp, h, memo, positions, kpad):
                 out, _, _, _ = bb._layer_apply(
                     lp, h, cfg, kind, li, mode="full", positions=positions,
-                    pos=None, cache=None, memo=memo)
+                    pos=None, cache=None, memo=memo, kpad=kpad)
                 return out
             fn = jax.jit(run)
             self._jit_cache[key] = fn
-        return fn(lp, h, memo, positions)
+        return fn(lp, h, memo, positions, kpad)
 
     def _layer_bucket(self, lp, h, kind, li, memo, positions):
         """Split rows into hit/miss buckets; hits use the memo-only

@@ -442,6 +442,13 @@ class ClusteredDeviceIndex(DeviceIndex):
         self._oscales: Optional[jnp.ndarray] = None
         self._oids: Optional[jnp.ndarray] = None
         self._mesh_table: Optional[jnp.ndarray] = None
+        # the atomically-published search pytree (see search_args): every
+        # mutation path finishes by rebuilding this ONE tuple and assigning
+        # it in a single reference write, so a reader on another thread
+        # (the MemoServer serving loop, via a StoreSnapshot) either sees
+        # the whole previous state or the whole new one — never a torn
+        # mix of new centroids with old packed rows
+        self._packed: Optional[tuple] = None
         self._built = False
         self._n = 0
         self.n_rebuilds = 0
@@ -542,6 +549,15 @@ class ClusteredDeviceIndex(DeviceIndex):
         grown = len(self._overflow) - getattr(self, "_overflow_base", 0)
         if grown > max(8, int(self.rebuild_frac * max(1, self._n))):
             self.rebuild()
+        else:
+            self._republish()
+
+    def _republish(self):
+        """Publish the current packed + overflow arrays as one tuple in a
+        single (atomic under the GIL) reference assignment — the
+        generation-publish protocol's index leg (DESIGN.md §2.7)."""
+        self._packed = (self._centroids, self._pvecs, self._pscales,
+                        self._pids, self._ovecs, self._oscales, self._oids)
 
     def _patch_packed(self, slots: np.ndarray):
         """Scatter current (possibly tombstoned) rows into their packed
@@ -631,6 +647,7 @@ class ClusteredDeviceIndex(DeviceIndex):
             self._overflow_base = 0
             self._sync_overflow()
             self._built = True
+            self._republish()
             return
         x = self._host[live]
         k = self.n_clusters or max(1, int(np.sqrt(live.size)))
@@ -694,6 +711,7 @@ class ClusteredDeviceIndex(DeviceIndex):
         self.transfer_bytes += int(cent.nbytes + codes.nbytes
                                    + scales.nbytes + pids.nbytes)
         self._built = True
+        self._republish()
         self.n_rebuilds += 1
 
     @property
@@ -708,8 +726,7 @@ class ClusteredDeviceIndex(DeviceIndex):
             return self.table
         if not self._built:
             self.rebuild()
-        return (self._centroids, self._pvecs, self._pscales, self._pids,
-                self._ovecs, self._oscales, self._oids)
+        return self._packed
 
     # ------------------------------------------------------------- search
     def search_device(self, q, k: int = 1, *, table=None, args=None

@@ -1,0 +1,337 @@
+"""MemoServer — asynchronous continuous-batching serving runtime
+(DESIGN.md §2.7).
+
+The engine serves *batches*; production traffic is *requests*: individual
+variable-length sequences arriving open-loop. MemoServer owns the gap:
+
+* **length-bucketed continuous batching** — each request lands in the
+  smallest length bucket that fits it; a batch launches when a bucket
+  fills ``max_batch`` or its head request has waited ``max_delay``.
+  Tokens are padded to the bucket length and the batch row count is
+  padded to a power of two (filler rows replay row 0 and are dropped at
+  ``n_valid``), so the jit-shape set is bounded by
+  ``len(buckets) * log2(max_batch)`` — no recompiles under arbitrary
+  traffic.
+* **step-wise engine execution** — the runtime calls the engine's
+  ``prepare_batch → run_layers → finalize`` split directly, keeping the
+  zero-per-layer-host-sync invariant (one barrier per batch, enforced by
+  tests/test_runtime.py).
+* **off-thread store maintenance** — ``finalize`` returns a
+  ``MaintenancePayload`` (device-tier reuse, captured misses); in async
+  mode a single background worker applies it (admission under budget,
+  CLOCK eviction, delta-sync prep + ship, recalibration) while the
+  serving thread is already driving batch t+1's device compute. The
+  worker finishes each payload by atomically publishing a fresh
+  ``StoreSnapshot``; the serving thread reads exactly one snapshot per
+  batch, so the fused fast path can never observe a half-applied sync.
+  In sync mode the same payload is applied inline at the batch boundary
+  — the head-of-line-latency baseline the benchmark A/Bs against.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import MemoEngine, MemoStats
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (length,) int32
+    arrival: float              # runtime-clock seconds (scheduled arrival)
+    enqueue: float              # when it actually entered its bucket queue
+
+
+@dataclass
+class Completion:
+    rid: int
+    logits: np.ndarray          # unpadded: (n_classes,) or (length, vocab)
+    latency: float              # completion − arrival (queue + compute)
+    length: int
+    bucket: int
+    batch_rows: int             # real rows in the batch that served it
+
+
+def pow2_buckets(max_len: int, n: int = 3, min_len: int = 8
+                 ) -> Tuple[int, ...]:
+    """Halving length buckets ending at ``max_len`` (the arena length):
+    e.g. 64 → (16, 32, 64)."""
+    out = [int(max_len)]
+    while len(out) < n and out[-1] // 2 >= min_len:
+        out.append(out[-1] // 2)
+    return tuple(sorted(out))
+
+
+class MemoServer:
+    """Open-loop serving runtime over a built (fast-path) MemoEngine.
+
+    ``async_maintenance=True`` moves ALL host-tier store work onto the
+    background worker; ``False`` applies it inline at each batch boundary
+    (the synchronous baseline). Everything else is identical, so the A/B
+    isolates the overlap.
+    """
+
+    def __init__(self, engine: MemoEngine, *,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_batch: int = 16, max_delay: float = 2e-3,
+                 batch_quantum: int = 4, async_maintenance: bool = True,
+                 maint_queue_depth: int = 4):
+        if engine.store is None:
+            raise RuntimeError("build() the engine before serving")
+        if not engine._use_fast_path():
+            raise RuntimeError("MemoServer drives the device fast path; "
+                               "use MemoConfig(mode='bucket')")
+        if engine.mc.mode == "kernel":
+            raise RuntimeError("variable-length serving supports bucket "
+                               "mode (the kernel path is fixed-length)")
+        self.engine = engine
+        s_max = engine.store.apm_shape[-1]
+        self.buckets = tuple(sorted(int(b) for b in (
+            buckets if buckets is not None else pow2_buckets(s_max))))
+        if self.buckets[-1] > s_max:
+            raise ValueError(f"bucket {self.buckets[-1]} exceeds the "
+                             f"arena length {s_max}")
+        self.max_batch = int(max_batch)
+        self.max_delay = float(max_delay)
+        self.batch_quantum = max(1, int(batch_quantum))
+        self.async_maintenance = bool(async_maintenance)
+        self._queues: Dict[int, deque] = {b: deque() for b in self.buckets}
+        self._rid = 0
+        self._t0 = time.perf_counter()
+        # global stats: per-batch MemoStats are merged in (serving thread)
+        # and the maintenance worker bumps admission counters — both via
+        # the lock-guarded MemoStats/SimReservoir paths
+        self.stats = MemoStats()
+        self.n_batches = 0
+        self.n_filler_rows = 0          # pow2 batch-padding overhead
+        self.maintenance_errors: List[BaseException] = []
+        self._maint_q: Optional[queue.Queue] = None
+        self._worker: Optional[threading.Thread] = None
+        if self.async_maintenance:
+            # BOUNDED: each payload pins full captured-miss APM blocks;
+            # if maintenance falls more than ``maint_queue_depth`` batches
+            # behind, the serving thread blocks on put() — backpressure
+            # degrades toward the sync baseline instead of growing the
+            # queue (and memory) without bound
+            self._maint_q = queue.Queue(maxsize=max(1, maint_queue_depth))
+            self._worker = threading.Thread(
+                target=self._maintenance_loop, name="memo-maintenance",
+                daemon=True)
+            self._worker.start()
+
+    # ------------------------------------------------------------- clock
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # --------------------------------------------------------- queueing
+    @property
+    def queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def bucket_for(self, length: int) -> int:
+        for b in self.buckets:
+            if length <= b:
+                return b
+        raise ValueError(f"request length {length} exceeds the largest "
+                         f"bucket {self.buckets[-1]}")
+
+    def submit(self, tokens, arrival: Optional[float] = None) -> int:
+        """Enqueue one request; returns its id. ``arrival`` defaults to
+        now — open-loop drivers pass the scheduled arrival time so queue
+        delay is charged to the server, not the generator."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError("empty request")
+        now = self._now()
+        rid, self._rid = self._rid, self._rid + 1
+        req = Request(rid=rid, tokens=tokens,
+                      arrival=now if arrival is None else float(arrival),
+                      enqueue=now)
+        self._queues[self.bucket_for(tokens.size)].append(req)
+        return rid
+
+    def _ready_bucket(self, now: float, flush: bool) -> Optional[int]:
+        """Batching policy: a bucket is ready when full or when its head
+        request has waited past ``max_delay``; among ready buckets the
+        oldest head wins (head-of-line fairness across buckets)."""
+        best, best_t = None, None
+        for b, q in self._queues.items():
+            if not q:
+                continue
+            head_wait = now - q[0].enqueue
+            if flush or len(q) >= self.max_batch \
+                    or head_wait >= self.max_delay:
+                if best is None or q[0].enqueue < best_t:
+                    best, best_t = b, q[0].enqueue
+        return best
+
+    def _pad_rows(self, n: int) -> int:
+        """Pow2 row padding from the bounded set {quantum, 2·quantum, …,
+        max_batch} — the jit-shape budget's batch leg."""
+        p = self.batch_quantum
+        while p < n:
+            p *= 2
+        return min(p, self.max_batch)
+
+    # ---------------------------------------------------------- serving
+    def step(self, flush: bool = False) -> List[Completion]:
+        """Assemble and serve at most one batch. Returns completions
+        (empty when no bucket is ready)."""
+        now = self._now()
+        b = self._ready_bucket(now, flush)
+        if b is None:
+            return []
+        q = self._queues[b]
+        reqs = [q.popleft() for _ in range(min(len(q), self.max_batch))]
+        return self._execute(b, reqs)
+
+    def _execute(self, bucket: int, reqs: List[Request]
+                 ) -> List[Completion]:
+        eng = self.engine
+        n = len(reqs)
+        rows = self._pad_rows(n)
+        toks = np.zeros((rows, bucket), np.int32)
+        lens = np.empty((rows,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : r.tokens.size] = r.tokens
+            lens[i] = r.tokens.size
+        if rows > n:                    # filler rows replay row 0
+            toks[n:] = toks[0]
+            lens[n:] = lens[0]
+            self.n_filler_rows += rows - n
+        batch = {"tokens": jnp.asarray(toks), "lengths": lens,
+                 "n_valid": n}
+        st = MemoStats()
+        prep = eng.prepare_batch(batch,
+                                 sync_store=not self.async_maintenance)
+        eng.run_layers(prep)
+        out, st, payload = eng.finalize(prep, stats=st)
+        if self.async_maintenance:
+            if self._worker is None:      # closed: nobody drains the
+                raise RuntimeError(       # queue — fail loudly instead
+                    "MemoServer is closed")   # of blocking on put()
+            self._maint_q.put(payload)
+        else:
+            eng.apply_maintenance(payload, stats=self.stats)
+        self.stats.merge(st)
+        self.n_batches += 1
+        done = self._now()
+        out_np = np.asarray(out)
+        comps = []
+        for i, r in enumerate(reqs):
+            logits = (out_np[i] if out_np.ndim == 2
+                      else out_np[i, : r.tokens.size])
+            comps.append(Completion(
+                rid=r.rid, logits=logits, latency=done - r.arrival,
+                length=int(r.tokens.size), bucket=bucket, batch_rows=n))
+        return comps
+
+    # ------------------------------------------------------ maintenance
+    def _maintenance_loop(self):
+        while True:
+            item = self._maint_q.get()
+            try:
+                if item is None:
+                    return
+                self.engine.apply_maintenance(item, stats=self.stats)
+            except BaseException as e:  # noqa: BLE001 — surfaced to caller
+                self.maintenance_errors.append(e)
+            finally:
+                self._maint_q.task_done()
+
+    def drain_maintenance(self):
+        """Block until every queued payload has been applied (and its
+        snapshot published) — the quiesce point for tests/benchmarks.
+        Raises (and clears) the first worker error since the last
+        drain."""
+        if self._maint_q is not None:
+            self._maint_q.join()
+        if self.maintenance_errors:
+            errs, self.maintenance_errors = self.maintenance_errors, []
+            raise errs[0]
+
+    def close(self):
+        if self._worker is not None:
+            self._maint_q.put(None)
+            self._worker.join(timeout=30)
+            self._worker = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        try:
+            self.drain_maintenance()
+        finally:
+            self.close()
+
+    # ---------------------------------------------------------- warm-up
+    def warmup(self, batch_sizes: Optional[Sequence[int]] = None):
+        """Compile the bounded jit-shape set outside the measured window:
+        one dummy batch per (bucket, padded-row-count, capture-variant)
+        combination — with ``admit_every > 1`` the fused jit has BOTH a
+        capturing and a non-capturing variant per shape, and serving
+        alternates between them, so both must be compiled here or a
+        mid-trace XLA compile lands in the p99. Maintenance payloads are
+        dropped and counters rolled back, so warm-up leaves the store
+        untouched."""
+        sizes = list(batch_sizes) if batch_sizes is not None else None
+        if sizes is None:
+            sizes, p = [], self.batch_quantum
+            while p < self.max_batch:
+                sizes.append(p)
+                p *= 2
+            sizes.append(self.max_batch)
+        eng = self.engine
+        serve_counter = eng._serve_batches
+        # _capture_now keys off _serve_batches % admit_every: batch
+        # parity 0 captures (when admission is on), parity 1 does not
+        parities = ([0, 1] if eng.mc.admit and eng.mc.admit_every > 1
+                    else [0])
+        try:
+            for b in self.buckets:
+                for rows in sizes:
+                    for parity in parities:
+                        eng._serve_batches = parity
+                        toks = np.zeros((rows, b), np.int32)
+                        lens = np.full((rows,), max(1, b // 2), np.int32)
+                        batch = {"tokens": jnp.asarray(toks),
+                                 "lengths": lens, "n_valid": rows}
+                        prep = eng.prepare_batch(batch, sync_store=False)
+                        eng.run_layers(prep)
+                        eng.finalize(prep, stats=MemoStats())
+        finally:
+            eng._serve_batches = serve_counter
+
+    # --------------------------------------------------------- open loop
+    def run(self, workload: Sequence[Tuple[float, np.ndarray]],
+            ) -> List[Completion]:
+        """Serve an open-loop trace: ``workload`` is [(arrival_s, tokens)]
+        on the runtime clock starting now. Arrivals are injected by
+        schedule regardless of server progress (queueing delay is the
+        server's problem — that is the open-loop point); returns one
+        Completion per request with end-to-end latency."""
+        wl = sorted(workload, key=lambda a: a[0])
+        base = self._now()
+        i, comps = 0, []
+        while i < len(wl) or self.queued:
+            now = self._now() - base
+            while i < len(wl) and wl[i][0] <= now:
+                self.submit(wl[i][1], arrival=base + wl[i][0])
+                i += 1
+            got = self.step(flush=i >= len(wl))
+            if got:
+                comps.extend(got)
+                continue
+            if i < len(wl):
+                time.sleep(min(max(wl[i][0] - (self._now() - base), 0.0),
+                               self.max_delay))
+        return comps

@@ -38,14 +38,41 @@ clustered (IVF) layout once the entry count crosses
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.database import AttentionDB, DeviceDB
+from repro.core.database import AttentionDB, DeviceDB, pad_delta_pow2
 from repro.core.index import (
     TOMBSTONE, ClusteredDeviceIndex, DeviceIndex, ExactIndex, IVFIndex)
+
+
+class StoreSnapshot(NamedTuple):
+    """An immutable view of the device tier, published atomically.
+
+    The serving thread reads ``store.snapshot`` ONCE per batch and traces
+    every fused layer against these arrays; the maintenance worker builds
+    the next snapshot off-thread and swaps it in with a single reference
+    assignment (atomic under the GIL). In-flight batches keep serving the
+    arrays they captured — jnp updates are functional, so the previous
+    generation stays valid until its last reader drops it — and no batch
+    can ever observe half of a delta sync (DESIGN.md §2.7)."""
+    generation: int
+    db_parts: Tuple[jnp.ndarray, ...]     # DeviceDB codec parts
+    index: object                         # the DeviceIndex that produced
+    #                                       search_args (its search_device
+    #                                       is pure given args — the pair
+    #                                       must never be mixed across
+    #                                       generations)
+    search_args: object                   # device-index traced pytree
+    index_key: str                        # jit-cache key component
+    codec_key: object
+    lengths: jnp.ndarray                  # (cap,) int32 entry lengths
+    sim_a: float                          # dist→similarity calibration
+    sim_b: float
 
 
 @dataclass
@@ -101,6 +128,16 @@ class MemoStore:
         # device-index deltas regardless of the host index kind
         self._embs_host = np.full((capacity, embed_dim), TOMBSTONE,
                                   np.float32)
+        # per-entry valid sequence length (−1 = dead slot): variable-length
+        # serving gates hits on length equality, so a padded query can only
+        # reuse an APM captured at its own true length (DESIGN.md §2.7)
+        self._lens_host = np.full((capacity,), -1, np.int32)
+        self._dev_lens: Optional[jnp.ndarray] = None
+        # one maintenance actor at a time (admit/evict/sync/recal run on
+        # either the serving thread or the MemoServer worker, never both
+        # concurrently — the lock makes misuse safe, not fast)
+        self._lock = threading.RLock()
+        self._snapshot: Optional[StoreSnapshot] = None
         # lifecycle state
         self.generation = 0           # bumped on every host-tier mutation
         self.device_generation = -1   # generation the device tier reflects
@@ -159,7 +196,26 @@ class MemoStore:
         eviction clock sees the same reuse signal as host-tier ``get``."""
         slots = np.asarray(slots).reshape(-1)
         if slots.size:
-            np.add.at(self.db.reuse_counts, slots, 1)
+            with self._lock:
+                np.add.at(self.db.reuse_counts, slots, 1)
+
+    @property
+    def default_len(self) -> int:
+        """Entry length when admission doesn't say otherwise — the arena
+        sequence length (fixed-length calibration corpora)."""
+        return int(self.apm_shape[-1])
+
+    def entry_lengths(self, slots) -> np.ndarray:
+        """Valid sequence length per slot (−1 for dead slots) — the host
+        leg of the length gate; the device leg rides in the snapshot."""
+        slots = np.asarray(slots).reshape(-1)
+        return self._lens_host[slots]
+
+    def embeddings_at(self, slots) -> np.ndarray:
+        """Stored embedding rows per slot (TOMBSTONE rows for dead
+        slots) — the public read of the slot-aligned staging mirror."""
+        slots = np.asarray(slots).reshape(-1)
+        return self._embs_host[slots].copy()
 
     # --------------------------------------------------------------- admit
     def _ensure_emb_capacity(self, need: int) -> None:
@@ -170,15 +226,27 @@ class MemoStore:
                       np.float32)
         new[:cap] = self._embs_host
         self._embs_host = new
+        lens = np.full((new.shape[0],), -1, np.int32)
+        lens[:cap] = self._lens_host
+        self._lens_host = lens
 
-    def admit(self, apms, embs) -> np.ndarray:
+    def admit(self, apms, embs, lengths=None) -> np.ndarray:
         """Online admission under the byte budget. apms: (B, H, L, L),
-        embs: (B, embed_dim). Returns the assigned arena slots (recycled
-        free slots first, then fresh appends). When the budget would be
-        exceeded the CLOCK evicts cold entries first; if the batch alone
-        exceeds the whole budget only its newest entries are kept."""
+        embs: (B, embed_dim), lengths: optional (B,) true sequence lengths
+        (defaults to the arena length — fixed-length corpora). Returns the
+        assigned arena slots (recycled free slots first, then fresh
+        appends). When the budget would be exceeded the CLOCK evicts cold
+        entries first; if the batch alone exceeds the whole budget only
+        its newest entries are kept."""
+        with self._lock:
+            return self._admit_locked(apms, embs, lengths)
+
+    def _admit_locked(self, apms, embs, lengths) -> np.ndarray:
         apms = np.asarray(apms, self.db.dtype)
         embs = np.asarray(embs, np.float32)
+        lengths = (np.full(apms.shape[0], self.default_len, np.int32)
+                   if lengths is None
+                   else np.asarray(lengths, np.int32).reshape(-1))
         n_new = apms.shape[0]
         if n_new == 0:
             return np.zeros(0, np.int64)
@@ -186,6 +254,7 @@ class MemoStore:
         if cap is not None:
             if n_new > cap:
                 apms, embs = apms[-cap:], embs[-cap:]
+                lengths = lengths[-cap:]
                 n_new = cap
             over = self.live_count + n_new - cap
             if over > 0:
@@ -193,6 +262,7 @@ class MemoStore:
         slots = self.db.put(apms)
         self._ensure_emb_capacity(int(slots.max()) + 1)
         self._embs_host[slots] = embs
+        self._lens_host[slots] = lengths
         # when the host-tier index IS the device table, sync() lands the
         # rows (one delta, counted once); otherwise update the host index
         # now so lookups between admit and sync see the new entries
@@ -215,32 +285,34 @@ class MemoStore:
         evicted: List[int] = []
         if n <= 0 or db._n == 0 or db.live_count == 0:
             return evicted
-        n = min(n, db.live_count)
-        counts = db.reuse_counts
-        hand = self._clock_hand % db._n
-        scanned, limit = 0, 2 * db._n
-        while len(evicted) < n and scanned < limit:
-            slot, hand = hand, (hand + 1) % db._n
-            scanned += 1
-            if not db._live[slot]:
-                continue
-            if counts[slot] > 0:
-                counts[slot] //= 2
-            else:
-                evicted.append(slot)
-        self._clock_hand = hand
-        if len(evicted) < n:      # all hot: fall back to coldest-first
-            live = np.flatnonzero(db.live_mask)
-            live = live[~np.isin(live, evicted)]
-            order = live[np.argsort(counts[live], kind="stable")]
-            evicted.extend(int(s) for s in order[: n - len(evicted)])
-        db.release(evicted)
-        self.index.remove(evicted)
-        self._ensure_emb_capacity(max(evicted) + 1)
-        self._embs_host[evicted] = TOMBSTONE
-        self._dirty.update(evicted)
-        self.generation += 1
-        self.stats.n_evicted += len(evicted)
+        with self._lock:
+            n = min(n, db.live_count)
+            counts = db.reuse_counts
+            hand = self._clock_hand % db._n
+            scanned, limit = 0, 2 * db._n
+            while len(evicted) < n and scanned < limit:
+                slot, hand = hand, (hand + 1) % db._n
+                scanned += 1
+                if not db._live[slot]:
+                    continue
+                if counts[slot] > 0:
+                    counts[slot] //= 2
+                else:
+                    evicted.append(slot)
+            self._clock_hand = hand
+            if len(evicted) < n:   # all hot: fall back to coldest-first
+                live = np.flatnonzero(db.live_mask)
+                live = live[~np.isin(live, evicted)]
+                order = live[np.argsort(counts[live], kind="stable")]
+                evicted.extend(int(s) for s in order[: n - len(evicted)])
+            db.release(evicted)
+            self.index.remove(evicted)
+            self._ensure_emb_capacity(max(evicted) + 1)
+            self._embs_host[evicted] = TOMBSTONE
+            self._lens_host[evicted] = -1
+            self._dirty.update(evicted)
+            self.generation += 1
+            self.stats.n_evicted += len(evicted)
         return evicted
 
     # ---------------------------------------------------------------- sync
@@ -277,21 +349,29 @@ class MemoStore:
             for s in fresh:
                 if rows is not None and s < rows.shape[0]:
                     self._embs_host[s] = rows[s]
+                self._lens_host[s] = self.default_len
             self._dirty.update(fresh)
             self.generation += 1
 
     def sync(self, force_full: bool = False) -> Dict[str, object]:
         """Incremental device sync. Generation-counted: a clean store is a
         cheap host-side no-op; dirty slots that fit the device slack move
-        as ONE scatter each for APMs and embeddings; only arena growth
-        past the device allocation (or ``force_full``) re-materializes —
-        with fresh slack sized by ``device_slack`` so subsequent
-        admissions go back to deltas."""
+        as ONE scatter each for APMs, embeddings and entry lengths; only
+        arena growth past the device allocation (or ``force_full``)
+        re-materializes — with fresh slack sized by ``device_slack`` so
+        subsequent admissions go back to deltas. Finishes by publishing a
+        fresh ``StoreSnapshot`` (the only view serving threads read)."""
+        with self._lock:
+            return self._sync_locked(force_full)
+
+    def _sync_locked(self, force_full: bool) -> Dict[str, object]:
         self._absorb_external_growth()
         n = len(self.db)
         if (self.device_db is not None and not force_full
                 and not self._dirty):
             self.stats.n_noop_syncs += 1
+            if self._snapshot is None:
+                self.publish()
             return {"kind": "noop", "bytes": 0}
         need_full = (force_full or self.device_db is None
                      or n > self.device_db.capacity
@@ -321,8 +401,12 @@ class MemoStore:
                 # re-materialized one so both roles stay one object
                 self.index = di
             self.device_index = di
+            lens = np.full((cap,), -1, np.int32)
+            lens[:n] = self._lens_host[:n]
+            self._dev_lens = jnp.asarray(lens)
             shipped = (self.device_db.transfer_bytes
-                       + self.device_index.transfer_bytes)
+                       + self.device_index.transfer_bytes
+                       + int(lens.nbytes))
             self.stats.n_full_syncs += 1
             self.stats.bytes_full += shipped
             kind = "full"
@@ -344,10 +428,54 @@ class MemoStore:
             if dead.size:
                 self.device_index.remove(dead)
             shipped += self.device_index.transfer_bytes - b0
+            if self._dev_lens is None:      # device tier predates lengths
+                lens = np.full((self.device_db.capacity,), -1, np.int32)
+                lens[:n] = self._lens_host[:n]
+                self._dev_lens = jnp.asarray(lens)
+                shipped += int(lens.nbytes)
+            if slots.size:
+                sl, vals = pad_delta_pow2(slots, self._lens_host[slots])
+                self._dev_lens = self._dev_lens.at[jnp.asarray(sl)].set(
+                    jnp.asarray(vals))
+                shipped += int(vals.nbytes + sl.size * 4)
             self.stats.n_delta_syncs += 1
             self.stats.bytes_delta += shipped
             kind = "delta"
         self._dirty.clear()
         self._synced_n = n
         self.device_generation = self.generation
+        self.publish()
         return {"kind": kind, "bytes": shipped}
+
+    # ------------------------------------------------------------- publish
+    @property
+    def snapshot(self) -> Optional[StoreSnapshot]:
+        """The last published device-tier view (None until first sync)."""
+        return self._snapshot
+
+    def publish(self) -> StoreSnapshot:
+        """Build and atomically install a fresh ``StoreSnapshot``. Called
+        at the end of every sync and after online recalibration — the
+        single reference assignment is the generation-publish protocol's
+        commit point: readers see the previous snapshot or this one,
+        never a mix (DESIGN.md §2.7). Taken under the store lock so the
+        component reads (parts / search_args / lengths / sim_cal) come
+        from ONE generation even if two maintenance actors misuse the
+        single-actor contract."""
+        with self._lock:
+            return self._publish_locked()
+
+    def _publish_locked(self) -> StoreSnapshot:
+        di = self.device_index
+        snap = StoreSnapshot(
+            generation=self.generation,
+            db_parts=self.device_db.parts,
+            index=di,
+            search_args=di.search_args,
+            index_key=type(di).__name__,
+            codec_key=self.codec.key,
+            lengths=self._dev_lens,
+            sim_a=float(self.sim_cal[0]),
+            sim_b=float(self.sim_cal[1]))
+        self._snapshot = snap
+        return snap

@@ -156,6 +156,11 @@ def main():
     ap.add_argument("--no-fast-path", action="store_true",
                     help="force the host-synchronous serving path "
                          "(per-layer lookup round-trips; A/B baseline)")
+    ap.add_argument("--varlen", action="store_true",
+                    help="serve variable-length padded batches (lengths "
+                         "drawn per request; masks flow through memo "
+                         "lookup — DESIGN.md §2.7) and check select "
+                         "parity on the last batch")
     ap.add_argument("--calib-batches", type=int, default=6)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--selective", action="store_true")
@@ -240,21 +245,49 @@ def main():
         print(pm.summary())
         print("[serve] selective memo active layers:", active)
 
+    if args.varlen and args.no_fast_path:
+        raise SystemExit("--varlen is served by the device fast path "
+                         "(or --mode select); drop --no-fast-path")
+    vl_rng = np.random.default_rng(11)
+
+    def sample_batch():
+        toks = np.asarray(corpus.sample(args.batch)[0])
+        if not args.varlen:
+            return {"tokens": jnp.asarray(toks)}
+        # a few distinct lengths per batch: pad tokens past each length
+        lens = np.asarray(vl_rng.choice(
+            [args.seq, args.seq - 4, args.seq // 2], args.batch), np.int32)
+        for i, ln in enumerate(lens):
+            toks[i, ln:] = 0
+        return {"tokens": jnp.asarray(toks), "lengths": lens}
+
     lat_memo, lat_plain = [], []
     st = MemoStats()
     n_batches = max(1, args.requests // args.batch)
+    batch = None
     for i in range(n_batches):
-        toks = jnp.asarray(corpus.sample(args.batch)[0])
+        batch = sample_batch()
         t0 = time.perf_counter()
-        logits, _ = eng.infer({"tokens": toks}, use_memo=False)
+        logits, _ = eng.infer(batch, use_memo=False)
         jax.block_until_ready(logits)
         lat_plain.append(time.perf_counter() - t0)
         if not args.no_memo:
             t0 = time.perf_counter()
-            logits_m, st = eng.infer({"tokens": toks}, stats=st,
+            logits_m, st = eng.infer(batch, stats=st,
                                      active_layers=active)
             jax.block_until_ready(logits_m)
             lat_memo.append(time.perf_counter() - t0)
+    if args.varlen and not args.no_memo and args.mode == "bucket":
+        # padded-row parity: the fast path's mask-aware lookup + gather
+        # must match the select reference on the same padded batch
+        out_fast, _ = eng.infer(batch, active_layers=active)
+        eng.mc.mode = "select"
+        out_sel, _ = eng.infer(batch, active_layers=active)
+        eng.mc.mode = "bucket"
+        diff = float(np.abs(np.asarray(out_fast)
+                            - np.asarray(out_sel)).max())
+        print(f"[serve] varlen parity vs select: max|Δlogits| = "
+              f"{diff:.2e}")
     # drop warmup batch from stats
     p = np.median(lat_plain[1:] or lat_plain) * 1e3
     print(f"[serve] baseline     {p:8.1f} ms/batch")

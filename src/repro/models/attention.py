@@ -116,14 +116,22 @@ def _qkv(params, x, cfg, positions, use_rope=True):
 
 def gqa_apply(params, x, cfg, *, positions, mask_kind="causal",
               window=None, memo: Optional[Memo] = None, return_apm=False,
-              use_rope=True, attn_impl="xla"):
-    """Full-sequence GQA. x: (B,S,D) → (B,S,D)."""
+              use_rope=True, attn_impl="xla", kpad=None):
+    """Full-sequence GQA. x: (B,S,D) → (B,S,D).
+
+    ``kpad``: optional (B, S) bool key-validity mask for padded
+    variable-length batches — False keys are excluded from the softmax,
+    so a sequence padded to a bucket length produces the same APM rows
+    (and zero probability mass on pad columns) as its unpadded run."""
     B, S, _ = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q, k, v = _qkv(params, x, cfg, positions, use_rope)
     qg = q.reshape(B, S, Hkv, H // Hkv, dh)
     mask = make_mask(S, S, mask_kind, window)
-    if attn_impl == "pallas_interpret" and memo is None and not return_apm:
+    if kpad is not None:
+        mask = mask[None] & kpad[:, None, :]
+    if attn_impl == "pallas_interpret" and memo is None and not return_apm \
+            and kpad is None:
         from repro.kernels.flash_attention import ops as fa_ops
         out = fa_ops.flash_attention(
             q, k, v, causal=(mask_kind == "causal"), window=window,
@@ -252,7 +260,8 @@ def _mla_qkr(params, x, cfg, positions):
 
 
 def mla_apply(params, x, cfg, *, positions, mask_kind="causal", window=None,
-              memo: Optional[Memo] = None, return_apm=False, attn_impl="xla"):
+              memo: Optional[Memo] = None, return_apm=False, attn_impl="xla",
+              kpad=None):
     B, S, _ = x.shape
     m, H = cfg.mla, cfg.n_heads
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
@@ -263,7 +272,11 @@ def mla_apply(params, x, cfg, *, positions, mask_kind="causal", window=None,
               + jnp.einsum("bqhe,bse->bhqs", q_rope, k_rope))
     scores = scores.astype(jnp.float32) * scale
     mask = make_mask(S, S, mask_kind, window)
-    scores = jnp.where(mask[None, None], scores, jnp.finfo(jnp.float32).min)
+    if kpad is not None:
+        mask = mask[None] & kpad[:, None, :]
+    scores = jnp.where(mask[None, None] if mask.ndim == 2
+                       else mask[:, None], scores,
+                       jnp.finfo(jnp.float32).min)
     apm = jax.nn.softmax(scores, -1)
     if memo is not None:
         apm = jnp.where(memo.hit[:, None, None, None],

@@ -111,7 +111,7 @@ def _layer_specs(cfg, layer_idx, kind):
 
 def _layer_apply(lp, h, cfg, kind, layer_idx, *, mode, positions, pos, cache,
                  memo=None, capture=False, mesh=None, dp_axes=("data",),
-                 window=None, attn_impl="xla"):
+                 window=None, attn_impl="xla", kpad=None):
     """Returns (h, new_cache, apm, aux_loss)."""
     mask_kind = "causal" if cfg.causal else "bidir"
     if cfg.act_shard_batch and mode == "full" and h.ndim == 3:
@@ -130,7 +130,7 @@ def _layer_apply(lp, h, cfg, kind, layer_idx, *, mode, positions, pos, cache,
             y, apm = attn.gqa_apply(lp["mix"], x, cfg, positions=positions,
                                     mask_kind=mask_kind, window=win,
                                     memo=memo, return_apm=capture,
-                                    attn_impl=attn_impl)
+                                    attn_impl=attn_impl, kpad=kpad)
             if mode == "prefill":
                 cache = attn.gqa_prefill_cache(
                     lp["mix"], x, cfg, positions, cache_len_from(cache))
@@ -143,7 +143,7 @@ def _layer_apply(lp, h, cfg, kind, layer_idx, *, mode, positions, pos, cache,
             y, apm = attn.mla_apply(lp["mix"], x, cfg, positions=positions,
                                     mask_kind=mask_kind, window=win,
                                     memo=memo, return_apm=capture,
-                                    attn_impl=attn_impl)
+                                    attn_impl=attn_impl, kpad=kpad)
             if mode == "prefill":
                 cache = attn.mla_prefill_cache(
                     lp["mix"], x, cfg, positions, cache_len_from(cache))
@@ -398,6 +398,15 @@ def logits_from_hidden(params, h, cfg):
     return h @ params["lm_head"]
 
 
-def classify_from_hidden(params, h, cfg):
+def classify_from_hidden(params, h, cfg, kpad=None):
+    """``kpad``: optional (B, S) bool validity mask — padded positions are
+    excluded from the mean pool so a padded variable-length batch scores
+    each sequence exactly like its unpadded run."""
     h = norm_apply(params["final_norm"], h, cfg.norm)
-    return jnp.mean(h, axis=1) @ params["cls"]
+    if kpad is None:
+        pooled = jnp.mean(h, axis=1)
+    else:
+        m = kpad.astype(h.dtype)[:, :, None]
+        pooled = jnp.sum(h * m, axis=1) / jnp.maximum(
+            jnp.sum(m, axis=1), 1.0)
+    return pooled @ params["cls"]
