@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.engine import MemoConfig, MemoEngine
 from repro.core.index import ExactIndex, recall_at_1
+from repro.memo import MemoSession, MemoSpec
 from repro.data import TemplateCorpus
 from repro.models import build_model
 from repro.optim import adamw_init, adamw_update
@@ -48,10 +48,11 @@ def run():
         corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=64, n_templates=8,
                                 slot_fraction=frac, seed=0)
         model, params = _train(cfg, corpus)
-        eng = MemoEngine(model, params, MemoConfig(embed_steps=80))
-        eng.build(jax.random.PRNGKey(1),
-                  [{"tokens": jnp.asarray(corpus.sample(32)[0])}
-                   for _ in range(3)])
+        eng = MemoSession.build(
+            model, params, MemoSpec.flat(embed_steps=80),
+            batches=[{"tokens": jnp.asarray(corpus.sample(32)[0])}
+                     for _ in range(3)],
+            key=jax.random.PRNGKey(1)).engine
         thr = eng.suggest_levels(
             [{"tokens": jnp.asarray(corpus.sample(16)[0])}])["moderate"]
         toks, labels = corpus.sample(64)
@@ -67,11 +68,12 @@ def run():
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=64, seed=0)
     model, params = _train(cfg, corpus)
     for kind in ("exact", "ivf"):
-        eng = MemoEngine(model, params,
-                         MemoConfig(embed_steps=80, index_kind=kind))
-        eng.build(jax.random.PRNGKey(1),
-                  [{"tokens": jnp.asarray(corpus.sample(32)[0])}
-                   for _ in range(4)])
+        eng = MemoSession.build(
+            model, params,
+            MemoSpec.flat(embed_steps=80, index_kind=kind),
+            batches=[{"tokens": jnp.asarray(corpus.sample(32)[0])}
+                     for _ in range(4)],
+            key=jax.random.PRNGKey(1)).engine
         q = np.asarray(eng._embed(jnp.asarray(
             jax.random.normal(jax.random.PRNGKey(7), (16, 64, cfg.d_model)))))
         if kind == "ivf":

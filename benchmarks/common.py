@@ -11,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.engine import MemoConfig, MemoEngine
 from repro.data import TemplateCorpus
+from repro.memo import MemoSession, MemoSpec
 from repro.models import build_model
 from repro.optim import adamw_init, adamw_update
 
@@ -57,20 +57,33 @@ def trained_encoder(arch: str = "bert_base", n_layers: int = 4,
 
 
 @functools.lru_cache(maxsize=4)
+def built_session(threshold: float = 0.8, mode: str = "select",
+                  calib_batches: int = 6, arch: str = "bert_base",
+                  seq: int = SEQ, n_layers: int = 4):
+    """A calibrated MemoSession over the trained reduced encoder — all
+    benchmark engines construct through the ``repro.memo`` facade."""
+    model, params, corpus = trained_encoder(arch, n_layers=n_layers,
+                                            seq_len=seq)
+    spec = MemoSpec.flat(threshold=threshold, mode=mode, embed_steps=150)
+    batches = [{"tokens": jnp.asarray(corpus.sample(32)[0])}
+               for _ in range(calib_batches)]
+    sess = MemoSession.build(model, params, spec, batches=batches,
+                             key=jax.random.PRNGKey(1))
+    # per-model threshold levels (paper Table 2 / §5.4 autotuner)
+    sess.levels = sess.suggest_levels(
+        [{"tokens": jnp.asarray(corpus.sample(16)[0])}])
+    return sess, corpus
+
+
 def built_engine(threshold: float = 0.8, mode: str = "select",
                  calib_batches: int = 6, arch: str = "bert_base",
                  seq: int = SEQ, n_layers: int = 4):
-    model, params, corpus = trained_encoder(arch, n_layers=n_layers,
-                                            seq_len=seq)
-    eng = MemoEngine(model, params,
-                     MemoConfig(threshold=threshold, mode=mode,
-                                embed_steps=150))
-    batches = [{"tokens": jnp.asarray(corpus.sample(32)[0])}
-               for _ in range(calib_batches)]
-    eng.build(jax.random.PRNGKey(1), batches)
-    # per-model threshold levels (paper Table 2 / §5.4 autotuner)
-    eng.levels = eng.suggest_levels(
-        [{"tokens": jnp.asarray(corpus.sample(16)[0])}])
+    """Back-compat view of ``built_session`` (same lru-shared build):
+    returns the underlying engine with ``.levels`` attached."""
+    sess, corpus = built_session(threshold, mode, calib_batches, arch,
+                                 seq, n_layers)
+    eng = sess.engine
+    eng.levels = sess.levels
     return eng, corpus
 
 

@@ -5,8 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import MemoConfig, MemoEngine
 from benchmarks.common import trained_encoder
+from repro.memo import MemoSession, MemoSpec
 
 
 def run():
@@ -14,11 +14,12 @@ def run():
     model, params, corpus = trained_encoder()
     toks = jnp.asarray(corpus.sample(48)[0])
     for n_calib in (2, 4, 8):
-        eng = MemoEngine(model, params,
-                         MemoConfig(threshold=0.85, embed_steps=100))
         batches = [{"tokens": jnp.asarray(corpus.sample(32)[0])}
                    for _ in range(n_calib)]
-        eng.build(jax.random.PRNGKey(1), batches)
+        eng = MemoSession.build(
+            model, params,
+            MemoSpec.flat(threshold=0.85, embed_steps=100),
+            batches=batches, key=jax.random.PRNGKey(1)).engine
         thr = eng.suggest_levels(
             [{"tokens": jnp.asarray(corpus.sample(16)[0])}])["moderate"]
         _, st = eng.infer({"tokens": toks}, threshold=thr)

@@ -72,14 +72,34 @@ def _normalized_latencies(doc):
     if rt.get("p99_async_over_sync"):
         out["runtime/p99_async_over_sync"] = max(
             0.5, rt["p99_async_over_sync"])
+    # facade cost (ISSUE 5): the session layer's own per-batch wrapper
+    # time as a fraction of the direct batch time, measured in isolation
+    # (deterministic — see serve_runtime._facade_ab). The wall-clock
+    # facade/direct p50 ratio is recorded in the JSON for the trajectory
+    # but NOT gated: its run-to-run spread on virtualized boxes (±2-3%)
+    # dwarfs the sub-1% bound it would be checking.
+    fa = rt.get("facade_ab") or {}
+    if fa.get("facade_overhead_frac") is not None:
+        out["runtime/facade_overhead_frac"] = fa["facade_overhead_frac"]
     return out
+
+
+# Absolute ceilings, enforced by --check-regress INDEPENDENTLY of the
+# baseline/tolerance machinery (and excluded from the relative
+# comparison — a 1e-4 fraction doubling is not a regression): the
+# facade contract is "<1% serve latency over the direct runtime"
+# (ISSUE 5), not "no worse than last time". The measured fraction is
+# ~0.2-0.35% (several-fold margin), so this only fires when someone
+# adds real per-batch work to the facade.
+ABS_BOUNDS = {"runtime/facade_overhead_frac": 0.01}
 
 
 def check_regress(new_doc, baseline_path, tol=0.10):
     """Compare this run against the last recorded BENCH_serve.json:
-    any normalized serve latency worse by > tol fails the run. Only keys
-    present in both documents are compared (a missing module is not a
-    regression)."""
+    any normalized serve latency worse by > tol fails the run, and any
+    ``ABS_BOUNDS`` key over its ceiling fails regardless of baseline.
+    Only keys present in both documents enter the relative comparison
+    (a missing module is not a regression)."""
     try:
         with open(baseline_path) as f:
             old_doc = json.load(f)
@@ -90,10 +110,17 @@ def check_regress(new_doc, baseline_path, tol=0.10):
     new_n = _normalized_latencies(new_doc)
     problems = []
     for key, old_v in _normalized_latencies(old_doc).items():
+        if key in ABS_BOUNDS:      # absolute-ceiling keys only, below
+            continue
         new_v = new_n.get(key)
         if new_v is not None and new_v > old_v * (1.0 + tol):
             problems.append({"key": key, "baseline": old_v, "new": new_v,
                              "regression": new_v / old_v - 1.0})
+    for key, bound in ABS_BOUNDS.items():
+        new_v = new_n.get(key)
+        if new_v is not None and new_v > bound:
+            problems.append({"key": key, "baseline": bound, "new": new_v,
+                             "regression": new_v / bound - 1.0})
     return problems
 
 

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit_ms, trained_encoder
-from repro.core.engine import MemoConfig, MemoEngine, MemoStats
+from repro.memo import MemoSession, MemoSpec, MemoStats
 from repro.core.index import (
     ClusteredDeviceIndex, DeviceIndex, ExactIndex, recall_at_1)
 from repro.data import TemplateCorpus
@@ -95,10 +95,12 @@ def _engine_sweep():
 
     engines = {}
     for codec in CODECS:
-        eng = MemoEngine(model, params, MemoConfig(
-            threshold=0.8, mode="bucket", embed_steps=150, apm_codec=codec,
-            device_slack=4.0))
-        eng.build(jax.random.PRNGKey(1), calib)
+        sess = MemoSession.build(
+            model, params,
+            MemoSpec.flat(threshold=0.8, mode="bucket", embed_steps=150,
+                          apm_codec=codec, device_slack=4.0),
+            batches=calib, key=jax.random.PRNGKey(1))
+        eng = sess.engine
         if codec == CODECS[0]:
             thr = eng.suggest_levels(
                 [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}]

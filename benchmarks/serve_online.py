@@ -21,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import trained_encoder
-from repro.core.engine import MemoConfig, MemoEngine, MemoStats
 from repro.data import TemplateCorpus
+from repro.memo import MemoSession, MemoSpec, MemoStats
 from repro.launch.serve import _run_phase
 
 BATCH = 16
@@ -39,15 +39,18 @@ def collect():
     # generous device slack: admissions land as deltas for the whole run
     # instead of tripping mid-run full re-materializations (shape change =
     # fused-jit retrace)
-    eng = MemoEngine(model, params, MemoConfig(
-        mode="bucket", embed_steps=150, budget_mb=256.0, device_slack=8.0))
-    eng.build(jax.random.PRNGKey(1),
-              [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}
-               for _ in range(4)])
+    sess = MemoSession.build(
+        model, params,
+        MemoSpec.flat(mode="bucket", embed_steps=150, budget_mb=256.0,
+                      device_slack=8.0),
+        batches=[{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}
+                 for _ in range(4)],
+        key=jax.random.PRNGKey(1))
     # per-model autotuned threshold (paper Table 2 / §5.4) from a FRESH
     # calibration-distribution sample
-    eng.mc.threshold = eng.suggest_levels(
-        [{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}])["aggressive"]
+    sess.autotune([{"tokens": jnp.asarray(corpus.sample(BATCH)[0])}],
+                  level="aggressive")
+    eng = sess.engine
 
     def drifted(seed):
         return TemplateCorpus(vocab=model.cfg.vocab, seq_len=SEQ,

@@ -2,28 +2,36 @@
 
 Serves one Poisson-arrival, variable-length, mid-run-drifting request
 trace through the MemoServer runtime twice — synchronous batch-boundary
-maintenance vs the off-thread worker — on identically rebuilt engines,
+maintenance vs the off-thread worker — on identically rebuilt sessions,
 and records throughput + p50/p99 latency + hit rate for both. Emitted
 into BENCH_serve.json as the ``serve_runtime`` section; the regression
 gate tracks the async/sync p99 ratio (``--check-regress``), which is
 machine-independent because both legs run on the same box back to back.
 
-Engines are built fresh per leg (NOT the lru-shared ``built_engine``):
+Also records the **facade A/B** (ISSUE 5): per-batch serve latency
+through ``MemoSession.serve()`` vs a hand-wired ``MemoServer(engine)``
+(paired wall-clock ratio, recorded), plus the session layer's own
+wrapper time measured in isolation as a fraction of batch time —
+``facade_overhead_frac`` (~0.2–0.35% measured), hard-gated at <1% by
+``--check-regress``. The public API must stay free.
+
+Sessions are built fresh per leg (NOT the lru-shared ``built_session``):
 serving mutates the store, and the A/B is only honest if both legs start
 from the identical calibration state.
 """
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import trained_encoder
-from repro.core.engine import MemoConfig, MemoEngine
 from repro.data import TemplateCorpus
 from repro.launch.server import probe_rate, serve_trace
+from repro.memo import MemoServer, MemoSession, MemoSpec
 
 SEQ = 32
 BATCH = 8
@@ -31,22 +39,22 @@ REQUESTS = 120
 BUCKETS = (16, 32)
 
 
-def _build_engine():
+def _build_session():
     model, params, corpus = trained_encoder("bert_base", n_layers=2,
                                             seq_len=SEQ)
-    eng = MemoEngine(model, params, MemoConfig(
-        mode="bucket", embed_steps=120, admit=True, budget_mb=256.0,
-        recal_every=2, device_slack=8.0))
+    spec = MemoSpec.flat(mode="bucket", embed_steps=120, admit=True,
+                         budget_mb=256.0, recal_every=2, device_slack=8.0)
     # dedicated rng: both A/B legs must build the IDENTICAL store (the
     # shared corpus rng advances between calls)
     rng = np.random.default_rng(123)
-    eng.build(jax.random.PRNGKey(1),
-              [{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}
-               for _ in range(4)])
-    eng.mc.threshold = eng.suggest_levels(
-        [{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}
-         ])["aggressive"]
-    return eng, corpus
+    sess = MemoSession.build(
+        model, params, spec,
+        batches=[{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}
+                 for _ in range(4)],
+        key=jax.random.PRNGKey(1))
+    sess.autotune([{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}],
+                  level="aggressive")
+    return sess, corpus
 
 
 def _workload(corpus, rate: float):
@@ -68,30 +76,124 @@ def _workload(corpus, rate: float):
     return wl
 
 
+def _facade_ab(sess: MemoSession, corpus, rounds: int = 16,
+               reps: int = 3, wrapper_reps: int = 2000):
+    """The session layer's serve-latency cost, measured two ways.
+
+    **Wall-clock A/B** (recorded, not hard-gated): a hand-wired
+    ``MemoServer(engine)`` (the pre-facade call pattern) vs
+    ``session.serve()`` — same engine, same jit caches, same FROZEN
+    store (admission paused), same tokens per round, paired min-of-reps
+    ratios, median over rounds. On the CI-class boxes this distribution
+    has per-round spread of ±10%+ (virtualized timing noise at ~15ms
+    batch granularity), so the median swings a few percent run to run —
+    it documents parity, but cannot *prove* a sub-1% bound.
+
+    **Wrapper isolation** (the gated metric): ``session.serve()``
+    returns the raw ``MemoServer`` — the per-batch serve path contains
+    ZERO session-layer code (asserted here), so the thickest per-call
+    wrapper the facade owns anywhere is ``session.infer`` (kwarg
+    plumbing + cumulative stats merge). That wrapper is timed in
+    isolation by stubbing the engine call out of it, and reported as a
+    fraction of the median direct batch time:
+    ``facade_overhead_frac`` ≈ 0.2–0.35% measured (wrapper ~30–50µs vs
+    ~14ms batches). The ``--check-regress`` bound (<1%,
+    benchmarks/run.py ABS_BOUNDS) keeps a several-fold margin and does
+    not depend on differencing two large noisy timings — it fails only
+    if someone adds real per-batch work to the facade, not from
+    scheduler noise."""
+    eng = sess.engine
+    admit0 = eng.mc.admit
+    eng.mc.admit = False
+    rng = np.random.default_rng(3)
+    try:
+        direct = MemoServer(eng, buckets=BUCKETS, max_batch=BATCH,
+                            async_maintenance=False)
+        facade = sess.serve(buckets=BUCKETS, max_batch=BATCH,
+                            async_maintenance=False)
+        # the facade serves through the SAME runtime class, not a proxy:
+        # per-batch serving never executes session-layer code
+        assert type(facade) is MemoServer
+        direct.warmup()
+        facade.warmup()
+
+        def one_batch(server, toks):
+            t0 = time.perf_counter()
+            for j in range(BATCH):
+                server.submit(toks[j, : SEQ - 2 * (j % 2)])
+            server.step(flush=True)
+            return time.perf_counter() - t0
+
+        def best_of(server, toks):
+            return min(one_batch(server, toks) for _ in range(reps))
+
+        ratios, td, tf = [], [], []
+        for i in range(rounds):
+            toks = corpus.sample(BATCH, rng)[0]
+            if i % 2:
+                f = best_of(facade, toks)
+                d = best_of(direct, toks)
+            else:
+                d = best_of(direct, toks)
+                f = best_of(facade, toks)
+            td.append(d)
+            tf.append(f)
+            ratios.append(f / max(d, 1e-9))
+        direct.close()
+        facade.close()
+
+        # wrapper isolation: session.infer with the engine stubbed out
+        toks = jnp.asarray(corpus.sample(BATCH, rng)[0])
+        out, st = sess.infer({"tokens": toks})      # canned return values
+        real_infer = eng.infer
+        eng.infer = lambda batch, **kw: (out, st)
+        try:
+            t0 = time.perf_counter()
+            for _ in range(wrapper_reps):
+                sess.infer({"tokens": toks})
+            wrapper_s = (time.perf_counter() - t0) / wrapper_reps
+        finally:
+            eng.infer = real_infer
+    finally:
+        eng.mc.admit = admit0
+    d_ms = float(np.median(td) * 1e3)
+    return {"rounds": rounds, "reps": reps,
+            "direct_p50_ms": d_ms,
+            "facade_p50_ms": float(np.median(tf) * 1e3),
+            "facade_over_direct": float(np.median(ratios)),
+            "wrapper_us": float(wrapper_s * 1e6),
+            "facade_overhead_frac": float(wrapper_s * 1e3 / max(d_ms,
+                                                                1e-9))}
+
+
 @functools.lru_cache(maxsize=1)
 def collect():
-    eng, corpus = _build_engine()
-    rate = probe_rate(eng, buckets=BUCKETS, max_batch=BATCH, seq=SEQ)
+    sess, corpus = _build_session()
+    rate = probe_rate(sess, buckets=BUCKETS, max_batch=BATCH, seq=SEQ)
     # the probe serves (and admits) at real sync-mode cost, mutating the
     # store — rebuild so BOTH legs start from the identical fresh state
-    eng, _ = _build_engine()
+    sess, _ = _build_session()
     workload = _workload(corpus, rate)
 
     out = {"config": {"arch": "bert_base (reduced, 2 layers)",
                       "requests": REQUESTS, "rate_rps": float(rate),
                       "buckets": list(BUCKETS), "max_batch": BATCH,
-                      "threshold": float(eng.mc.threshold),
+                      "threshold": float(sess.spec.runtime.threshold),
                       "backend": jax.default_backend()}}
     kw = dict(buckets=BUCKETS, max_batch=BATCH, max_delay=4e-3)
-    out["sync"] = serve_trace(eng, workload, async_maintenance=False,
+    out["sync"] = serve_trace(sess, workload, async_maintenance=False,
                               **kw)
-    eng2, _ = _build_engine()        # identical fresh store for the A/B
-    out["async"] = serve_trace(eng2, workload, async_maintenance=True,
+    sess2, _ = _build_session()      # identical fresh store for the A/B
+    out["async"] = serve_trace(sess2, workload, async_maintenance=True,
                                **kw)
     out["p99_async_over_sync"] = (out["async"]["p99_ms"]
                                   / max(out["sync"]["p99_ms"], 1e-9))
     out["hit_rate_gap"] = abs(out["async"]["hit_rate"]
                               - out["sync"]["hit_rate"])
+    # facade overhead A/B on a third fresh session (the open-loop legs
+    # above mutated sess/sess2's stores mid-trace)
+    sess3, corpus3 = _build_session()
+    out["facade_ab"] = _facade_ab(sess3, corpus3)
     return out
 
 
@@ -106,3 +208,9 @@ def run():
     yield ("serve_runtime_overlap", 0.0,
            f"p99_ratio={out['p99_async_over_sync']:.3f};"
            f"hit_gap={out['hit_rate_gap']:.3f}")
+    fa = out["facade_ab"]
+    yield ("serve_runtime_facade", fa["facade_p50_ms"] * 1e3,
+           f"direct_p50={fa['direct_p50_ms']:.1f}ms;"
+           f"wall_ratio={fa['facade_over_direct']:.3f};"
+           f"wrapper={fa['wrapper_us']:.0f}us;"
+           f"overhead_frac={fa['facade_overhead_frac']:.2e}")

@@ -1,7 +1,8 @@
-"""Quickstart: AttMemo in ~60 lines.
+"""Quickstart: AttMemo in ~60 lines, through the ``repro.memo`` facade.
 
-Train a small encoder on the template corpus, build the attention +
-index databases, and compare plain vs memoized inference.
+Train a small encoder on the template corpus, build a memoization
+session (attention + index databases behind one object), and compare
+plain vs memoized inference.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,8 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.engine import MemoConfig, MemoEngine
 from repro.data import TemplateCorpus
+from repro.memo import MemoSession, MemoSpec, RuntimeSpec
 from repro.models import build_model
 from repro.optim import adamw_init, adamw_update
 
@@ -39,30 +40,31 @@ for batch in corpus.batches(40, 32):
     loss, params, opt = step(params, opt, batch)
 print(f"  final loss {float(loss):.4f}")
 
-# 3. build the memoization databases from a calibration stream
-engine = MemoEngine(model, params,
-                    MemoConfig(threshold=0.8, mode="bucket"))
+# 3. build the memoization session from a calibration stream
+spec = MemoSpec(runtime=RuntimeSpec(threshold=0.8, mode="bucket"))
 calib = [{"tokens": jnp.asarray(corpus.sample(32)[0])} for _ in range(5)]
-engine.build(jax.random.PRNGKey(1), calib, verbose=True)
-print(f"attention DB: {len(engine.db)} APMs, {engine.db.nbytes/1e6:.1f} MB")
+session = MemoSession.build(model, params, spec, batches=calib,
+                            key=jax.random.PRNGKey(1), verbose=True)
+store = session.store
+print(f"attention DB: {len(store.db)} APMs, {store.db.nbytes/1e6:.1f} MB")
 
 # per-model threshold calibration (paper Table 2 / §5.4 autotuner)
-levels = engine.suggest_levels([{"tokens": jnp.asarray(corpus.sample(16)[0])}])
-engine.mc.threshold = levels["aggressive"]
+levels = session.autotune(
+    [{"tokens": jnp.asarray(corpus.sample(16)[0])}], level="aggressive")
 print(f"calibrated thresholds: {levels}")
 
 # 4. plain vs memoized inference
 toks, labels = corpus.sample(64)
 batchd = {"tokens": jnp.asarray(toks)}
 
-logits, _ = engine.infer(batchd, use_memo=False)      # warm both paths
-logits_m, _ = engine.infer(batchd)
+logits, _ = session.infer(batchd, use_memo=False)     # warm both paths
+logits_m, _ = session.infer(batchd)
 
 t0 = time.perf_counter()
-logits, _ = engine.infer(batchd, use_memo=False)
+logits, _ = session.infer(batchd, use_memo=False)
 t_plain = time.perf_counter() - t0
 t0 = time.perf_counter()
-logits_m, st = engine.infer(batchd)
+logits_m, st = session.infer(batchd)
 t_memo = time.perf_counter() - t0
 
 acc = (np.argmax(np.asarray(logits), -1) == labels).mean()

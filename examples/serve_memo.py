@@ -1,10 +1,10 @@
-"""Serving example — the MemoStore-era engine end to end.
+"""Serving example — the full memo lifecycle through ``repro.memo``.
 
-Walks the full lifecycle the store exposes (DESIGN.md §2.5–2.7):
-build → lookup → online admission under a byte budget → CLOCK eviction →
-generation-counted delta sync → atomic snapshot publish — then serves an
-open-loop variable-length request stream through the MemoServer runtime
-with off-thread maintenance.
+Walks what the facade exposes (DESIGN.md §2.5–2.8): build → lookup →
+online admission under a byte budget → CLOCK eviction → generation-
+counted delta sync → atomic snapshot publish — then serves an open-loop
+variable-length request stream through ``session.serve()`` (the
+MemoServer runtime with off-thread maintenance).
 
     PYTHONPATH=src python examples/serve_memo.py
 """
@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.engine import MemoConfig, MemoEngine
-from repro.core.runtime import MemoServer
 from repro.data import TemplateCorpus
+from repro.memo import (
+    AdmissionPolicy, EmbedSpec, MemoSession, MemoSpec, RuntimeSpec)
 from repro.models import build_model
 from repro.optim import adamw_init, adamw_update
 
@@ -44,19 +44,22 @@ for b in corpus.batches(30, 32):
     params, opt, loss = _step(params, opt, b)
 
 # --- build: calibration corpus becomes the store's first epoch ---------
-engine = MemoEngine(model, params, MemoConfig(
-    threshold=0.8, mode="bucket", embed_steps=80,
-    admit=True, budget_mb=64.0, recal_every=2, device_slack=8.0))
+spec = MemoSpec(
+    runtime=RuntimeSpec(threshold=0.8, mode="bucket", device_slack=8.0),
+    embed=EmbedSpec(steps=80),
+    admission=AdmissionPolicy(enabled=True, budget_mb=64.0,
+                              recal_every=2))
 calib = [{"tokens": jnp.asarray(corpus.sample(16)[0])} for _ in range(4)]
-engine.build(jax.random.PRNGKey(1), calib)
+session = MemoSession.build(model, params, spec, batches=calib,
+                            key=jax.random.PRNGKey(1))
 # per-model threshold autotune (paper Table 2 / §5.4) from a fresh sample
-engine.mc.threshold = engine.suggest_levels(
-    [{"tokens": jnp.asarray(corpus.sample(16)[0])}])["aggressive"]
-store = engine.store
+session.autotune([{"tokens": jnp.asarray(corpus.sample(16)[0])}],
+                 level="aggressive")
+store = session.store
 print(f"[store] built: {len(store.db)} entries, "
       f"{store.live_count * store.entry_nbytes / 1e6:.2f} MB "
       f"({store.codec.name} codec), threshold "
-      f"{engine.mc.threshold:.3f} (autotuned)")
+      f"{spec.runtime.threshold:.3f} (autotuned)")
 
 # --- lookup: the host-tier search API ----------------------------------
 # (the engine embeds internally; query with stored calibration
@@ -72,7 +75,7 @@ drifted = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, seed=117,
 rates = []
 for i in range(6):
     toks = jnp.asarray(drifted.sample(16)[0])
-    _, st = engine.infer({"tokens": toks})
+    _, st = session.infer({"tokens": toks})
     rates.append(st.memo_rate)
 s = store.stats
 print(f"[store] drift hit-rate {' '.join(f'{r:.2f}' for r in rates)} — "
@@ -90,9 +93,6 @@ print(f"[store] evicted {before - store.live_count} cold entries "
       f"{store.snapshot.generation}")
 
 # --- the serving runtime: open-loop variable-length requests -----------
-server = MemoServer(engine, buckets=(SEQ // 2, SEQ), max_batch=8,
-                    async_maintenance=True)
-server.warmup()
 rng = np.random.default_rng(7)
 wl = []
 t = 0.0
@@ -101,7 +101,9 @@ for i in range(32):
     ln = int(rng.choice([SEQ // 2, SEQ]))
     wl.append((t, np.asarray(drifted.sample(1)[0][0, :ln])))
 t0 = time.perf_counter()
-with server:
+with session.serve(buckets=(SEQ // 2, SEQ), max_batch=8,
+                   async_maintenance=True) as server:
+    server.warmup()
     comps = server.run(wl)
 wall = time.perf_counter() - t0
 lat = np.asarray([c.latency for c in comps]) * 1e3

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced
-from repro.core.engine import MemoConfig, MemoEngine
 from repro.data import TemplateCorpus, lm_batches
+from repro.memo import EmbedSpec, MemoSession, MemoSpec, RuntimeSpec
 from repro.models import build_model
 from repro.train import TrainConfig, Trainer
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
@@ -53,18 +53,20 @@ print(f"[e2e] loss {hist[0][1]:.3f} -> {hist[-1][1]:.3f}")
 save_checkpoint(args.ckpt, params, step=args.steps, meta={"arch": cfg.name})
 
 # --- memoize the trained decoder's self-attention -------------------------
-eng = MemoEngine(model, params, MemoConfig(threshold=0.9, mode="select",
-                                           embed_steps=150,
-                                           max_layers=4))
+spec = MemoSpec(runtime=RuntimeSpec(threshold=0.9, mode="select",
+                                    max_layers=4),
+                embed=EmbedSpec(steps=150))
 calib = [{"tokens": jnp.asarray(corpus.sample(batch)[0])} for _ in range(4)]
-eng.build(jax.random.PRNGKey(1), calib, verbose=True)
-print(f"[e2e] DB {len(eng.db)} APMs / {eng.db.nbytes/1e6:.1f} MB")
-eng.mc.threshold = eng.suggest_levels(
-    [{"tokens": jnp.asarray(corpus.sample(batch)[0])}])["moderate"]
+sess = MemoSession.build(model, params, spec, batches=calib,
+                         key=jax.random.PRNGKey(1), verbose=True)
+db = sess.store.db
+print(f"[e2e] DB {len(db)} APMs / {db.nbytes/1e6:.1f} MB")
+sess.autotune([{"tokens": jnp.asarray(corpus.sample(batch)[0])}],
+              level="moderate")
 
 toks = jnp.asarray(corpus.sample(batch)[0])
-logits_p, _ = eng.infer({"tokens": toks}, use_memo=False)
-logits_m, st = eng.infer({"tokens": toks})
+logits_p, _ = sess.infer({"tokens": toks}, use_memo=False)
+logits_m, st = sess.infer({"tokens": toks})
 # memoized scoring must stay close in next-token ranking
 agree = (np.argmax(np.asarray(logits_p), -1)
          == np.argmax(np.asarray(logits_m), -1)).mean()

@@ -214,15 +214,29 @@ class LowRankCodec(ApmCodec):
         return jnp.einsum("...qr,...kr->...qk", u, v).astype(jnp.float16)
 
 
+# --- registry wiring (repro.memo public API v1) -------------------------
+# Built-in codecs self-register; third-party codecs use
+# ``repro.memo.register_codec`` with the same factory contract.
+from repro.core.registry import CODECS  # noqa: E402
+
+CODECS.register("f16",
+                lambda shape, *, rank=None, dtype=np.float16, **_:
+                F16Codec(shape, dtype=dtype))
+CODECS.register("int8",
+                lambda shape, *, rank=None, dtype=None, **_:
+                Int8Codec(shape))
+CODECS.register("lowrank",
+                lambda shape, *, rank=None, dtype=None, **_:
+                LowRankCodec(shape, rank=rank))
+
+
 def get_codec(name, apm_shape, *, rank=None, dtype=np.float16) -> ApmCodec:
-    """Codec registry: ``f16`` | ``int8`` | ``lowrank`` (or an ApmCodec
-    instance, passed through)."""
+    """Resolve a codec key through the registry (``f16`` | ``int8`` |
+    ``lowrank`` | anything registered via ``register_codec``); an
+    ApmCodec instance passes through. Unknown keys raise with the
+    registered choices listed."""
     if isinstance(name, ApmCodec):
         return name
-    if name in ("f16", "none", None):
-        return F16Codec(apm_shape, dtype=dtype)
-    if name == "int8":
-        return Int8Codec(apm_shape)
-    if name == "lowrank":
-        return LowRankCodec(apm_shape, rank=rank)
-    raise ValueError(f"unknown APM codec {name!r}")
+    if name in ("none", None):
+        name = "f16"
+    return CODECS.resolve(name)(apm_shape, rank=rank, dtype=dtype)

@@ -33,64 +33,15 @@ from repro.core.index import DeviceIndex
 from repro.core.selective import LayerProfile, PerfModel, timeit_median
 from repro.core.similarity import similarity_score
 from repro.core.store import MemoStore, StoreSnapshot
+# MemoConfig/MemoSpec live in repro.memo.specs (the public API v1 config
+# surface); re-exported here so ``from repro.core.engine import
+# MemoConfig`` keeps working for one release
+from repro.memo.specs import MemoConfig, MemoSpec  # noqa: F401
 from repro.models import attention as attn_mod
 from repro.models import backbone as bb
 
 # paper Table 2 — per-model threshold levels
 LEVELS = {"conservative": 0.98, "moderate": 0.97, "aggressive": 0.96}
-
-
-@dataclass
-class MemoConfig:
-    threshold: float = 0.97
-    mode: str = "select"            # select | bucket | kernel
-    index_kind: str = "exact"       # exact | ivf | device
-    # --- compressed memo tiers (DESIGN.md §2.6) ---
-    # APM storage codec for BOTH tiers: f16 | int8 | lowrank. int8
-    # (symmetric per-row, f16 scales) is the default: ~0.53× the f16
-    # bytes end to end (arena, HBM, delta sync) with select-parity
-    # preserved — every mode decodes the SAME stored entry (select vs
-    # bucket bit-identically; kernel mode dequantizes in VMEM without
-    # the f16 round, so it matches within float tolerance); only the
-    # gap to an UNcompressed store is codec error (serve_compress).
-    apm_codec: str = "int8"
-    apm_rank: Optional[int] = None  # lowrank codec rank (None = L//8)
-    # device-tier index: flat (exhaustive) | clustered (IVF) | auto
-    # (flat below cluster_crossover entries, clustered above — the
-    # crossover where two-stage routing beats one big matmul)
-    device_index: str = "auto"
-    cluster_crossover: int = 4096
-    nprobe: int = 16
-    n_clusters: Optional[int] = None    # clustered: None = sqrt(N)
-    embed_dim: int = 128
-    embed_pool: int = 8
-    embed_act: str = "linear"
-    embed_steps: int = 300
-    bucket_quantum: int = 4         # host-path hit-bucket padding quantum
-    max_layers: Optional[int] = None
-    store: str = "device"           # serving store: device | host
-    # None → auto: the device-resident fast path serves bucket/kernel modes
-    device_fast_path: Optional[bool] = None
-    # device-path bucket granularity: number of sorted quanta per batch.
-    # 1 = one whole-batch conditional (best on CPU, where sub-batch
-    # attention matmuls don't shrink cost); >1 = hit-first sorted quanta
-    # (compute skipping on mixed batches — worth it when attention cost
-    # scales with rows, i.e. real accelerators)
-    device_quanta: int = 1
-    # None → auto-detect backend (Pallas interpreter on CPU CI)
-    interpret: Optional[bool] = None
-    # --- online admission (MemoStore lifecycle, DESIGN.md §2.5) ---
-    admit: bool = False             # capture misses during infer() and
-    #                                 admit them to the store
-    budget_mb: Optional[float] = None   # store byte budget (None = ∞)
-    admit_every: int = 1            # capture every Nth served batch
-    device_slack: float = 1.0       # device-arena slack fraction for
-    #                                 delta-sync landings
-    # refit sim_cal from captured (embedding, true-APM) pairs every N
-    # admission flushes (None = off): under drift the dist→similarity
-    # map goes stale and systematically under-predicts, starving the
-    # threshold even after the store has adapted
-    recal_every: Optional[int] = None
 
 
 class SimReservoir:
@@ -239,11 +190,15 @@ class MaintenancePayload:
 
 
 class MemoEngine:
-    def __init__(self, model, params, memo_cfg: MemoConfig = MemoConfig()):
+    def __init__(self, model, params,
+                 memo_cfg: Optional[MemoSpec] = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
-        self.mc = memo_cfg
+        # None → a fresh default spec PER ENGINE (a shared default
+        # instance would leak one engine's mc mutations — threshold
+        # autotune, mode flips — into every other default-configured one)
+        self.mc = MemoSpec() if memo_cfg is None else memo_cfg
         self.is_encdec = getattr(model, "is_encdec", False)
         if self.is_encdec:
             # enc-dec (whisper): memoize ENCODER self-attention — fixed
@@ -251,15 +206,15 @@ class MemoEngine:
             self.layers = list(range(self.cfg.encoder.n_layers))
         else:
             self.layers = list(self.cfg.memoizable_layers())
-        if memo_cfg.max_layers:
-            self.layers = self.layers[: memo_cfg.max_layers]
+        if self.mc.max_layers:
+            self.layers = self.layers[: self.mc.max_layers]
         # ALL memoization state (both tiers) lives in the MemoStore; the
         # engine only orchestrates (DESIGN.md §2.5). Created by build().
         self.store: Optional[MemoStore] = None
         self.embedder: Optional[Embedder] = None
         self.perf: Optional[PerfModel] = None
         self._jit_cache: Dict = {}
-        self._interpret = (memo_cfg.interpret if memo_cfg.interpret
+        self._interpret = (self.mc.interpret if self.mc.interpret
                            is not None else jax.default_backend() == "cpu")
         self._layers_cache = None
         self._serve_batches = 0          # admission-sampling counter
@@ -303,6 +258,31 @@ class MemoEngine:
             self._layers_cache = list(bb.iter_layers(self.params, self.cfg))
         return self._layers_cache
 
+    def _make_store(self, apm_shape, *, capacity: int,
+                    n_lists: Optional[int] = None) -> MemoStore:
+        """Construct the MemoStore exactly as the spec describes — the
+        single construction path shared by ``build()`` and
+        ``MemoSession.load``. A loaded store must be configured
+        identically to the saved one for lookups to round-trip:
+        ``n_lists`` (derived from the CALIBRATION size at build, which a
+        grown store no longer knows) is therefore persisted and passed
+        back explicitly on load."""
+        mc = self.mc
+        budget = (None if mc.budget_mb is None
+                  else int(mc.budget_mb * 1e6))
+        return MemoStore(
+            tuple(apm_shape), mc.embed_dim,
+            index_kind=mc.index_kind, budget_bytes=budget,
+            capacity=capacity, interpret=self._interpret,
+            device_slack=mc.device_slack,
+            n_lists=(n_lists if n_lists is not None
+                     else max(4, int(np.sqrt(max(1, capacity))))),
+            codec=mc.apm_codec, apm_rank=mc.apm_rank,
+            device_index_kind=mc.device_index,
+            cluster_crossover=mc.cluster_crossover,
+            nprobe=mc.nprobe, n_clusters=mc.n_clusters,
+            eviction=mc.eviction.kind)
+
     # ------------------------------------------------------------------ build
     def build(self, key, batches: Sequence[dict], *, train_pairs=512,
               verbose=False):
@@ -321,18 +301,7 @@ class MemoEngine:
         apms = np.concatenate(apms, 0)            # (N, heads, L, L)
         n, L, H = hiddens.shape
 
-        budget = (None if self.mc.budget_mb is None
-                  else int(self.mc.budget_mb * 1e6))
-        self.store = MemoStore(
-            apms.shape[1:], self.mc.embed_dim,
-            index_kind=self.mc.index_kind, budget_bytes=budget,
-            capacity=n, interpret=self._interpret,
-            device_slack=self.mc.device_slack,
-            n_lists=max(4, int(np.sqrt(n))),
-            codec=self.mc.apm_codec, apm_rank=self.mc.apm_rank,
-            device_index_kind=self.mc.device_index,
-            cluster_crossover=self.mc.cluster_crossover,
-            nprobe=self.mc.nprobe, n_clusters=self.mc.n_clusters)
+        self.store = self._make_store(apms.shape[1:], capacity=n)
 
         k1, k2 = jax.random.split(key)
         emb = Embedder.init(k1, L, H, dim=self.mc.embed_dim,

@@ -792,3 +792,28 @@ def recall_at_1(index, oracle: ExactIndex, queries) -> float:
     _, ia = index.search(queries, 1)
     _, ib = oracle.search(queries, 1)
     return float((ia[:, 0] == ib[:, 0]).mean())
+
+
+# --- registry wiring (repro.memo public API v1) -------------------------
+# Host-tier (calibration/lookup) and device-tier (fused-jit serving)
+# index layouts resolve through string-keyed registries; the MemoStore
+# never names a concrete class. Extensions: ``repro.memo.register_index``.
+from repro.core.registry import DEVICE_INDEXES, HOST_INDEXES  # noqa: E402
+
+HOST_INDEXES.register(
+    "exact", lambda dim, **_: ExactIndex(dim))
+HOST_INDEXES.register(
+    "ivf", lambda dim, *, n_lists=None, **_: IVFIndex(dim,
+                                                      n_lists=n_lists or 8))
+HOST_INDEXES.register(
+    "device", lambda dim, *, interpret=None, mesh=None, **_:
+    DeviceIndex(dim, interpret=interpret, mesh=mesh))
+
+DEVICE_INDEXES.register(
+    "flat", lambda dim, *, capacity=0, interpret=None, mesh=None, **_:
+    DeviceIndex(dim, interpret=interpret, capacity=capacity, mesh=mesh))
+DEVICE_INDEXES.register(
+    "clustered", lambda dim, *, capacity=0, nprobe=16, n_clusters=None,
+    interpret=None, mesh=None, **_:
+    ClusteredDeviceIndex(dim, nprobe=nprobe, n_clusters=n_clusters,
+                         interpret=interpret, capacity=capacity, mesh=mesh))

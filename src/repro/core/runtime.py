@@ -88,7 +88,7 @@ class MemoServer:
             raise RuntimeError("build() the engine before serving")
         if not engine._use_fast_path():
             raise RuntimeError("MemoServer drives the device fast path; "
-                               "use MemoConfig(mode='bucket')")
+                               "use RuntimeSpec(mode='bucket')")
         if engine.mc.mode == "kernel":
             raise RuntimeError("variable-length serving supports bucket "
                                "mode (the kernel path is fixed-length)")

@@ -35,6 +35,12 @@ APM storage format for BOTH tiers (f16 | int8 | lowrank — see
 codec-true bytes, and the device index flips from exhaustive to the
 clustered (IVF) layout once the entry count crosses
 ``cluster_crossover`` (``device_index_kind="auto"``).
+
+Pluggable pieces — the host/device index layouts and the eviction
+policy — resolve through the string-keyed registries
+(``repro.core.registry`` / DESIGN.md §2.8), and
+``state_dict``/``load_state_dict`` round-trip the whole host tier for
+``MemoSession.save``/``load`` warm starts.
 """
 from __future__ import annotations
 
@@ -46,8 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.database import AttentionDB, DeviceDB, pad_delta_pow2
-from repro.core.index import (
-    TOMBSTONE, ClusteredDeviceIndex, DeviceIndex, ExactIndex, IVFIndex)
+from repro.core.index import TOMBSTONE, ClusteredDeviceIndex, DeviceIndex
+from repro.core.registry import DEVICE_INDEXES, EVICTIONS, HOST_INDEXES
 
 
 class StoreSnapshot(NamedTuple):
@@ -101,7 +107,8 @@ class MemoStore:
                  mesh=None, codec: str = "f16", apm_rank: Optional[int] = None,
                  device_index_kind: str = "auto",
                  cluster_crossover: int = 4096, nprobe: int = 16,
-                 n_clusters: Optional[int] = None):
+                 n_clusters: Optional[int] = None,
+                 eviction: str = "clock"):
         self.apm_shape = tuple(apm_shape)
         self.embed_dim = embed_dim
         self.index_kind = index_kind
@@ -116,13 +123,14 @@ class MemoStore:
         self.n_clusters = n_clusters
         self.db = AttentionDB(self.apm_shape, capacity=capacity,
                               codec=codec, rank=apm_rank)
-        if index_kind == "ivf":
-            self.index = IVFIndex(embed_dim, n_lists=n_lists or 8)
-        elif index_kind == "device":
-            self.index = DeviceIndex(embed_dim, interpret=interpret,
-                                     mesh=mesh)
-        else:
-            self.index = ExactIndex(embed_dim)
+        # pluggable pieces resolve through the string-keyed registries
+        # (repro.memo API v1) — unknown keys fail HERE, listing choices
+        self.eviction_kind = eviction
+        self._evict_policy = EVICTIONS.resolve(eviction)
+        if device_index_kind != "auto":
+            DEVICE_INDEXES.resolve(device_index_kind)   # fail-fast only
+        self.index = HOST_INDEXES.resolve(index_kind)(
+            embed_dim, n_lists=n_lists, interpret=interpret, mesh=mesh)
         self.sim_cal: Tuple[float, float] = (-1.0, 1.0)
         # slot-aligned host staging of embeddings: the uniform source for
         # device-index deltas regardless of the host index kind
@@ -275,36 +283,20 @@ class MemoStore:
 
     # --------------------------------------------------------------- evict
     def evict(self, n: int = 1) -> List[int]:
-        """Reuse-aware CLOCK eviction: sweep the arena; entries with a
-        nonzero reuse counter survive the pass with the counter halved
-        (frequency-decaying second chance), zero-count entries are
-        evicted. If everything is hot after two sweeps, the coldest live
-        entries go. Evicted slots are released to the arena free-list and
-        tombstoned in the index, so a hit on them is impossible."""
+        """Evict ``n`` entries. *Selection* is the registered eviction
+        policy (``eviction="clock"`` by default — see ``clock_eviction``;
+        extensions via ``repro.memo.register_eviction``); the store does
+        the shared bookkeeping: evicted slots are released to the arena
+        free-list and tombstoned in the index, so a hit on them is
+        impossible."""
         db = self.db
-        evicted: List[int] = []
         if n <= 0 or db._n == 0 or db.live_count == 0:
-            return evicted
+            return []
         with self._lock:
             n = min(n, db.live_count)
-            counts = db.reuse_counts
-            hand = self._clock_hand % db._n
-            scanned, limit = 0, 2 * db._n
-            while len(evicted) < n and scanned < limit:
-                slot, hand = hand, (hand + 1) % db._n
-                scanned += 1
-                if not db._live[slot]:
-                    continue
-                if counts[slot] > 0:
-                    counts[slot] //= 2
-                else:
-                    evicted.append(slot)
-            self._clock_hand = hand
-            if len(evicted) < n:   # all hot: fall back to coldest-first
-                live = np.flatnonzero(db.live_mask)
-                live = live[~np.isin(live, evicted)]
-                order = live[np.argsort(counts[live], kind="stable")]
-                evicted.extend(int(s) for s in order[: n - len(evicted)])
+            evicted = [int(s) for s in self._evict_policy(self, n)]
+            if not evicted:
+                return evicted
             db.release(evicted)
             self.index.remove(evicted)
             self._ensure_emb_capacity(max(evicted) + 1)
@@ -330,6 +322,9 @@ class MemoStore:
     def _device_index_kind_of(index) -> Optional[str]:
         if index is None:
             return None
+        kind = getattr(index, "_registry_kind", None)
+        if kind is not None:
+            return kind
         return ("clustered" if isinstance(index, ClusteredDeviceIndex)
                 else "flat")
 
@@ -382,14 +377,12 @@ class MemoStore:
         if need_full:
             cap = n + max(8, int(n * self.device_slack))
             self.device_db = DeviceDB.from_host(self.db, capacity=cap)
-            if self._device_index_kind(n) == "clustered":
-                di = ClusteredDeviceIndex(
-                    self.embed_dim, nprobe=self.nprobe,
-                    n_clusters=self.n_clusters, interpret=self._interpret,
-                    capacity=cap, mesh=self._mesh)
-            else:
-                di = DeviceIndex(self.embed_dim, interpret=self._interpret,
-                                 capacity=cap, mesh=self._mesh)
+            kind = self._device_index_kind(n)
+            di = DEVICE_INDEXES.resolve(kind)(
+                self.embed_dim, capacity=cap, nprobe=self.nprobe,
+                n_clusters=self.n_clusters, interpret=self._interpret,
+                mesh=self._mesh)
+            di._registry_kind = kind
             di.add(self._embs_host[:n])
             if isinstance(di, ClusteredDeviceIndex):
                 # build eagerly: the k-means belongs on the sync (batch)
@@ -479,3 +472,131 @@ class MemoStore:
             sim_b=float(self.sim_cal[1]))
         self._snapshot = snap
         return snap
+
+    # --------------------------------------------------------- persistence
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Every host-tier array needed to reconstruct this store exactly
+        (``MemoSession.save``): the codec-part arenas, the slot-aligned
+        embedding/length mirrors, liveness + reuse counters, the
+        free-list (ORDER matters — ``put`` recycles LIFO), the eviction
+        clock hand and ``sim_cal``. The device tier is derived state and
+        is re-materialized by the first ``sync()`` after load."""
+        with self._lock:
+            n = len(self.db)
+            out = {
+                "n": np.asarray(n, np.int64),
+                "free": np.asarray(self.db._free, np.int64),
+                "live": self.db._live[:n].copy(),
+                "reuse": self.db.reuse_counts[:n].copy(),
+                "embs": self._embs_host[:n].copy(),
+                "lens": self._lens_host[:n].copy(),
+                "clock_hand": np.asarray(self._clock_hand, np.int64),
+                "sim_cal": np.asarray(self.sim_cal, np.float64),
+            }
+            for spec, arena in zip(self.codec.parts, self.db._arenas):
+                out[f"part_{spec.name}"] = arena[:n].copy()
+            # the host index's staging array, at its FULL grown shape:
+            # approximate indexes (ivf) k-means over the whole array
+            # including TOMBSTONE slack rows, so reproducing searches
+            # bit-identically requires the exact array, not the prefix
+            embs = getattr(self.index, "_embs", None)
+            if embs is not None:
+                out["index_embs"] = np.asarray(embs).copy()
+            return out
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        """Restore ``state_dict`` output into this (freshly constructed,
+        identically configured) store. The host index is rebuilt from the
+        slot mirrors — assign() for live rows, remove() for dead ones —
+        which reproduces the saved index state exactly (tombstones and
+        all), so host-tier lookups are bit-identical across a
+        save/load round trip. The device tier stays unmaterialized; the
+        next ``sync()`` performs the full (deterministic) upload."""
+        with self._lock:
+            n = int(state["n"])
+            db = self.db
+            db._grow_to(n)
+            for spec, arena in zip(self.codec.parts, db._arenas):
+                arena[:n] = state[f"part_{spec.name}"]
+            db._n = n
+            db._live[:n] = state["live"]
+            db.reuse_counts[:n] = state["reuse"]
+            db._free = [int(s) for s in state["free"]]
+            self._ensure_emb_capacity(n)
+            self._embs_host[:n] = state["embs"]
+            self._lens_host[:n] = state["lens"]
+            self._clock_hand = int(state["clock_hand"])
+            self.sim_cal = tuple(float(v) for v in state["sim_cal"])
+            # restore the host index from the saved staging array at its
+            # EXACT shape — approximate indexes (ivf) k-means over the
+            # whole array including slack rows, and assign()'s minimum
+            # growth would change it. Fall back to a slot-aligned assign
+            # of the mirror for index kinds without a settable staging
+            # array (DeviceIndex: exhaustive, slack rows are TOMBSTONE
+            # and cannot win a search)
+            embs = state.get("index_embs")
+            if embs is not None and len(embs):
+                try:
+                    self.index._embs = np.asarray(embs, np.float32).copy()
+                    if hasattr(self.index, "_built"):
+                        self.index._built = False
+                except AttributeError:     # computed staging view
+                    self.index.assign(np.arange(len(embs)), embs)
+            elif n:
+                self.index.assign(np.arange(n), self._embs_host[:n])
+            # clean host tier, unmaterialized device tier: the next sync
+            # takes the full-materialization branch (device_db is None)
+            # without re-dirtying the loaded slots
+            self._dirty.clear()
+            self._synced_n = n
+            self.generation = 0
+            self.device_generation = -1
+            self.device_db = None
+            self.device_index = None
+            self._dev_lens = None
+            self._snapshot = None
+
+
+# ------------------------------------------------------ eviction policies
+def clock_eviction(store: MemoStore, n: int) -> List[int]:
+    """Reuse-aware CLOCK: sweep the arena; entries with a nonzero reuse
+    counter survive the pass with the counter halved (frequency-decaying
+    second chance), zero-count entries are selected. If everything is hot
+    after two sweeps, the coldest live entries go. Called under the store
+    lock; the clock hand persists on the store across calls."""
+    db = store.db
+    counts = db.reuse_counts
+    evicted: List[int] = []
+    hand = store._clock_hand % db._n
+    scanned, limit = 0, 2 * db._n
+    while len(evicted) < n and scanned < limit:
+        slot, hand = hand, (hand + 1) % db._n
+        scanned += 1
+        if not db._live[slot]:
+            continue
+        if counts[slot] > 0:
+            counts[slot] //= 2
+        else:
+            evicted.append(slot)
+    store._clock_hand = hand
+    if len(evicted) < n:   # all hot: fall back to coldest-first
+        live = np.flatnonzero(db.live_mask)
+        live = live[~np.isin(live, evicted)]
+        order = live[np.argsort(counts[live], kind="stable")]
+        evicted.extend(int(s) for s in order[: n - len(evicted)])
+    return evicted
+
+
+def coldest_eviction(store: MemoStore, n: int) -> List[int]:
+    """Strict coldest-first: the ``n`` live entries with the lowest reuse
+    counts (ties broken by slot id). No second chances — simpler and
+    deterministic, but a single scan burst can evict a recently-hot
+    entry the CLOCK would have spared."""
+    db = store.db
+    live = np.flatnonzero(db.live_mask)
+    order = live[np.argsort(db.reuse_counts[live], kind="stable")]
+    return [int(s) for s in order[:n]]
+
+
+EVICTIONS.register("clock", clock_eviction)
+EVICTIONS.register("coldest", coldest_eviction)

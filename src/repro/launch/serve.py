@@ -22,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced
-from repro.core.engine import LEVELS, MemoConfig, MemoEngine, MemoStats
 from repro.data import TemplateCorpus
+from repro.memo import LEVELS, MemoSession, MemoSpec, MemoStats
 from repro.models import build_model
 from repro.train.checkpoint import load_checkpoint
 
@@ -176,6 +176,13 @@ def main():
                     help="--online: store byte budget for admission")
     ap.add_argument("--admit-every", type=int, default=1,
                     help="--online: capture misses every Nth batch")
+    ap.add_argument("--save-store", default=None, metavar="PATH",
+                    help="persist the built session (store + embedder + "
+                         "spec) after calibration/autotune — the "
+                         "offline-database leg of warm-start serving")
+    ap.add_argument("--load-store", default=None, metavar="PATH",
+                    help="warm-start from a saved session instead of "
+                         "calibrating (skips build + embedder training)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -205,7 +212,7 @@ def main():
 
     thr = args.threshold if args.threshold is not None else LEVELS.get(
         args.level, 0.97)
-    eng = MemoEngine(model, params, MemoConfig(
+    spec = MemoSpec.flat(
         threshold=thr, mode=args.mode, index_kind=args.index,
         apm_codec=args.codec, apm_rank=args.apm_rank,
         device_index=args.device_index,
@@ -213,16 +220,49 @@ def main():
         device_fast_path=False if args.no_fast_path else None,
         budget_mb=args.budget_mb if args.online else None,
         admit_every=args.admit_every,
-        recal_every=2 if args.online else None))
+        recal_every=2 if args.online else None)
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     t0 = time.perf_counter()
-    eng.build(jax.random.PRNGKey(1), calib)
-    store = eng.store
-    print(f"[serve] db: {len(eng.db)} entries, "
-          f"{eng.db.nbytes/1e6:.1f} MB ({args.codec}: "
+    if args.load_store:
+        sess = MemoSession.load(args.load_store, model, params)
+        # STORAGE spec (codec/index/embed shapes) is baked into the
+        # file and cannot be overridden; the saved mode supersedes
+        # --mode and is re-synced into args so the branches below
+        # cannot diverge from the loaded engine. SERVING-POLICY knobs
+        # remain the CLI's: threshold (when given) and the online
+        # admission settings are applied to the loaded spec exactly as
+        # a cold build would have set them.
+        print("[serve] note: storage spec (codec/index/embed) comes "
+              "from the store file; --codec/--index/--device-index/"
+              "--apm-rank are ignored on warm start")
+        if sess.spec.runtime.mode != args.mode:
+            print(f"[serve] note: saved spec mode "
+                  f"{sess.spec.runtime.mode!r} supersedes --mode "
+                  f"{args.mode!r}")
+            args.mode = sess.spec.runtime.mode
+        if args.threshold is not None:
+            sess.spec.threshold = args.threshold
+        if args.online:
+            sess.spec.budget_mb = args.budget_mb
+            sess.spec.admit_every = args.admit_every
+            sess.spec.recal_every = 2
+        print(f"[serve] warm start from {args.load_store} in "
+              f"{time.perf_counter()-t0:.2f}s (no calibration)")
+    else:
+        sess = MemoSession.build(model, params, spec, batches=calib,
+                                 key=jax.random.PRNGKey(1))
+    eng = sess.engine
+    store = sess.store
+    print(f"[serve] db: {len(store.db)} entries, "
+          f"{store.db.nbytes/1e6:.1f} MB ({store.codec.name}: "
           f"{store.entry_nbytes/store.logical_entry_nbytes:.2f}x f16 "
-          f"bytes/entry), build {time.perf_counter()-t0:.1f}s")
+          f"bytes/entry), ready {time.perf_counter()-t0:.1f}s")
+    if args.save_store and not args.online:
+        if args.threshold is None:
+            _autotune_threshold(eng, corpus, args, "serve")
+        sess.save(args.save_store)
+        print(f"[serve] session saved -> {args.save_store}")
 
     if args.online:
         if args.threshold is None:
@@ -231,6 +271,10 @@ def main():
             print("[online] note: select mode is the host reference path; "
                   "admission still works but the fast path is bucket/kernel")
         _serve_online(eng, corpus, args)
+        if args.save_store:
+            # the post-drift ADAPTED store is the artifact worth keeping
+            sess.save(args.save_store)
+            print(f"[serve] adapted session saved -> {args.save_store}")
         return
 
     active = None
@@ -281,9 +325,9 @@ def main():
         # padded-row parity: the fast path's mask-aware lookup + gather
         # must match the select reference on the same padded batch
         out_fast, _ = eng.infer(batch, active_layers=active)
-        eng.mc.mode = "select"
+        mode0, eng.mc.mode = eng.mc.mode, "select"
         out_sel, _ = eng.infer(batch, active_layers=active)
-        eng.mc.mode = "bucket"
+        eng.mc.mode = mode0
         diff = float(np.abs(np.asarray(out_fast)
                             - np.asarray(out_sel)).max())
         print(f"[serve] varlen parity vs select: max|Δlogits| = "

@@ -21,9 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core.engine import LEVELS, MemoConfig, MemoEngine
-from repro.core.runtime import MemoServer
 from repro.data import TemplateCorpus
+from repro.memo import LEVELS, MemoSession, MemoSpec
 from repro.models import build_model
 
 
@@ -48,8 +47,8 @@ def make_workload(corpora, n_requests: int, rate: float, buckets,
     return wl
 
 
-def build_engine(args, seed: int = 0):
-    """A freshly built engine per A/B leg: both legs must start from the
+def build_session(args, seed: int = 0):
+    """A freshly built session per A/B leg: both legs must start from the
     identical calibration store (serving mutates it)."""
     cfg = get_reduced(args.arch)
     if not cfg.n_classes:
@@ -59,22 +58,23 @@ def build_engine(args, seed: int = 0):
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=args.seq, seed=1)
     thr = args.threshold if args.threshold is not None else LEVELS.get(
         args.level, 0.97)
-    eng = MemoEngine(model, params, MemoConfig(
+    spec = MemoSpec.flat(
         threshold=thr, mode="bucket", apm_codec=args.codec,
         admit=True, budget_mb=args.budget_mb,
         admit_every=args.admit_every, recal_every=2,
-        device_slack=8.0, embed_steps=args.embed_steps))
+        device_slack=8.0, embed_steps=args.embed_steps)
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
-    eng.build(jax.random.PRNGKey(1), calib)
-    if args.threshold is None:
-        levels = eng.suggest_levels(
-            [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}])
-        eng.mc.threshold = levels.get(args.level, eng.mc.threshold)
-    return eng, corpus
+    sess = MemoSession.build(model, params, spec, batches=calib,
+                             key=jax.random.PRNGKey(1))
+    if args.threshold is None and args.level in LEVELS:
+        sess.autotune(
+            [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}],
+            level=args.level)
+    return sess, corpus
 
 
-def probe_rate(eng, *, buckets, max_batch: int, seq: int,
+def probe_rate(sess: MemoSession, *, buckets, max_batch: int, seq: int,
                utilization: float = 0.7) -> float:
     """Size the open loop near (below) capacity by timing one warm
     batch at the REAL sync-mode serving cost — miss capture + inline
@@ -83,9 +83,10 @@ def probe_rate(eng, *, buckets, max_batch: int, seq: int,
     stable regime surfaces maintenance stalls in the latency tail.
 
     The probe therefore MUTATES the store (its misses are admitted):
-    callers comparing A/B legs must probe a throwaway engine or rebuild
+    callers comparing A/B legs must probe a throwaway session or rebuild
     after probing."""
-    server = MemoServer(eng, buckets=tuple(buckets),
+    eng = sess.engine
+    server = sess.serve(buckets=tuple(buckets),
                         max_batch=max_batch, async_maintenance=False)
     server.warmup()
     # two all-miss batches (fresh random junk each round, so round 2
@@ -107,11 +108,11 @@ def probe_rate(eng, *, buckets, max_batch: int, seq: int,
     return utilization * max_batch / max(dt, 1e-6)
 
 
-def serve_trace(eng, workload, *, buckets, max_batch: int,
+def serve_trace(sess: MemoSession, workload, *, buckets, max_batch: int,
                 max_delay: float, async_maintenance: bool):
     """Serve one open-loop trace and summarize it — the shared A/B leg
     (CLI launcher and benchmarks/serve_runtime.py)."""
-    server = MemoServer(eng, buckets=tuple(buckets), max_batch=max_batch,
+    server = sess.serve(buckets=tuple(buckets), max_batch=max_batch,
                         max_delay=max_delay,
                         async_maintenance=async_maintenance)
     server.warmup()
@@ -173,27 +174,28 @@ def main():
              else [args.maintenance])
     workload = None
     for mode in modes:
-        eng, corpus = build_engine(args)
+        sess, corpus = build_session(args)
         if workload is None:
             phases = [corpus] + [
-                TemplateCorpus(vocab=eng.cfg.vocab, seq_len=args.seq,
+                TemplateCorpus(vocab=sess.engine.cfg.vocab,
+                               seq_len=args.seq,
                                seed=100 + 17 * i,
                                n_templates=corpus.n_templates,
                                slot_fraction=corpus.slot_fraction)
                 for i in range(1, args.phases)]
             rate = args.rate
             if rate is None:
-                rate = probe_rate(eng, buckets=args.bucket_list,
+                rate = probe_rate(sess, buckets=args.bucket_list,
                                   max_batch=args.batch, seq=args.seq)
                 # the probe admitted its misses: rebuild so every A/B
                 # leg starts from the identical calibration store
-                eng, corpus = build_engine(args)
+                sess, corpus = build_session(args)
             workload = make_workload(phases, args.requests, rate,
                                      args.bucket_list, seed=7)
             print(f"[server] {args.requests} requests, Poisson "
                   f"{rate:.1f} req/s, buckets {args.bucket_list}, "
                   f"max_batch {args.batch}, drift phases {args.phases}")
-        r = serve_trace(eng, workload, buckets=args.bucket_list,
+        r = serve_trace(sess, workload, buckets=args.bucket_list,
                         max_batch=args.batch,
                         max_delay=args.max_delay_ms * 1e-3,
                         async_maintenance=(mode == "async"))

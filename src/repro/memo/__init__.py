@@ -1,0 +1,72 @@
+"""``repro.memo`` — the public memoization API (v1).
+
+Three pillars (ISSUE 5 / DESIGN.md §2.8):
+
+* **Composable specs** — ``MemoSpec`` composes ``EmbedSpec``,
+  ``IndexSpec``, ``CodecSpec``, ``AdmissionPolicy``, ``EvictionPolicy``
+  and ``RuntimeSpec``, each validated at construction. The legacy flat
+  ``MemoConfig(**kwargs)`` still works (one ``DeprecationWarning``);
+  ``MemoSpec.flat(**kwargs)`` is the warning-free bridge.
+* **Extension registries** — ``register_codec`` / ``register_index`` /
+  ``register_eviction`` add storage codecs, index layouts and eviction
+  policies by string key; unknown keys fail fast listing the choices.
+* **MemoSession** — build → infer → serve → stats → save/load, one
+  facade; ``save``/``load`` persist the populated store for warm-start
+  serving.
+
+Typical use::
+
+    from repro.memo import MemoSession, MemoSpec, RuntimeSpec
+
+    spec = MemoSpec(runtime=RuntimeSpec(mode="bucket", threshold=0.9))
+    sess = MemoSession.build(model, params, spec, batches=calib)
+    logits, stats = sess.infer({"tokens": toks})
+    sess.save("memo_store.npz")
+
+Attributes resolve lazily (PEP 562) so ``repro.memo.specs`` and the
+registries are importable by core modules without a circular import
+through the session layer.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # facade
+    "MemoSession": ("repro.memo.session", "MemoSession"),
+    # specs
+    "MemoSpec": ("repro.memo.specs", "MemoSpec"),
+    "MemoConfig": ("repro.memo.specs", "MemoConfig"),
+    "EmbedSpec": ("repro.memo.specs", "EmbedSpec"),
+    "IndexSpec": ("repro.memo.specs", "IndexSpec"),
+    "CodecSpec": ("repro.memo.specs", "CodecSpec"),
+    "AdmissionPolicy": ("repro.memo.specs", "AdmissionPolicy"),
+    "EvictionPolicy": ("repro.memo.specs", "EvictionPolicy"),
+    "RuntimeSpec": ("repro.memo.specs", "RuntimeSpec"),
+    "FLAT_FIELDS": ("repro.memo.specs", "FLAT_FIELDS"),
+    # registries
+    "register_codec": ("repro.core.registry", "register_codec"),
+    "register_index": ("repro.core.registry", "register_index"),
+    "register_eviction": ("repro.core.registry", "register_eviction"),
+    # serving-surface re-exports (returned/consumed by the facade)
+    "MemoServer": ("repro.core.runtime", "MemoServer"),
+    "MemoStats": ("repro.core.engine", "MemoStats"),
+    "LEVELS": ("repro.core.engine", "LEVELS"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.memo' has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value         # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,13 @@
+"""Public re-export of the extension registries (``repro.memo`` API v1).
+
+The implementation lives in ``repro.core.registry`` (a leaf module the
+core can import without cycling through the session layer); this module
+is the documented import location::
+
+    from repro.memo.registry import register_codec, CODECS
+
+See ``repro.core.registry`` for the factory contracts.
+"""
+from repro.core.registry import (  # noqa: F401
+    CODECS, DEVICE_INDEXES, EVICTIONS, HOST_INDEXES, Registry,
+    register_codec, register_eviction, register_index)

@@ -1,0 +1,206 @@
+"""MemoSession — the one facade over the memoization stack (API v1).
+
+AttMemo's promise is memoization *without* touching the transformer;
+the facade extends that to the user's code: one object wraps engine
+orchestration (``repro.core.engine``), store lifecycle
+(``repro.core.store``) and the serving runtime (``repro.core.runtime``)
+so examples, launchers and benchmarks never hand-wire
+``MemoEngine → MemoStore → MemoServer`` again::
+
+    from repro.memo import MemoSession, MemoSpec
+
+    sess = MemoSession.build(model, params, spec, batches=calib)
+    logits, stats = sess.infer({"tokens": toks})
+    with sess.serve(max_batch=16) as server:
+        completions = server.run(workload)
+    sess.save("memo_store.npz")                  # offline-built database
+    warm = MemoSession.load("memo_store.npz", model, params)
+
+``save``/``load`` persist the populated store — codec-part arenas, index
+state, ``sim_cal``, per-entry lengths, the trained embedder and the full
+spec — and round-trip to bit-identical host-tier lookups, enabling the
+warm-start serving the paper's offline-built database assumes: build
+once, ship the file, serve anywhere.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.embedding import Embedder
+from repro.core.engine import LEVELS, MemoEngine, MemoStats
+from repro.core.runtime import MemoServer
+from repro.memo.specs import MemoSpec
+
+SAVE_FORMAT = 1
+
+
+class MemoSession:
+    """A built, servable memoization session.
+
+    Construct via ``MemoSession.build`` (calibrate a fresh store) or
+    ``MemoSession.load`` (warm-start from a saved one). The underlying
+    ``MemoEngine`` stays reachable as ``session.engine`` for advanced
+    use; everything routine goes through the facade."""
+
+    def __init__(self, engine: MemoEngine):
+        if engine.store is None:
+            raise ValueError("MemoSession wraps a BUILT engine; use "
+                             "MemoSession.build(...) or .load(...)")
+        self.engine = engine
+        self._stats = MemoStats()     # session-cumulative serving stats
+
+    # ------------------------------------------------------------- views
+    @property
+    def spec(self) -> MemoSpec:
+        return self.engine.mc
+
+    @property
+    def store(self):
+        return self.engine.store
+
+    @property
+    def model(self):
+        return self.engine.model
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(cls, model, params, spec: Optional[MemoSpec] = None, *,
+              batches: Sequence[dict], key=None, train_pairs: int = 512,
+              verbose: bool = False) -> "MemoSession":
+        """Calibrate a session: run ``batches`` through the model with
+        APM capture, train the Siamese embedder, populate both store
+        tiers (paper §5.1 'building the database')."""
+        eng = MemoEngine(model, params, spec)
+        eng.build(key if key is not None else jax.random.PRNGKey(0),
+                  batches, train_pairs=train_pairs, verbose=verbose)
+        return cls(eng)
+
+    # ------------------------------------------------------------- serve
+    def infer(self, batch: dict, **kwargs):
+        """Memoized forward; returns ``(logits, MemoStats)``. Per-call
+        stats also accumulate into the session summary (``stats()``)
+        unless the caller threads their own ``stats=`` object."""
+        out, st = self.engine.infer(batch, **kwargs)
+        if kwargs.get("stats") is None:
+            self._stats.merge(st)
+        return out, st
+
+    def serve(self, **kwargs) -> MemoServer:
+        """An open-loop continuous-batching server over this session —
+        the raw ``MemoServer`` (no wrapper on the per-batch serve path);
+        use as a context manager. Serving stats live on
+        ``server.stats``; store-lifecycle effects (admissions,
+        evictions, sync bytes) land on the shared store and show up in
+        ``session.stats()['store']``."""
+        return MemoServer(self.engine, **kwargs)
+
+    def suggest_levels(self, batches) -> Dict[str, float]:
+        return self.engine.suggest_levels(batches)
+
+    def autotune(self, batches, level: str = "moderate"
+                 ) -> Dict[str, float]:
+        """Per-model threshold autotune (paper Table 2 / §5.4): set
+        ``spec.runtime.threshold`` to the chosen level's percentile and
+        return all levels."""
+        if level not in LEVELS:
+            raise ValueError(f"level must be one of {sorted(LEVELS)}: "
+                             f"{level!r}")
+        levels = self.suggest_levels(batches)
+        self.spec.runtime.threshold = float(levels[level])
+        return levels
+
+    def profile(self, batch, **kwargs):
+        """Selective-memoization profiler (paper §5.4) → ``PerfModel``."""
+        return self.engine.profile(batch, **kwargs)
+
+    def stats(self) -> Dict[str, object]:
+        """One summary dict across serving and store lifecycle."""
+        st, store = self._stats, self.store
+        ss = store.stats
+        return {
+            "n_inputs": st.n_inputs,
+            "n_layer_attempts": st.n_layer_attempts,
+            "n_hits": st.n_hits,
+            "hit_rate": st.memo_rate,
+            "n_admitted": st.n_admitted,
+            "threshold": float(self.spec.runtime.threshold),
+            "store": {
+                "live_entries": store.live_count,
+                "entry_nbytes": store.entry_nbytes,
+                "live_mb": store.live_count * store.entry_nbytes / 1e6,
+                "codec": store.codec.name,
+                "admitted": ss.n_admitted,
+                "evicted": ss.n_evicted,
+                "delta_syncs": ss.n_delta_syncs,
+                "full_syncs": ss.n_full_syncs,
+                "sync_mb": ss.bytes_total / 1e6,
+            },
+        }
+
+    # ------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Persist the populated store to one ``.npz``: spec, trained
+        embedder, codec-part arenas, slot mirrors (embeddings, entry
+        lengths, liveness, reuse counters, free-list), ``sim_cal``.
+        ``MemoSession.load`` round-trips to bit-identical host-tier
+        lookups; the device tier is derived and re-materialized on the
+        first post-load sync."""
+        eng = self.engine
+        meta = {
+            "format": SAVE_FORMAT,
+            "spec": self.spec.to_dict(),
+            "embedder": {"pool": eng.embedder.pool,
+                         "act": eng.embedder.act},
+            "apm_shape": list(self.store.apm_shape),
+            # host-index build parameter derived from the CALIBRATION
+            # size (an ivf store that admitted entries no longer knows
+            # it) — persisted so load reconstructs the identical index
+            "n_lists": getattr(self.store.index, "n_lists", None),
+        }
+        arrays = {f"emb_param_{k}": np.asarray(v)
+                  for k, v in eng.embedder.params.items()}
+        for k, v in self.store.state_dict().items():
+            arrays[f"store_{k}"] = v
+        with open(str(path), "wb") as f:
+            np.savez_compressed(f, meta=json.dumps(meta), **arrays)
+
+    @classmethod
+    def load(cls, path: str, model, params) -> "MemoSession":
+        """Warm-start a session from ``save`` output. ``model``/``params``
+        must be the network the store was built against (the file holds
+        the memo state, not the transformer weights)."""
+        with np.load(str(path), allow_pickle=False) as data:
+            meta = json.loads(str(data["meta"]))
+            if meta.get("format") != SAVE_FORMAT:
+                raise ValueError(
+                    f"unsupported memo save format {meta.get('format')!r} "
+                    f"(this build reads format {SAVE_FORMAT})")
+            arrays = {k: data[k] for k in data.files if k != "meta"}
+        spec = MemoSpec.from_dict(meta["spec"])
+        eng = MemoEngine(model, params, spec)
+        emb_meta = meta["embedder"]
+        eng.embedder = Embedder(
+            {k[len("emb_param_"):]: jax.numpy.asarray(v)
+             for k, v in arrays.items() if k.startswith("emb_param_")},
+            int(emb_meta["pool"]), str(emb_meta["act"]))
+        state = {k[len("store_"):]: v for k, v in arrays.items()
+                 if k.startswith("store_")}
+        n = int(state["n"])
+        eng.store = eng._make_store(meta["apm_shape"],
+                                    capacity=max(1, n),
+                                    n_lists=meta.get("n_lists"))
+        eng.store.load_state_dict(state)
+        # mirror build(): materialize the serving tier only when the fast
+        # path can reach it (mode switches re-sync lazily)
+        if spec.runtime.store == "device" and spec.runtime.mode in (
+                "bucket", "kernel"):
+            eng.store.sync()
+        return cls(eng)

@@ -1,0 +1,327 @@
+"""repro.memo public API v1 (ISSUE 5): composable specs, extension
+registries, the MemoConfig deprecation shim, and MemoSession
+save/load persistence.
+
+Covers the acceptance points:
+* invalid codec/index/eviction keys raise at spec construction (and at
+  direct MemoStore construction) with the registered choices listed;
+* a registered extension is immediately a valid spec value and is
+  actually used by the store;
+* the flat ``MemoConfig(**kwargs)`` shim produces the identical
+  composed spec and emits exactly one DeprecationWarning per process;
+* ``save``/``load`` round-trips a populated store (all three codecs,
+  flat and clustered device index) to bit-identical host-tier lookups
+  and identical logits on a fixed batch, and a loaded session serves
+  under MemoServer with hit rate equal to the pre-save session on the
+  same trace.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.memo import (
+    AdmissionPolicy, CodecSpec, EmbedSpec, EvictionPolicy, IndexSpec,
+    MemoConfig, MemoSession, MemoSpec, RuntimeSpec, register_codec,
+    register_eviction, register_index)
+from repro.memo import specs as specs_mod
+
+SEQ = 32
+
+
+# ------------------------------------------------------- spec validation
+
+@pytest.mark.parametrize("ctor, needle", [
+    (lambda: CodecSpec(name="zstd"), "int8"),
+    (lambda: IndexSpec(host="hnsw"), "exact"),
+    (lambda: IndexSpec(device="bsp"), "clustered"),
+    (lambda: EvictionPolicy(kind="lru"), "clock"),
+])
+def test_unknown_registry_keys_raise_listing_choices(ctor, needle):
+    with pytest.raises(ValueError) as ei:
+        ctor()
+    msg = str(ei.value)
+    assert "registered" in msg and needle in msg
+
+
+@pytest.mark.parametrize("ctor", [
+    lambda: RuntimeSpec(mode="warp"),
+    lambda: RuntimeSpec(store="disk"),
+    lambda: RuntimeSpec(device_quanta=0),
+    lambda: EmbedSpec(act="relu"),
+    lambda: EmbedSpec(dim=0),
+    lambda: AdmissionPolicy(every=0),
+    lambda: AdmissionPolicy(budget_mb=-1.0),
+    lambda: CodecSpec(rank=0),
+])
+def test_value_validation_at_construction(ctor):
+    with pytest.raises(ValueError):
+        ctor()
+
+
+def test_flat_view_reads_and_writes_through():
+    s = MemoSpec()
+    assert s.threshold == s.runtime.threshold
+    s.threshold = 0.5
+    s.mode = "bucket"
+    s.apm_codec = "f16"
+    assert s.runtime.threshold == 0.5
+    assert s.runtime.mode == "bucket"
+    assert s.codec.name == "f16"
+    # invalid writes are rejected ATOMICALLY (value unchanged)
+    with pytest.raises(ValueError):
+        s.mode = "warp"
+    assert s.mode == "bucket"
+    with pytest.raises(ValueError):
+        s.apm_codec = "zstd"
+    assert s.apm_codec == "f16"
+
+
+def test_unknown_flat_field_raises():
+    with pytest.raises(TypeError) as ei:
+        MemoSpec.flat(thresold=0.9)      # typo
+    assert "thresold" in str(ei.value)
+
+
+def test_component_type_validated_at_construction():
+    """MemoSpec(codec=\"int8\") is the likeliest migration typo (the
+    flat name is apm_codec); it must fail AT CONSTRUCTION with a hint,
+    not later as 'str' has no attribute 'name'."""
+    with pytest.raises(TypeError, match="CodecSpec"):
+        MemoSpec(codec="int8")
+    with pytest.raises(TypeError, match="RuntimeSpec"):
+        MemoConfig(runtime="bucket")
+    assert "apm_codec" in str(pytest.raises(
+        TypeError, lambda: MemoSpec(codec="int8")).value)
+
+
+# ------------------------------------------------------------ registries
+
+def test_registered_codec_is_valid_spec_value():
+    from repro.core.codec import Int8Codec
+    register_codec("int8_alias_test",
+                   lambda shape, *, rank=None, dtype=None, **_:
+                   Int8Codec(shape))
+    spec = CodecSpec(name="int8_alias_test")
+    assert spec.name == "int8_alias_test"
+    from repro.core.codec import get_codec
+    assert get_codec("int8_alias_test", (2, 4, 4)).name == "int8"
+
+
+def test_registered_eviction_policy_is_used_by_the_store():
+    from repro.core.store import MemoStore
+    calls = []
+
+    def newest_first(store, n):
+        calls.append(n)
+        live = np.flatnonzero(store.db.live_mask)
+        return [int(s) for s in live[::-1][:n]]
+
+    register_eviction("newest_first_test", newest_first)
+    s = MemoStore((2, 4, 4), 8, capacity=4, eviction="newest_first_test")
+    rng = np.random.default_rng(0)
+    apms = rng.random((5, 2, 4, 4)).astype(np.float16)
+    embs = rng.normal(0, 0.01, (5, 8)).astype(np.float32)
+    embs[:, 0] += 10.0 * np.arange(1, 6)
+    slots = s.admit(apms, embs)
+    ev = s.evict(2)
+    assert calls == [2]
+    assert set(ev) == {int(slots[-1]), int(slots[-2])}   # newest went
+
+
+def test_registered_host_index_resolves_in_store():
+    from repro.core.index import ExactIndex
+    from repro.core.store import MemoStore
+    register_index("exact_alias_test",
+                   lambda dim, **_: ExactIndex(dim), tier="host")
+    s = MemoStore((2, 4, 4), 8, capacity=4,
+                  index_kind="exact_alias_test")
+    assert isinstance(s.index, ExactIndex)
+
+
+def test_store_rejects_unknown_keys_listing_choices():
+    from repro.core.store import MemoStore
+    with pytest.raises(ValueError, match="registered"):
+        MemoStore((2, 4, 4), 8, index_kind="nope")
+    with pytest.raises(ValueError, match="registered"):
+        MemoStore((2, 4, 4), 8, eviction="nope")
+    with pytest.raises(ValueError, match="registered"):
+        MemoStore((2, 4, 4), 8, device_index_kind="nope")
+
+
+# ------------------------------------------------------ MemoConfig shim
+
+def test_flat_shim_maps_identically_and_warns_exactly_once():
+    specs_mod._reset_flat_config_warning()
+    kwargs = dict(threshold=0.8, mode="bucket", embed_steps=40,
+                  admit=True, budget_mb=64.0, apm_codec="f16",
+                  index_kind="ivf", nprobe=8, device_slack=2.0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = MemoConfig(**kwargs)
+        MemoConfig(threshold=0.8)        # second call: no second warning
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "MemoSpec" in str(dep[0].message)
+    assert cfg == MemoSpec.flat(**kwargs)
+    assert cfg != MemoSpec.flat(threshold=0.8)
+    # the shim instance IS a MemoSpec (engines take it unchanged)
+    assert isinstance(cfg, MemoSpec)
+    assert cfg.admission.enabled is True
+    assert cfg.index.host == "ivf"
+
+
+def test_shim_supports_dataclass_protocols():
+    """The old flat MemoConfig was a plain dataclass; the shim must keep
+    dataclasses.replace and the inherited classmethods working."""
+    import dataclasses
+    cfg = MemoSpec.flat(threshold=0.8, mode="bucket")
+    shim = MemoConfig(threshold=0.8, mode="bucket")
+    r = dataclasses.replace(shim, runtime=RuntimeSpec(threshold=0.5,
+                                                      mode="bucket"))
+    assert r.threshold == 0.5 and r.mode == "bucket"
+    assert MemoConfig.flat(threshold=0.8, mode="bucket") == cfg
+    assert MemoConfig.from_dict(cfg.to_dict()) == cfg
+    assert shim.copy() == cfg
+
+
+def test_legacy_import_paths_still_work():
+    from repro.core import MemoConfig as core_cfg
+    from repro.core.engine import MemoConfig as engine_cfg
+    assert engine_cfg is MemoConfig
+    assert core_cfg is MemoConfig
+
+
+def test_engine_default_spec_is_not_shared():
+    """Satellite: the old ``memo_cfg=MemoConfig()`` default was ONE
+    shared instance; mutating one engine's config leaked into every
+    other default-constructed engine."""
+    from repro.core.engine import MemoEngine
+
+    class _M:
+        def __init__(self):
+            from repro.configs import get_reduced
+            self.cfg = get_reduced("bert_base").replace(n_layers=2)
+    m = _M()
+    e1 = MemoEngine(m, params=None)
+    e2 = MemoEngine(m, params=None)
+    assert e1.mc is not e2.mc
+    e1.mc.threshold = 0.123
+    assert e2.mc.threshold != 0.123
+
+
+# --------------------------------------------------- session save/load
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from repro.configs import get_reduced
+    from repro.data import TemplateCorpus
+    from repro.models import build_model
+
+    cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=2,
+                                           d_model=128, d_ff=256,
+                                           n_heads=4)
+    m = build_model(cfg, layer_loop="unroll")
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, n_templates=6,
+                            slot_fraction=0.2)
+    return m, params, corpus
+
+
+def _build_session(tiny_setup, codec, device_index="auto",
+                   cluster_crossover=4096, host_index="exact"):
+    m, params, corpus = tiny_setup
+    spec = MemoSpec(
+        runtime=RuntimeSpec(threshold=0.6, mode="bucket"),
+        embed=EmbedSpec(steps=30),
+        codec=CodecSpec(name=codec),
+        index=IndexSpec(host=host_index, device=device_index,
+                        cluster_crossover=cluster_crossover),
+        admission=AdmissionPolicy(enabled=True, budget_mb=64.0))
+    batches = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
+               for _ in range(3)]
+    return MemoSession.build(m, params, spec, batches=batches,
+                             key=jax.random.PRNGKey(1))
+
+
+@pytest.mark.parametrize("codec,device_index,crossover,host", [
+    ("f16", "auto", 4096, "exact"),      # flat device index
+    ("int8", "auto", 4096, "exact"),
+    ("lowrank", "auto", 4096, "exact"),
+    ("int8", "clustered", 1, "exact"),   # forced clustered device index
+    ("f16", "clustered", 1, "exact"),
+    ("int8", "auto", 4096, "ivf"),       # approximate host index: the
+    #                                      k-means layout must round-trip
+])
+def test_save_load_roundtrip_bit_identical(tiny_setup, tmp_path, codec,
+                                           device_index, crossover, host):
+    m, params, corpus = tiny_setup
+    sess = _build_session(tiny_setup, codec, device_index, crossover,
+                          host_index=host)
+    toks = jnp.asarray(corpus.sample(8)[0])
+    sess.infer({"tokens": toks})           # mutate: admissions land
+
+    path = tmp_path / f"memo_{codec}_{device_index}_{host}.npz"
+    sess.save(path)
+    loaded = MemoSession.load(path, m, params)
+
+    # host-tier lookups are BIT-identical (distances and slots)
+    q = sess.store.embeddings_at(
+        np.arange(min(8, len(sess.store.db))))
+    d1, i1 = sess.store.lookup(q, 1)
+    d2, i2 = loaded.store.lookup(q, 1)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(d1, d2)
+
+    # entry lengths and liveness round-tripped
+    n = len(sess.store.db)
+    np.testing.assert_array_equal(sess.store.entry_lengths(np.arange(n)),
+                                  loaded.store.entry_lengths(np.arange(n)))
+    assert sess.store.sim_cal == loaded.store.sim_cal
+    assert loaded.store.codec.name == sess.store.codec.name
+
+    # both serve the identical saved state: same hits, same logits
+    out1, st1 = sess.infer({"tokens": toks})
+    out2, st2 = loaded.infer({"tokens": toks})
+    assert st1.memo_rate == st2.memo_rate
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_loaded_session_serves_with_equal_hit_rate(tiny_setup, tmp_path):
+    """Acceptance: a loaded session serves under MemoServer with hit
+    rate equal to the pre-save session on the same trace."""
+    m, params, corpus = tiny_setup
+    sess = _build_session(tiny_setup, "int8")
+    sess.infer({"tokens": jnp.asarray(corpus.sample(8)[0])})
+    path = tmp_path / "memo_serve.npz"
+    sess.save(path)
+    loaded = MemoSession.load(path, m, params)
+
+    def serve_trace(session, seed=11):
+        rng = np.random.default_rng(seed)
+        with session.serve(buckets=(SEQ,), max_batch=8,
+                           async_maintenance=False) as server:
+            server.warmup()
+            for _ in range(3):
+                for _ in range(8):
+                    server.submit(corpus.sample(1, rng)[0][0])
+                server.step(flush=True)
+            return server.stats.memo_rate, server.stats.n_hits
+
+    rate_pre, hits_pre = serve_trace(sess)
+    rate_post, hits_post = serve_trace(loaded)
+    assert hits_pre > 0                       # the trace actually hits
+    assert rate_pre == rate_post
+    assert hits_pre == hits_post
+
+
+def test_load_rejects_unknown_format(tiny_setup, tmp_path):
+    import json
+    path = tmp_path / "bad.npz"
+    with open(path, "wb") as f:
+        np.savez(f, meta=json.dumps({"format": 999}))
+    m, params, _ = tiny_setup
+    with pytest.raises(ValueError, match="format"):
+        MemoSession.load(path, m, params)

@@ -293,7 +293,8 @@ def test_clustered_search_traceable_and_retraces_on_rebuild():
 @pytest.fixture(scope="module")
 def engine_factory():
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.data import TemplateCorpus
     from repro.models import build_model
 
@@ -310,7 +311,7 @@ def engine_factory():
     def make(**mc_kw):
         key = tuple(sorted(mc_kw.items()))
         if key not in cache:
-            eng = MemoEngine(m, params, MemoConfig(
+            eng = MemoEngine(m, params, MemoSpec.flat(
                 threshold=0.6, embed_steps=40, mode="bucket", **mc_kw))
             eng.build(jax.random.PRNGKey(1), batches)
             cache[key] = eng

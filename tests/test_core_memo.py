@@ -138,7 +138,8 @@ def test_device_db_gather():
 @pytest.fixture(scope="module")
 def tiny_engine():
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.data import TemplateCorpus
     from repro.models import build_model
 
@@ -148,7 +149,7 @@ def tiny_engine():
     params = m.init(jax.random.PRNGKey(0))
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=32, n_templates=6,
                             slot_fraction=0.2)
-    eng = MemoEngine(m, params, MemoConfig(threshold=0.6, embed_steps=40))
+    eng = MemoEngine(m, params, MemoSpec.flat(threshold=0.6, embed_steps=40))
     batches = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
                for _ in range(3)]
     eng.build(jax.random.PRNGKey(1), batches)
@@ -200,7 +201,8 @@ def test_engine_whisper_encoder_memo():
     """Enc-dec support: whisper's encoder self-attention is memoized (the
     paper's sweet spot — fixed-length bidirectional APMs)."""
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.models import build_model
 
     cfg = get_reduced("whisper_medium")
@@ -214,7 +216,7 @@ def test_engine_whisper_encoder_memo():
                     k, (B, cfg.encoder.n_frames, cfg.encoder.d_model)),
                 "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab)}
 
-    eng = MemoEngine(model, params, MemoConfig(threshold=0.5,
+    eng = MemoEngine(model, params, MemoSpec.flat(threshold=0.5,
                                                embed_steps=30))
     eng.build(jax.random.PRNGKey(2), [mkbatch(k) for k in
                                       jax.random.split(key, 2)])
@@ -287,7 +289,8 @@ def test_engine_hybrid_recurrentgemma():
     """§Arch-applicability: memoization applies to recurrentgemma's 1-in-3
     local-attention layers; RG-LRU layers pass through untouched."""
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.data import TemplateCorpus
     from repro.models import build_model
 
@@ -295,7 +298,7 @@ def test_engine_hybrid_recurrentgemma():
     model = build_model(cfg, layer_loop="unroll")
     params = model.init(jax.random.PRNGKey(0))
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=32, seed=9)
-    eng = MemoEngine(model, params, MemoConfig(threshold=0.5,
+    eng = MemoEngine(model, params, MemoSpec.flat(threshold=0.5,
                                                embed_steps=30))
     assert eng.layers == [2]                     # only the attention layer
     eng.build(jax.random.PRNGKey(1),

@@ -17,7 +17,8 @@ from repro.core.index import DeviceIndex, ExactIndex
 @pytest.fixture(scope="module")
 def fast_engine():
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.data import TemplateCorpus
     from repro.models import build_model
 
@@ -27,7 +28,7 @@ def fast_engine():
     params = m.init(jax.random.PRNGKey(0))
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=32, n_templates=6,
                             slot_fraction=0.2)
-    eng = MemoEngine(m, params, MemoConfig(threshold=0.6, embed_steps=40,
+    eng = MemoEngine(m, params, MemoSpec.flat(threshold=0.6, embed_steps=40,
                                            mode="bucket"))
     batches = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
                for _ in range(3)]

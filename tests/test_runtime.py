@@ -25,7 +25,8 @@ SEQ = 32
 @pytest.fixture(scope="module")
 def vl_engine():
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.data import TemplateCorpus
     from repro.models import build_model
 
@@ -35,7 +36,7 @@ def vl_engine():
     params = m.init(jax.random.PRNGKey(0))
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, n_templates=6,
                             slot_fraction=0.2)
-    eng = MemoEngine(m, params, MemoConfig(threshold=0.6, embed_steps=40,
+    eng = MemoEngine(m, params, MemoSpec.flat(threshold=0.6, embed_steps=40,
                                            mode="bucket", device_slack=8.0))
     eng.build(jax.random.PRNGKey(1),
               [{"tokens": jnp.asarray(corpus.sample(16)[0])}

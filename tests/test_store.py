@@ -330,7 +330,8 @@ def test_sim_reservoir_small_streams_are_exact():
 @pytest.fixture(scope="module")
 def online_engine():
     from repro.configs import get_reduced
-    from repro.core.engine import MemoConfig, MemoEngine
+    from repro.core.engine import MemoEngine
+    from repro.memo import MemoSpec
     from repro.data import TemplateCorpus
     from repro.models import build_model
 
@@ -340,7 +341,7 @@ def online_engine():
     params = m.init(jax.random.PRNGKey(0))
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=32, n_templates=6,
                             slot_fraction=0.2)
-    eng = MemoEngine(m, params, MemoConfig(threshold=0.6, embed_steps=40,
+    eng = MemoEngine(m, params, MemoSpec.flat(threshold=0.6, embed_steps=40,
                                            mode="bucket", admit=True,
                                            budget_mb=64.0))
     batches = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
