@@ -35,6 +35,7 @@ MODULES = [
     "serve_online",        # ISSUE 2: MemoStore online adaptation + delta sync
     "serve_compress",      # ISSUE 3: codec x index sweep (bytes/accuracy)
     "serve_runtime",       # ISSUE 4: open-loop runtime, sync vs async maint
+    "serve_faults",        # ISSUE 6: chaos classes, degradation + recovery
 ]
 
 
@@ -81,6 +82,18 @@ def _normalized_latencies(doc):
     fa = rt.get("facade_ab") or {}
     if fa.get("facade_overhead_frac") is not None:
         out["runtime/facade_overhead_frac"] = fa["facade_overhead_frac"]
+    # chaos classes (ISSUE 6): both keys are absolute-ceiling gates, not
+    # baseline-relative — a fault class may NEVER cost a request
+    # (unavailability ≤ 0) and recovery must restore the memo path
+    # (post-recovery hit rate within 0.05 of the fault-free baseline).
+    # p99 under faults is recorded in the JSON but not gated: it carries
+    # one-off XLA compiles for the exact-attention path.
+    for cls, leg in ((doc.get("serve_faults") or {}).get("classes")
+                     or {}).items():
+        if leg.get("availability") is not None:
+            out[f"faults/{cls}/unavailability"] = 1.0 - leg["availability"]
+        if leg.get("hit_recovery_gap") is not None:
+            out[f"faults/{cls}/hit_recovery_gap"] = leg["hit_recovery_gap"]
     return out
 
 
@@ -92,6 +105,12 @@ def _normalized_latencies(doc):
 # ~0.2-0.35% (several-fold margin), so this only fires when someone
 # adds real per-batch work to the facade.
 ABS_BOUNDS = {"runtime/facade_overhead_frac": 0.01}
+# chaos acceptance (ISSUE 6): zero dropped requests under every fault
+# class, and post-recovery hit rate within 0.05 of the fault-free run
+for _cls in ("corrupt_row", "sync_fail", "evict_bogus", "maint_crash",
+             "maint_stall", "queue_overflow"):
+    ABS_BOUNDS[f"faults/{_cls}/unavailability"] = 0.0
+    ABS_BOUNDS[f"faults/{_cls}/hit_recovery_gap"] = 0.05
 
 
 def check_regress(new_doc, baseline_path, tol=0.10):
@@ -186,7 +205,8 @@ def main() -> None:
         detail_sections = [("serve", "serve_fastpath"),
                            ("serve_online", "serve_online"),
                            ("serve_compress", "serve_compress"),
-                           ("serve_runtime", "serve_runtime")]
+                           ("serve_runtime", "serve_runtime"),
+                           ("serve_faults", "serve_faults")]
         for doc_key, mod_name in detail_sections:
             if not wanted(mod_name):
                 continue

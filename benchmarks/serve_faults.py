@@ -1,0 +1,296 @@
+"""Chaos harness: fault-tolerant serving (ISSUE 6 / DESIGN.md §2.9).
+
+Drives the PR 4 open-loop trace through a supervised ``MemoServer``
+once per chaos class (``repro.core.faults.CHAOS_PRESETS``): a warm
+phase, a fault window with the class's fault points armed, then
+disarm + ``recover()`` and a recovery phase. Per class it records
+
+* ``availability``   — completions / submissions over all three phases.
+  The acceptance bar is **1.0 under every class**: a memo fault may
+  cost hit rate, never a request (gated via ``faults/<cls>/
+  unavailability`` ≤ 0.0 in benchmarks/run.py ABS_BOUNDS).
+* ``p99_ms``         — tail latency across the whole trace, fault
+  window included.
+* ``hit_rate_after_recovery`` and ``hit_recovery_gap`` — the recovery
+  phase's hit rate vs the same phase of a fault-free baseline run
+  (gated ≤ 0.05: recovery must re-arm the memo path, not limp along
+  serving exact attention forever).
+* the health trail + supervision counters (sheds, retries,
+  quarantines, exact-attention batches).
+
+Sessions are rebuilt per class via ``save`` + ``load`` of one
+calibrated store, so every class starts from the identical state (and
+the persistence path itself gets exercised once per class). A
+``persistence`` section additionally records that truncated /
+bit-flipped save files fail with a clean ``MemoStoreError``.
+
+Emitted into BENCH_serve.json as the ``serve_faults`` section.
+Standalone (the CI chaos-smoke job)::
+
+    PYTHONPATH=src python -m benchmarks.serve_faults --quick
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_encoder
+from repro.core.faults import CHAOS_PRESETS, FaultInjector, MemoStoreError
+from repro.core.runtime import Health
+from repro.launch.server import probe_rate
+from repro.memo import MemoSession, MemoSpec
+
+SEQ = 32
+BATCH = 8
+BUCKETS = (16, 32)
+
+# per-class supervision knobs: each class must traverse its part of the
+# health ladder *within the fault window*, so retries/backoff are sized
+# to the trace, not to production defaults
+SERVER_KW = {
+    "corrupt_row":    {},
+    "sync_fail":      {"maint_retries": 2, "maint_backoff_s": 0.005},
+    "evict_bogus":    {},
+    "maint_crash":    {"maint_retries": 1, "maint_backoff_s": 0.005,
+                       "disable_after": 2},
+    "maint_stall":    {"maint_retries": 0, "watchdog_s": 0.02},
+    "queue_overflow": {"maint_put_timeout": 0.01},
+}
+
+
+def _build_and_save(path: str):
+    model, params, corpus = trained_encoder("bert_base", n_layers=2,
+                                            seq_len=SEQ)
+    spec = MemoSpec.flat(mode="bucket", embed_steps=120, admit=True,
+                         budget_mb=256.0, device_slack=8.0, faults={})
+    rng = np.random.default_rng(123)
+    sess = MemoSession.build(
+        model, params, spec,
+        batches=[{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}
+                 for _ in range(4)],
+        key=jax.random.PRNGKey(1))
+    sess.autotune([{"tokens": jnp.asarray(corpus.sample(BATCH, rng)[0])}],
+                  level="aggressive")       # persists via spec.to_dict
+    sess.save(path)
+    # capacity probe on a THROWAWAY load (probing admits junk entries)
+    rate = probe_rate(MemoSession.load(path, model, params),
+                      buckets=BUCKETS, max_batch=BATCH, seq=SEQ)
+    return model, params, corpus, rate
+
+
+def _workload(corpus, rate: float, n_requests: int, seed: int):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    wl = []
+    for i in range(n_requests):
+        bucket = int(rng.choice(BUCKETS))
+        length = bucket - int(rng.choice([0, 2]))
+        wl.append((float(arrivals[i]),
+                   corpus.sample(1, rng)[0][0, :length]))
+    return wl
+
+
+def _phase_rate(stats, mark):
+    """Hit rate over the window since ``mark`` (a (hits, attempts)
+    tuple)."""
+    d_att = stats.n_layer_attempts - mark[1]
+    return (stats.n_hits - mark[0]) / max(1, d_att)
+
+
+def _chaos_leg(cls, path, model, params, corpus, rate, n_requests):
+    """One three-phase trace: warm → fault window → recover. ``cls`` is
+    a CHAOS_PRESETS key or None for the fault-free baseline."""
+    sess = MemoSession.load(path, model, params)
+    inj = sess.engine.faults
+    srv = sess.serve(buckets=BUCKETS, max_batch=BATCH, max_delay=4e-3,
+                     async_maintenance=True,
+                     **(SERVER_KW.get(cls) or {}))
+    srv.warmup()
+    lats, submitted, completed = [], 0, 0
+    try:
+        phases = [(None, 11), (CHAOS_PRESETS[cls] if cls else None, 13),
+                  (None, 17)]
+        for pi, (preset, seed) in enumerate(phases):
+            if preset:
+                for point, kw in preset.items():
+                    inj.arm(point, **kw)
+            if pi == 2:                        # recovery phase entry
+                inj.disarm()
+                try:                           # quiesce best-effort: a
+                    srv.drain_maintenance(     # stalled worker finishes,
+                        timeout=10,            # a dead one is recovered
+                        raise_errors=False)    # below
+                except Exception:  # noqa: BLE001 — timeout/dead worker
+                    pass
+                srv.recover()
+                mark = (srv.stats.n_hits, srv.stats.n_layer_attempts)
+            wl = _workload(corpus, rate, n_requests, seed)
+            submitted += len(wl)
+            comps = srv.run(wl)
+            completed += len(comps)
+            lats.extend(c.latency for c in comps)
+        srv.drain_maintenance(timeout=30, raise_errors=False)
+        recovered_rate = _phase_rate(srv.stats, mark)
+        lat_ms = np.asarray(lats) * 1e3
+        return {
+            "availability": completed / max(1, submitted),
+            "n_submitted": submitted,
+            "n_completed": completed,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "hit_rate_after_recovery": float(recovered_rate),
+            "hit_rate_total": float(srv.stats.memo_rate),
+            "final_health": srv.health.value,
+            "health_log": [(round(t, 4), h, why)
+                           for t, h, why in srv.health_log],
+            "n_maint_shed": srv.n_maint_shed,
+            "n_maint_retries": srv.n_maint_retries,
+            "n_exact_batches": srv.n_exact_batches,
+            "n_quarantined": sess.store.stats.n_quarantined,
+            "n_evict_rejected": sess.store.stats.n_evict_rejected,
+            "live_entries": sess.store.live_count,
+        }
+    finally:
+        inj.disarm()
+        srv.close()
+
+
+def _persistence_leg(path, model, params):
+    """Save/load under injected file faults: every leg must fail with a
+    clean ``MemoStoreError`` (never a numpy/zipfile internal)."""
+    out = {}
+    d = tempfile.mkdtemp(prefix="memo_chaos_")
+    try:
+        torn = os.path.join(d, "torn.npz")
+        shutil.copy(path, torn)
+        with open(torn, "rb+") as f:
+            f.truncate(os.path.getsize(torn) // 2)
+        try:
+            MemoSession.load(torn, model, params)
+            out["truncated_clean_error"] = False
+        except MemoStoreError:
+            out["truncated_clean_error"] = True
+
+        inj = FaultInjector()
+        inj.arm("session.load_bitflip", at=1, count=1)
+        try:
+            MemoSession.load(path, model, params, faults=inj)
+            out["bitflip_clean_error"] = False
+        except MemoStoreError:
+            out["bitflip_clean_error"] = True
+
+        sess = MemoSession.load(path, model, params)
+        sess.engine.faults.arm("session.save_truncate", at=1, count=1)
+        torn2 = os.path.join(d, "torn2.npz")
+        sess.save(torn2)
+        try:
+            MemoSession.load(torn2, model, params)
+            out["save_truncate_clean_error"] = False
+        except MemoStoreError:
+            out["save_truncate_clean_error"] = True
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return out
+
+
+@functools.lru_cache(maxsize=2)
+def collect(quick: bool = False):
+    n_requests = 16 if quick else 32          # per phase
+    d = tempfile.mkdtemp(prefix="memo_chaos_store_")
+    try:
+        path = os.path.join(d, "store.npz")
+        model, params, corpus, rate = _build_and_save(path)
+        out = {"config": {"arch": "bert_base (reduced, 2 layers)",
+                          "requests_per_phase": n_requests,
+                          "rate_rps": float(rate),
+                          "buckets": list(BUCKETS),
+                          "quick": bool(quick),
+                          "backend": jax.default_backend()}}
+        base = _chaos_leg(None, path, model, params, corpus, rate,
+                          n_requests)
+        out["baseline"] = base
+        out["classes"] = {}
+        for cls in CHAOS_PRESETS:
+            t0 = time.time()
+            leg = _chaos_leg(cls, path, model, params, corpus, rate,
+                             n_requests)
+            leg["hit_recovery_gap"] = max(
+                0.0, base["hit_rate_after_recovery"]
+                - leg["hit_rate_after_recovery"])
+            leg["wall_s"] = round(time.time() - t0, 2)
+            out["classes"][cls] = leg
+        out["persistence"] = _persistence_leg(path, model, params)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return out
+
+
+def run():
+    out = collect()
+    for cls, leg in out["classes"].items():
+        yield (f"serve_faults_{cls}", leg["p99_ms"] * 1e3,
+               f"avail={leg['availability']:.3f};"
+               f"p99={leg['p99_ms']:.1f}ms;"
+               f"hit_rec={leg['hit_rate_after_recovery']:.3f};"
+               f"gap={leg['hit_recovery_gap']:.3f};"
+               f"health={leg['final_health']}")
+    p = out["persistence"]
+    yield ("serve_faults_persistence", 0.0,
+           f"truncated={p['truncated_clean_error']};"
+           f"bitflip={p['bitflip_clean_error']};"
+           f"save_truncate={p['save_truncate_clean_error']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="16 requests/phase (the CI chaos-smoke size)")
+    args = ap.parse_args()
+    out = collect(quick=args.quick)
+    failures = []
+    for cls, leg in out["classes"].items():
+        ok_avail = leg["availability"] >= 1.0
+        ok_gap = leg["hit_recovery_gap"] <= 0.05
+        print(f"{cls:>16}: avail={leg['availability']:.3f} "
+              f"p99={leg['p99_ms']:.1f}ms "
+              f"hit_rec={leg['hit_rate_after_recovery']:.3f} "
+              f"gap={leg['hit_recovery_gap']:.3f} "
+              f"health={leg['final_health']} "
+              f"shed={leg['n_maint_shed']} "
+              f"retries={leg['n_maint_retries']} "
+              f"quarantined={leg['n_quarantined']}"
+              + ("" if ok_avail and ok_gap else "   <-- FAIL"))
+        if not ok_avail:
+            failures.append(f"{cls}: availability "
+                            f"{leg['availability']:.3f} < 1.0")
+        if not ok_gap:
+            failures.append(f"{cls}: hit_recovery_gap "
+                            f"{leg['hit_recovery_gap']:.3f} > 0.05")
+        if leg["final_health"] != Health.HEALTHY.value:
+            failures.append(f"{cls}: final health "
+                            f"{leg['final_health']} != healthy")
+    for k, v in out["persistence"].items():
+        print(f"{'persistence':>16}: {k}={v}"
+              + ("" if v else "   <-- FAIL"))
+        if not v:
+            failures.append(f"persistence: {k} is False")
+    if failures:
+        print("\nCHAOS FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall chaos classes: availability 1.0, recovery within "
+          "tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@ from repro.core.database import (  # noqa: F401
     AttentionDB, DeviceDB, distributed_search)
 from repro.core.selective import LayerProfile, PerfModel  # noqa: F401
 from repro.core.store import MemoStore, StoreStats  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    CHAOS_PRESETS, FAULT_POINTS, FaultInjector, MemoStoreError)
 from repro.core.registry import (  # noqa: F401
     register_codec, register_eviction, register_index)
 from repro.core.engine import (  # noqa: F401

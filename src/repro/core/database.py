@@ -25,6 +25,7 @@ Two tiers (DESIGN.md §2), both codec-aware (§2.6):
 """
 from __future__ import annotations
 
+import zlib
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -81,6 +82,12 @@ class AttentionDB:
         self.reuse_counts = np.zeros(capacity, np.int64)
         self._live = np.zeros(capacity, bool)
         self._free: List[int] = []           # released slots, LIFO recycled
+        # per-codec-part CRC32 of each entry's arena row, recorded at
+        # write time (add/put/overwrite) — the store's integrity layer
+        # (DESIGN.md §2.9): ``verify`` recomputes and flags any slot
+        # whose bytes drifted since they were encoded
+        self.checksums: List[np.ndarray] = [
+            np.zeros(capacity, np.uint32) for _ in self.codec.parts]
 
     def __len__(self):
         return self._n
@@ -143,7 +150,48 @@ class AttentionDB:
         live = np.zeros(new_cap, bool)
         live[: self._n] = self._live[: self._n]
         self._live = live
+        csums = []
+        for c in self.checksums:
+            fresh = np.zeros(new_cap, np.uint32)
+            fresh[: self._n] = c[: self._n]
+            csums.append(fresh)
+        self.checksums = csums
         self.capacity = new_cap
+
+    # ------------------------------------------------------------ integrity
+    @staticmethod
+    def _crc_rows(part_rows: np.ndarray) -> np.ndarray:
+        """(B, ...) encoded part rows → (B,) CRC32 per row."""
+        b = part_rows.shape[0]
+        out = np.empty(b, np.uint32)
+        rows = np.ascontiguousarray(part_rows)
+        for i in range(b):
+            out[i] = zlib.crc32(rows[i].tobytes())
+        return out
+
+    def _record_checksums(self, slots: np.ndarray,
+                          parts: Sequence[np.ndarray]) -> None:
+        for csum, p in zip(self.checksums, parts):
+            csum[slots] = self._crc_rows(np.asarray(p))
+
+    def verify(self, slots=None) -> np.ndarray:
+        """Recompute per-part checksums for ``slots`` (default: every
+        live slot) and return the slot ids whose stored bytes no longer
+        match — corruption candidates for the store's
+        quarantine-and-tombstone path. Dead slots are skipped (their
+        rows are garbage by design until ``put`` recycles them)."""
+        if slots is None:
+            slots = np.flatnonzero(self._live[: self._n])
+        else:
+            slots = np.asarray(slots).reshape(-1)
+            slots = slots[(slots >= 0) & (slots < self._n)]
+            slots = slots[self._live[slots]]
+        if slots.size == 0:
+            return np.zeros(0, np.int64)
+        bad = np.zeros(slots.shape[0], bool)
+        for csum, arena in zip(self.checksums, self._arenas):
+            bad |= self._crc_rows(arena[slots]) != csum[slots]
+        return slots[bad].astype(np.int64)
 
     def add(self, apms: np.ndarray) -> np.ndarray:
         """apms: (B, H, L, L). Appends at the arena tail; returns indices.
@@ -157,6 +205,7 @@ class AttentionDB:
         parts = self.codec.encode(np.asarray(apms, self.dtype))
         for a, p in zip(self._arenas, parts):
             a[idx] = p
+        self._record_checksums(idx, parts)
         self._live[idx] = True
         self._n += b
         return idx
@@ -174,6 +223,7 @@ class AttentionDB:
             parts = self.codec.encode(apms[:n_reuse])
             for a, p in zip(self._arenas, parts):
                 a[slots] = p
+            self._record_checksums(slots, parts)
             self.reuse_counts[slots] = 0
             self._live[slots] = True
         if b > n_reuse:
@@ -186,6 +236,7 @@ class AttentionDB:
         parts = self.codec.encode(np.asarray(apms, self.dtype))
         for a, p in zip(self._arenas, parts):
             a[slots] = p
+        self._record_checksums(slots, parts)
 
     def release(self, slots: Sequence[int]) -> None:
         """Evict entries: mark slots dead and queue them for recycling.

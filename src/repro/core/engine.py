@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.database import AttentionDB, DeviceDB
 from repro.core.embedding import Embedder, train_embedder
+from repro.core.faults import FaultInjector
 from repro.core.index import DeviceIndex
 from repro.core.selective import LayerProfile, PerfModel, timeit_median
 from repro.core.similarity import similarity_score
@@ -182,6 +183,8 @@ class MaintenancePayload:
     reuse_slots: Optional[np.ndarray] = None        # device-tier hits
     admissions: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = \
         field(default_factory=list)                 # (apms, embs, lens)
+    generation: int = -1        # the store generation the batch served
+    #                             against (failure-report context)
 
     @property
     def empty(self) -> bool:
@@ -221,6 +224,9 @@ class MemoEngine:
         self._pending_admissions: List = []   # host-path capture staging
         self._recal_buf: List = []       # rolling (apms, embs) captures
         self._flush_count = 0
+        # fault injection (DESIGN.md §2.9): None unless the spec opts in
+        # (RuntimeSpec.faults), so production serving pays one `is None`
+        self.faults = FaultInjector.from_spec(self.mc.runtime.faults)
 
     # --- store delegation (compat: the pre-store attribute API) ---------
     @property
@@ -281,7 +287,7 @@ class MemoEngine:
             device_index_kind=mc.device_index,
             cluster_crossover=mc.cluster_crossover,
             nprobe=mc.nprobe, n_clusters=mc.n_clusters,
-            eviction=mc.eviction.kind)
+            eviction=mc.eviction.kind, faults=self.faults)
 
     # ------------------------------------------------------------------ build
     def build(self, key, batches: Sequence[dict], *, train_pairs=512,
@@ -817,7 +823,8 @@ class MemoEngine:
         misses — WITHOUT touching the store: the caller decides where
         maintenance runs (inline vs the MemoServer worker)."""
         pend = prep.pend
-        out = MaintenancePayload()
+        out = MaintenancePayload(
+            generation=getattr(prep.view, "generation", -1))
         if not pend:
             return out
         nv = prep.n_valid
@@ -879,15 +886,30 @@ class MemoEngine:
         maintenance); the MemoServer's background worker calls it
         off-thread, double-buffered against the next batch's device
         compute (DESIGN.md §2.7). Exactly one maintenance actor may run
-        at a time; the MemoStore's lock backstops misuse."""
-        if payload is None or self.store is None or payload.empty:
+        at a time; the MemoStore's lock backstops misuse.
+
+        Retry-safe (the supervised worker's contract, DESIGN.md §2.9):
+        payload fields are CONSUMED as they land — reuse feeding and the
+        move into ``_pending_admissions`` happen at most once — so
+        re-applying a payload whose first attempt died mid-sync cannot
+        double-admit; the retry just drives the store back to a clean,
+        published generation (the trailing ``device_stale`` sync)."""
+        if payload is None or self.store is None:
             return
         st = stats or MemoStats()
         if payload.reuse_slots is not None and payload.reuse_slots.size:
-            self.store.note_reuse(payload.reuse_slots)
+            slots, payload.reuse_slots = payload.reuse_slots, None
+            self.store.note_reuse(slots)
         if payload.admissions:
-            self._pending_admissions.extend(payload.admissions)
+            adds, payload.admissions = payload.admissions, []
+            self._pending_admissions.extend(adds)
         self._flush_admissions(st)
+        if self.store.device_stale:
+            # nothing pending but host/device generations diverged — a
+            # previous attempt admitted and then failed to sync (or a
+            # quarantine dirtied slots); one generation-counted sync
+            # re-converges (a clean store skips this entirely)
+            self.store.sync()
 
     def _flush_admissions(self, st: MemoStats):
         """Batch-boundary admission: push captured misses into the host

@@ -26,9 +26,27 @@ variable-length sequences arriving open-loop. MemoServer owns the gap:
   batch, so the fused fast path can never observe a half-applied sync.
   In sync mode the same payload is applied inline at the batch boundary
   — the head-of-line-latency baseline the benchmark A/Bs against.
+* **supervised maintenance + graceful degradation** (DESIGN.md §2.9) —
+  the worker retries failed payloads with exponential backoff; a
+  payload that exhausts its retries is SHED (dropped), never re-raised
+  into a request. Health walks an explicit ladder::
+
+      HEALTHY → DEGRADED → MEMO_DISABLED
+
+  DEGRADED keeps serving from the last atomically-published
+  ``StoreSnapshot`` (memo path intact, maintenance shedding);
+  ``disable_after`` consecutive payload failures escalate to
+  MEMO_DISABLED, which routes every batch through exact attention —
+  bit-identical logits to ``engine.infer(use_memo=False)``. A
+  staleness watchdog flags a stalled worker, ``drain_maintenance``
+  takes a ``timeout`` and checks worker liveness, and ``recover()``
+  re-materializes the device tier from the host mirrors (quarantining
+  entries that fail checksum validation) to restore the pre-fault hit
+  rate.
 """
 from __future__ import annotations
 
+import enum
 import queue
 import threading
 import time
@@ -40,6 +58,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import MemoEngine, MemoStats
+from repro.core.faults import fire
+
+
+class Health(enum.Enum):
+    """The serving-health ladder (DESIGN.md §2.9). Order matters:
+    each step gives up store freshness, then the memo path, never the
+    request."""
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"            # serve last snapshot; shed maintenance
+    MEMO_DISABLED = "memo_disabled"  # exact attention; no maintenance
+
+
+class MemoMaintenanceError(RuntimeError):
+    """A maintenance payload failed after every retry. Chained
+    (``__cause__``) to the original worker exception, with the store
+    generation the payload was drained against in the message."""
 
 
 @dataclass
@@ -83,7 +117,9 @@ class MemoServer:
                  buckets: Optional[Sequence[int]] = None,
                  max_batch: int = 16, max_delay: float = 2e-3,
                  batch_quantum: int = 4, async_maintenance: bool = True,
-                 maint_queue_depth: int = 4):
+                 maint_queue_depth: int = 4, maint_retries: int = 2,
+                 maint_backoff_s: float = 0.02, watchdog_s: float = 30.0,
+                 disable_after: int = 3, maint_put_timeout: float = 0.25):
         if engine.store is None:
             raise RuntimeError("build() the engine before serving")
         if not engine._use_fast_path():
@@ -113,19 +149,38 @@ class MemoServer:
         self.n_batches = 0
         self.n_filler_rows = 0          # pow2 batch-padding overhead
         self.maintenance_errors: List[BaseException] = []
+        # supervision (DESIGN.md §2.9)
+        self.faults = engine.faults       # None in production
+        self.maint_retries = max(0, int(maint_retries))
+        self.maint_backoff_s = float(maint_backoff_s)
+        self.watchdog_s = float(watchdog_s)
+        self.disable_after = max(1, int(disable_after))
+        self.maint_put_timeout = float(maint_put_timeout)
+        self.health = Health.HEALTHY
+        self.health_log: List[Tuple[float, str, str]] = []
+        self.n_maint_shed = 0             # payloads dropped, never requests
+        self.n_maint_retries = 0
+        self.n_exact_batches = 0          # batches served in MEMO_DISABLED
+        self._consec_failures = 0
+        self._health_lock = threading.Lock()
+        self._maint_busy_since: Optional[float] = None
         self._maint_q: Optional[queue.Queue] = None
         self._worker: Optional[threading.Thread] = None
         if self.async_maintenance:
             # BOUNDED: each payload pins full captured-miss APM blocks;
             # if maintenance falls more than ``maint_queue_depth`` batches
-            # behind, the serving thread blocks on put() — backpressure
-            # degrades toward the sync baseline instead of growing the
-            # queue (and memory) without bound
+            # behind, put() blocks up to ``maint_put_timeout`` (transient
+            # backpressure toward the sync baseline) and then SHEDS the
+            # payload — store freshness is sacrificed before request
+            # latency, and memory stays bounded
             self._maint_q = queue.Queue(maxsize=max(1, maint_queue_depth))
-            self._worker = threading.Thread(
-                target=self._maintenance_loop, name="memo-maintenance",
-                daemon=True)
-            self._worker.start()
+            self._worker = self._start_worker()
+
+    def _start_worker(self) -> threading.Thread:
+        w = threading.Thread(target=self._maintenance_loop,
+                             name="memo-maintenance", daemon=True)
+        w.start()
+        return w
 
     # ------------------------------------------------------------- clock
     def _now(self) -> float:
@@ -210,17 +265,26 @@ class MemoServer:
         batch = {"tokens": jnp.asarray(toks), "lengths": lens,
                  "n_valid": n}
         st = MemoStats()
-        prep = eng.prepare_batch(batch,
-                                 sync_store=not self.async_maintenance)
-        eng.run_layers(prep)
-        out, st, payload = eng.finalize(prep, stats=st)
         if self.async_maintenance:
-            if self._worker is None:      # closed: nobody drains the
-                raise RuntimeError(       # queue — fail loudly instead
-                    "MemoServer is closed")   # of blocking on put()
-            self._maint_q.put(payload)
+            self._check_worker()
+        if self.health is Health.MEMO_DISABLED:
+            # the bottom of the degradation ladder: exact attention via
+            # the engine's no-memo path — logits bit-identical to
+            # ``infer(use_memo=False)``, no store reads, no maintenance
+            out, st = eng.infer(batch, stats=st, use_memo=False)
+            self.n_exact_batches += 1
         else:
-            eng.apply_maintenance(payload, stats=self.stats)
+            prep = eng.prepare_batch(batch,
+                                     sync_store=not self.async_maintenance)
+            eng.run_layers(prep)
+            out, st, payload = eng.finalize(prep, stats=st)
+            if self.async_maintenance:
+                if self._worker is None:   # closed: nobody drains the
+                    raise RuntimeError(    # queue — fail loudly instead
+                        "MemoServer is closed")  # of blocking on put()
+                self._enqueue_payload(payload)
+            else:
+                eng.apply_maintenance(payload, stats=self.stats)
         self.stats.merge(st)
         self.n_batches += 1
         done = self._now()
@@ -234,6 +298,53 @@ class MemoServer:
                 length=int(r.tokens.size), bucket=bucket, batch_rows=n))
         return comps
 
+    # ----------------------------------------------------------- health
+    def _set_health(self, health: Health, reason: str) -> None:
+        with self._health_lock:
+            if self.health is health:
+                return
+            self.health = health
+            self.health_log.append((self._now(), health.value, reason))
+
+    def _check_worker(self) -> None:
+        """Serving-thread supervision, once per batch: restart a dead
+        worker (DEGRADED until a payload applies cleanly again) and run
+        the staleness watchdog — a payload in flight longer than
+        ``watchdog_s`` marks the worker stalled. Neither path ever
+        blocks or fails the batch."""
+        w = self._worker
+        if w is not None and not w.is_alive():
+            self._set_health(Health.DEGRADED,
+                             "maintenance worker died; restarted")
+            self._worker = self._start_worker()
+        busy = self._maint_busy_since
+        if busy is not None \
+                and time.monotonic() - busy > self.watchdog_s:
+            self._set_health(
+                Health.DEGRADED,
+                f"maintenance stalled > {self.watchdog_s:.3g}s "
+                f"(staleness watchdog)")
+
+    def _enqueue_payload(self, payload) -> None:
+        """Hand one payload to the worker, shedding — never blocking the
+        serving thread past ``maint_put_timeout`` — when the bounded
+        queue stays full (shed maintenance, not requests)."""
+        forced = fire(self.faults, "server.queue_overflow") is not None
+        if not forced:
+            try:
+                self._maint_q.put_nowait(payload)
+                return
+            except queue.Full:
+                try:          # transient backpressure before giving up
+                    self._maint_q.put(payload,
+                                      timeout=self.maint_put_timeout)
+                    return
+                except queue.Full:
+                    pass
+        self.n_maint_shed += 1
+        self._set_health(Health.DEGRADED,
+                         "maintenance queue overflow; shedding payloads")
+
     # ------------------------------------------------------ maintenance
     def _maintenance_loop(self):
         while True:
@@ -241,27 +352,160 @@ class MemoServer:
             try:
                 if item is None:
                     return
-                self.engine.apply_maintenance(item, stats=self.stats)
-            except BaseException as e:  # noqa: BLE001 — surfaced to caller
-                self.maintenance_errors.append(e)
+                self._apply_supervised(item)
             finally:
+                self._maint_busy_since = None
                 self._maint_q.task_done()
 
-    def drain_maintenance(self):
+    def _apply_supervised(self, payload) -> None:
+        """Apply one payload with bounded retry + exponential backoff.
+        ``apply_maintenance`` is retry-safe (fields are consumed on
+        first touch), so a retry after a mid-sync failure re-converges
+        the store instead of double-admitting. A payload that exhausts
+        its retries is recorded (traceback + generation preserved) and
+        shed; ``disable_after`` consecutive shed payloads walk health
+        down to MEMO_DISABLED."""
+        self._maint_busy_since = time.monotonic()
+        gen = getattr(payload, "generation", -1)
+        delay = self.maint_backoff_s
+        for attempt in range(self.maint_retries + 1):
+            stall = fire(self.faults, "server.maint_stall")
+            if stall is not None:
+                time.sleep(float(stall.get("stall_s", 0.5)))
+            try:
+                if fire(self.faults, "server.maint_crash") is not None:
+                    raise RuntimeError(
+                        "injected maintenance-worker crash")
+                self.engine.apply_maintenance(payload, stats=self.stats)
+            except BaseException as e:  # noqa: BLE001 — supervised
+                if attempt < self.maint_retries:
+                    self.n_maint_retries += 1
+                    time.sleep(delay)
+                    delay *= 2
+                    continue
+                try:
+                    raise MemoMaintenanceError(
+                        f"maintenance failed after {attempt + 1} "
+                        f"attempt(s) applying the payload drained at "
+                        f"store generation {gen}: "
+                        f"{type(e).__name__}: {e}") from e
+                except MemoMaintenanceError as wrapped:
+                    self.maintenance_errors.append(wrapped)
+                self._note_failure()
+                return
+            self._note_success()
+            return
+
+    def _note_failure(self) -> None:
+        with self._health_lock:
+            self._consec_failures += 1
+            n = self._consec_failures
+        if n >= self.disable_after:
+            self._set_health(
+                Health.MEMO_DISABLED,
+                f"{n} consecutive maintenance failures; serving exact "
+                f"attention (recover() to re-arm the memo path)")
+            self._purge_queue()
+        else:
+            self._set_health(Health.DEGRADED,
+                             "maintenance payload shed after retries")
+
+    def _note_success(self) -> None:
+        with self._health_lock:
+            self._consec_failures = 0
+            back = self.health is Health.DEGRADED
+        if back:
+            # DEGRADED heals itself the moment maintenance flows again;
+            # MEMO_DISABLED stays down until an explicit recover()
+            self._set_health(Health.HEALTHY, "maintenance applied cleanly")
+
+    def _purge_queue(self) -> None:
+        """Drop every queued payload without applying it (entering
+        MEMO_DISABLED: nothing will read the store)."""
+        if self._maint_q is None:
+            return
+        while True:
+            try:
+                item = self._maint_q.get_nowait()
+            except queue.Empty:
+                return
+            if item is None:      # keep the shutdown sentinel's contract
+                self._maint_q.task_done()
+                self._maint_q.put(None)
+                return
+            self.n_maint_shed += 1
+            self._maint_q.task_done()
+
+    def drain_maintenance(self, timeout: Optional[float] = None,
+                          raise_errors: bool = True):
         """Block until every queued payload has been applied (and its
         snapshot published) — the quiesce point for tests/benchmarks.
-        Raises (and clears) the first worker error since the last
-        drain."""
-        if self._maint_q is not None:
-            self._maint_q.join()
+        Raises (and clears) the first worker error since the last drain
+        unless ``raise_errors=False`` (chaos harnesses inspect
+        ``maintenance_errors``/health instead).
+
+        ``timeout`` bounds the wait (``TimeoutError``); a worker that is
+        no longer alive with payloads still queued raises immediately
+        instead of blocking forever."""
+        q = self._maint_q
+        if q is not None:
+            deadline = (None if timeout is None
+                        else time.monotonic() + float(timeout))
+            with q.all_tasks_done:
+                while q.unfinished_tasks:
+                    w = self._worker
+                    if w is None or not w.is_alive():
+                        raise MemoMaintenanceError(
+                            f"maintenance worker is not alive with "
+                            f"{q.unfinished_tasks} payload(s) pending")
+                    if deadline is not None \
+                            and time.monotonic() >= deadline:
+                        raise TimeoutError(
+                            f"drain_maintenance timed out after "
+                            f"{timeout}s with {q.unfinished_tasks} "
+                            f"payload(s) pending")
+                    q.all_tasks_done.wait(0.05)
         if self.maintenance_errors:
             errs, self.maintenance_errors = self.maintenance_errors, []
-            raise errs[0]
+            if raise_errors:
+                raise errs[0]
+
+    # ----------------------------------------------------------- recover
+    def recover(self) -> Dict[str, object]:
+        """Re-arm the memo path after faults (DESIGN.md §2.9): verify
+        every live entry's checksums (quarantining and tombstoning the
+        corrupt ones), re-materialize the device tier from the host
+        mirrors with a forced full sync, restart the worker if it died,
+        and reset health to HEALTHY. The host tier survives worker
+        crashes and shed payloads untouched, so post-recovery hit rate
+        returns to the fault-free level (minus quarantined entries)."""
+        store = self.engine.store
+        quarantined = store.verify_integrity(quarantine=True)
+        store.sync(force_full=True)
+        if self.async_maintenance and self._maint_q is not None \
+                and (self._worker is None or not self._worker.is_alive()):
+            self._worker = self._start_worker()
+        with self._health_lock:
+            self._consec_failures = 0
+        # recovery acknowledges the fault window: the shed-payload
+        # errors are part of what was recovered from
+        self.maintenance_errors = []
+        self._set_health(Health.HEALTHY, "recovered: device tier "
+                         "re-materialized from host mirrors")
+        return {"quarantined": len(quarantined),
+                "live_entries": store.live_count,
+                "generation": store.generation}
 
     def close(self):
         if self._worker is not None:
-            self._maint_q.put(None)
-            self._worker.join(timeout=30)
+            w = self._worker
+            while w.is_alive():
+                try:
+                    self._maint_q.put(None, timeout=0.1)
+                    break
+                except queue.Full:    # stalled worker: wait for space
+                    continue
+            w.join(timeout=30)
             self._worker = None
 
     def __enter__(self):

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.database import AttentionDB, DeviceDB, pad_delta_pow2
+from repro.core.faults import FaultInjector, MemoStoreError, fire
 from repro.core.index import TOMBSTONE, ClusteredDeviceIndex, DeviceIndex
 from repro.core.registry import DEVICE_INDEXES, EVICTIONS, HOST_INDEXES
 
@@ -91,6 +92,8 @@ class StoreStats:
     n_full_syncs: int = 0
     bytes_delta: int = 0          # bytes moved by delta syncs
     bytes_full: int = 0           # bytes moved by full re-materializations
+    n_quarantined: int = 0        # entries tombstoned on checksum mismatch
+    n_evict_rejected: int = 0     # bogus policy slots the store refused
 
     @property
     def bytes_total(self) -> int:
@@ -108,7 +111,8 @@ class MemoStore:
                  device_index_kind: str = "auto",
                  cluster_crossover: int = 4096, nprobe: int = 16,
                  n_clusters: Optional[int] = None,
-                 eviction: str = "clock"):
+                 eviction: str = "clock",
+                 faults: Optional[FaultInjector] = None):
         self.apm_shape = tuple(apm_shape)
         self.embed_dim = embed_dim
         self.index_kind = index_kind
@@ -146,6 +150,9 @@ class MemoStore:
         # concurrently — the lock makes misuse safe, not fast)
         self._lock = threading.RLock()
         self._snapshot: Optional[StoreSnapshot] = None
+        # fault injection (DESIGN.md §2.9) — None in production, so every
+        # fault site is one ``is None`` check
+        self._faults = faults
         # lifecycle state
         self.generation = 0           # bumped on every host-tier mutation
         self.device_generation = -1   # generation the device tier reflects
@@ -279,6 +286,12 @@ class MemoStore:
         self._dirty.update(int(s) for s in slots)
         self.generation += 1
         self.stats.n_admitted += n_new
+        if fire(self._faults, "store.corrupt_row") is not None:
+            # bit-flip the newest row's primary arena part WITHOUT
+            # refreshing its checksum — the sync-boundary verification
+            # must catch and quarantine it before it ships to the device
+            row = self.db._arenas[0][int(slots[-1])]
+            row.view(np.uint8)[...] ^= 0xFF
         return slots
 
     # --------------------------------------------------------------- evict
@@ -295,17 +308,65 @@ class MemoStore:
         with self._lock:
             n = min(n, db.live_count)
             evicted = [int(s) for s in self._evict_policy(self, n)]
+            if fire(self._faults, "store.evict_bogus") is not None:
+                # bookkeeping fault: the policy hands back garbage —
+                # a duplicate, an out-of-range id and a dead slot; the
+                # validation below must refuse all three
+                dead = np.flatnonzero(~db.live_mask)
+                evicted += ([evicted[0]] if evicted else []) \
+                    + [db._n + 7] \
+                    + ([int(dead[0])] if dead.size else [])
+            # registered policies are user code: validate their output
+            # (live, in-range, unique) so a buggy policy costs entries
+            # it names, never store invariants
+            seen: set = set()
+            valid = []
+            for s in evicted:
+                if 0 <= s < db._n and db._live[s] and s not in seen:
+                    valid.append(s)
+                    seen.add(s)
+                else:
+                    self.stats.n_evict_rejected += 1
+            evicted = valid
             if not evicted:
                 return evicted
-            db.release(evicted)
-            self.index.remove(evicted)
-            self._ensure_emb_capacity(max(evicted) + 1)
-            self._embs_host[evicted] = TOMBSTONE
-            self._lens_host[evicted] = -1
-            self._dirty.update(evicted)
-            self.generation += 1
+            self._retire_slots_locked(evicted)
             self.stats.n_evicted += len(evicted)
         return evicted
+
+    def _retire_slots_locked(self, slots: List[int]) -> None:
+        """Shared eviction/quarantine bookkeeping: release the arena
+        slots and tombstone every index row, so a hit on them is
+        impossible (the PR 2 tombstone invariant)."""
+        db = self.db
+        db.release(slots)
+        self.index.remove(slots)
+        self._ensure_emb_capacity(max(slots) + 1)
+        self._embs_host[slots] = TOMBSTONE
+        self._lens_host[slots] = -1
+        self._dirty.update(slots)
+        self.generation += 1
+
+    # ------------------------------------------------------------ integrity
+    def _quarantine_locked(self, bad: np.ndarray) -> List[int]:
+        bad = [int(s) for s in np.asarray(bad).reshape(-1)]
+        if bad:
+            self._retire_slots_locked(bad)
+            self.stats.n_quarantined += len(bad)
+        return bad
+
+    def verify_integrity(self, quarantine: bool = True) -> List[int]:
+        """Recompute every live entry's per-codec-part checksums against
+        the arenas. Mismatched entries are quarantined (released +
+        tombstoned — they can never hit again) when ``quarantine`` is
+        set; returns the bad slot ids either way. The full-arena sweep
+        is the recovery path (``MemoServer.recover``); routine syncs
+        verify just the delta (see ``_sync_locked``)."""
+        with self._lock:
+            bad = self.db.verify()
+            if quarantine:
+                return self._quarantine_locked(bad)
+            return [int(s) for s in bad]
 
     # ---------------------------------------------------------------- sync
     def _device_index_kind(self, n: int) -> str:
@@ -360,6 +421,11 @@ class MemoStore:
             return self._sync_locked(force_full)
 
     def _sync_locked(self, force_full: bool) -> Dict[str, object]:
+        if fire(self._faults, "store.sync_fail") is not None:
+            # injected BEFORE any mutation: a retried sync starts clean
+            raise MemoStoreError(
+                f"injected delta-sync failure (store generation "
+                f"{self.generation})")
         self._absorb_external_growth()
         n = len(self.db)
         if (self.device_db is not None and not force_full
@@ -374,6 +440,15 @@ class MemoStore:
                      or n > self.device_index.capacity
                      or self._device_index_kind(n)
                      != self._device_index_kind_of(self.device_index))
+        # integrity gate on what is about to ship (DESIGN.md §2.9): a
+        # full sync re-verifies every live entry, a delta verifies the
+        # dirty rows in flight; mismatches are quarantined (tombstoned)
+        # BEFORE publication, so a corrupt entry can never hit
+        check = (None if need_full
+                 else np.asarray(sorted(self._dirty), np.int64))
+        bad = self.db.verify(check)
+        if bad.size:
+            self._quarantine_locked(bad)
         if need_full:
             cap = n + max(8, int(n * self.device_slack))
             self.device_db = DeviceDB.from_host(self.db, capacity=cap)
@@ -493,8 +568,10 @@ class MemoStore:
                 "clock_hand": np.asarray(self._clock_hand, np.int64),
                 "sim_cal": np.asarray(self.sim_cal, np.float64),
             }
-            for spec, arena in zip(self.codec.parts, self.db._arenas):
+            for spec, arena, csum in zip(self.codec.parts, self.db._arenas,
+                                         self.db.checksums):
                 out[f"part_{spec.name}"] = arena[:n].copy()
+                out[f"csum_{spec.name}"] = csum[:n].copy()
             # the host index's staging array, at its FULL grown shape:
             # approximate indexes (ivf) k-means over the whole array
             # including TOMBSTONE slack rows, so reproducing searches
@@ -516,8 +593,14 @@ class MemoStore:
             n = int(state["n"])
             db = self.db
             db._grow_to(n)
-            for spec, arena in zip(self.codec.parts, db._arenas):
+            for spec, arena, csum in zip(self.codec.parts, db._arenas,
+                                         db.checksums):
                 arena[:n] = state[f"part_{spec.name}"]
+                saved = state.get(f"csum_{spec.name}")
+                if saved is not None:
+                    csum[:n] = saved
+                else:                       # pre-integrity save: rebaseline
+                    csum[:n] = db._crc_rows(arena[:n])
             db._n = n
             db._live[:n] = state["live"]
             db.reuse_counts[:n] = state["reuse"]

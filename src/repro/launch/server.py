@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.data import TemplateCorpus
-from repro.memo import LEVELS, MemoSession, MemoSpec
+from repro.memo import CHAOS_PRESETS, LEVELS, MemoSession, MemoSpec
 from repro.models import build_model
 
 
@@ -62,7 +62,8 @@ def build_session(args, seed: int = 0):
         threshold=thr, mode="bucket", apm_codec=args.codec,
         admit=True, budget_mb=args.budget_mb,
         admit_every=args.admit_every, recal_every=2,
-        device_slack=8.0, embed_steps=args.embed_steps)
+        device_slack=8.0, embed_steps=args.embed_steps,
+        faults=({} if getattr(args, "fault", None) else None))
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     sess = MemoSession.build(model, params, spec, batches=calib,
@@ -135,6 +136,65 @@ def serve_trace(sess: MemoSession, workload, *, buckets, max_batch: int,
     }
 
 
+def run_fault_demo(args):
+    """``--fault <class>``: one warm → fault → recover trace through the
+    supervised runtime, narrating the health ladder (DESIGN.md §2.9)."""
+    sess, corpus = build_session(args)
+    rate = args.rate
+    if rate is None:
+        rate = probe_rate(sess, buckets=args.bucket_list,
+                          max_batch=args.batch, seq=args.seq)
+        sess, corpus = build_session(args)   # the probe mutated the store
+    inj = sess.engine.faults
+    preset = CHAOS_PRESETS[args.fault]
+    n = max(3, args.requests // 3)
+    server = sess.serve(buckets=args.bucket_list, max_batch=args.batch,
+                        max_delay=args.max_delay_ms * 1e-3,
+                        async_maintenance=True)
+    server.warmup()
+    print(f"[server] chaos class {args.fault!r}: arming {preset} "
+          f"for the middle third of {3 * n} requests "
+          f"(Poisson {rate:.1f} req/s)")
+    logged = 0
+
+    def flush_health():
+        nonlocal logged
+        for t, health, why in server.health_log[logged:]:
+            print(f"[health] t={t:7.3f}s  -> {health}: {why}")
+        logged = len(server.health_log)
+
+    completed = 0
+    with server:
+        for phase, armed in (("warm", False), ("fault", True),
+                             ("recovered", False)):
+            if armed:
+                for point, kw in preset.items():
+                    inj.arm(point, **kw)
+            elif phase == "recovered":
+                inj.disarm()
+                try:
+                    server.drain_maintenance(timeout=10,
+                                             raise_errors=False)
+                except Exception:  # noqa: BLE001 — timeout/dead worker
+                    pass
+                info = server.recover()
+                print(f"[server] recover(): {info}")
+            comps = server.run(make_workload([corpus], n, rate,
+                                             args.bucket_list, seed=7))
+            completed += len(comps)
+            flush_health()
+            print(f"[server] {phase:9s}: {len(comps)}/{n} completed, "
+                  f"health {server.health.value}, "
+                  f"hit {server.stats.memo_rate * 100:.1f}% (cumulative)")
+        server.drain_maintenance(timeout=30, raise_errors=False)
+        flush_health()
+    print(f"[server] chaos done: {completed}/{3 * n} requests served, "
+          f"shed {server.n_maint_shed}, retries {server.n_maint_retries}, "
+          f"exact batches {server.n_exact_batches}, "
+          f"quarantined {sess.store.stats.n_quarantined}, "
+          f"final health {server.health.value}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="bert_base")
@@ -165,9 +225,17 @@ def main():
                     help="corpus drift phases across the trace")
     ap.add_argument("--maintenance", default="both",
                     choices=["both", "sync", "async"])
+    ap.add_argument("--fault", default=None,
+                    choices=sorted(CHAOS_PRESETS),
+                    help="chaos demo: serve warm, arm this fault class "
+                         "mid-trace, recover(), printing every health "
+                         "transition (DESIGN.md §2.9)")
     args = ap.parse_args()
     args.bucket_list = (tuple(int(b) for b in args.buckets.split(","))
                         if args.buckets else (args.seq // 2, args.seq))
+    if args.fault:
+        run_fault_demo(args)
+        return
 
     results = {}
     modes = (["sync", "async"] if args.maintenance == "both"

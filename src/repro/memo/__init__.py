@@ -52,6 +52,13 @@ _EXPORTS = {
     "MemoServer": ("repro.core.runtime", "MemoServer"),
     "MemoStats": ("repro.core.engine", "MemoStats"),
     "LEVELS": ("repro.core.engine", "LEVELS"),
+    # failure model (DESIGN.md §2.9)
+    "MemoStoreError": ("repro.core.faults", "MemoStoreError"),
+    "FaultInjector": ("repro.core.faults", "FaultInjector"),
+    "FAULT_POINTS": ("repro.core.faults", "FAULT_POINTS"),
+    "CHAOS_PRESETS": ("repro.core.faults", "CHAOS_PRESETS"),
+    "Health": ("repro.core.runtime", "Health"),
+    "MemoMaintenanceError": ("repro.core.runtime", "MemoMaintenanceError"),
 }
 
 __all__ = sorted(_EXPORTS)

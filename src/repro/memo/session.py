@@ -25,6 +25,8 @@ once, ship the file, serve anywhere.
 from __future__ import annotations
 
 import json
+import os
+import zlib
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -32,10 +34,16 @@ import numpy as np
 
 from repro.core.embedding import Embedder
 from repro.core.engine import LEVELS, MemoEngine, MemoStats
+from repro.core.faults import MemoStoreError, fire
 from repro.core.runtime import MemoServer
 from repro.memo.specs import MemoSpec
 
-SAVE_FORMAT = 1
+# format 2 adds per-array CRC32 checksums in the meta header (and the
+# store's per-codec-part arena checksums ride along in state_dict), so
+# ``load`` verifies every byte before deserializing — a truncated,
+# bit-flipped or spec-mismatched file fails with an actionable
+# ``MemoStoreError`` instead of a numpy internal error (DESIGN.md §2.9)
+SAVE_FORMAT = 2
 
 
 class MemoSession:
@@ -154,6 +162,10 @@ class MemoSession:
         lookups; the device tier is derived and re-materialized on the
         first post-load sync."""
         eng = self.engine
+        arrays = {f"emb_param_{k}": np.asarray(v)
+                  for k, v in eng.embedder.params.items()}
+        for k, v in self.store.state_dict().items():
+            arrays[f"store_{k}"] = v
         meta = {
             "format": SAVE_FORMAT,
             "spec": self.spec.to_dict(),
@@ -164,28 +176,70 @@ class MemoSession:
             # size (an ivf store that admitted entries no longer knows
             # it) — persisted so load reconstructs the identical index
             "n_lists": getattr(self.store.index, "n_lists", None),
+            # per-array CRC32 of the exact bytes being written — load's
+            # integrity gate (dtype/shape checked separately by numpy)
+            "checksums": {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+                          for k, v in arrays.items()},
         }
-        arrays = {f"emb_param_{k}": np.asarray(v)
-                  for k, v in eng.embedder.params.items()}
-        for k, v in self.store.state_dict().items():
-            arrays[f"store_{k}"] = v
         with open(str(path), "wb") as f:
             np.savez_compressed(f, meta=json.dumps(meta), **arrays)
+        if fire(eng.faults, "session.save_truncate") is not None:
+            # torn write: chop the tail so load must fail CLEANLY
+            size = os.path.getsize(str(path))
+            with open(str(path), "rb+") as f:
+                f.truncate(max(1, int(size * 0.6)))
 
     @classmethod
-    def load(cls, path: str, model, params) -> "MemoSession":
+    def load(cls, path: str, model, params, *,
+             faults=None) -> "MemoSession":
         """Warm-start a session from ``save`` output. ``model``/``params``
         must be the network the store was built against (the file holds
-        the memo state, not the transformer weights)."""
-        with np.load(str(path), allow_pickle=False) as data:
-            meta = json.loads(str(data["meta"]))
-            if meta.get("format") != SAVE_FORMAT:
-                raise ValueError(
-                    f"unsupported memo save format {meta.get('format')!r} "
-                    f"(this build reads format {SAVE_FORMAT})")
-            arrays = {k: data[k] for k in data.files if k != "meta"}
-        spec = MemoSpec.from_dict(meta["spec"])
+        the memo state, not the transformer weights).
+
+        Every failure mode — unreadable/truncated file, bad format
+        number, per-array checksum mismatch (bit flips), a spec that
+        does not describe the persisted arrays — raises a
+        ``MemoStoreError`` naming the problem; numpy/zipfile internals
+        never escape.
+
+        ``faults`` (a ``FaultInjector``) overrides the injector the
+        file's spec would construct — chaos harnesses arm
+        ``session.load_bitflip`` on it; production leaves it None."""
+        try:
+            with np.load(str(path), allow_pickle=False) as data:
+                meta = json.loads(str(data["meta"]))
+                arrays = {k: data[k] for k in data.files if k != "meta"}
+        except MemoStoreError:
+            raise
+        except Exception as e:          # zipfile/zlib/json/KeyError...
+            raise MemoStoreError(
+                f"unreadable memo store file {path!r} (truncated or "
+                f"corrupt): {type(e).__name__}: {e}") from e
+        if meta.get("format") != SAVE_FORMAT:
+            raise MemoStoreError(
+                f"unsupported memo save format {meta.get('format')!r} "
+                f"(this build reads format {SAVE_FORMAT})")
+        try:
+            spec = MemoSpec.from_dict(meta["spec"])
+        except MemoStoreError:
+            raise
+        except Exception as e:
+            raise MemoStoreError(
+                f"invalid memo spec in {path!r}: "
+                f"{type(e).__name__}: {e}") from e
         eng = MemoEngine(model, params, spec)
+        if faults is not None:
+            eng.faults = faults      # threads into the store via _make_store
+        if fire(eng.faults, "session.load_bitflip") is not None:
+            # flip one byte of the first store array IN MEMORY — the
+            # checksum gate below must refuse it
+            for k in sorted(arrays):
+                if k.startswith("store_part_"):
+                    arr = arrays[k].copy()
+                    arr.view(np.uint8).reshape(-1)[0] ^= 0xFF
+                    arrays[k] = arr
+                    break
+        cls._verify_arrays(path, meta, arrays)
         emb_meta = meta["embedder"]
         eng.embedder = Embedder(
             {k[len("emb_param_"):]: jax.numpy.asarray(v)
@@ -197,10 +251,72 @@ class MemoSession:
         eng.store = eng._make_store(meta["apm_shape"],
                                     capacity=max(1, n),
                                     n_lists=meta.get("n_lists"))
-        eng.store.load_state_dict(state)
+        try:
+            eng.store.load_state_dict(state)
+        except MemoStoreError:
+            raise
+        except Exception as e:
+            raise MemoStoreError(
+                f"memo store state in {path!r} does not fit the spec it "
+                f"declares: {type(e).__name__}: {e}") from e
         # mirror build(): materialize the serving tier only when the fast
         # path can reach it (mode switches re-sync lazily)
         if spec.runtime.store == "device" and spec.runtime.mode in (
                 "bucket", "kernel"):
             eng.store.sync()
         return cls(eng)
+
+    @staticmethod
+    def _verify_arrays(path: str, meta: dict, arrays: Dict[str, np.ndarray]
+                       ) -> None:
+        """The load-time integrity + spec-compatibility gate: every
+        array's CRC32 must match the checksummed header, the required
+        store arrays must exist, and the arrays must actually have the
+        shapes the spec/meta describe. All failures are
+        ``MemoStoreError`` with the offending keys named."""
+        csums = meta.get("checksums")
+        if not isinstance(csums, dict):
+            raise MemoStoreError(
+                f"memo store file {path!r} has no checksummed header "
+                f"(format {SAVE_FORMAT} requires one)")
+        missing = sorted(set(csums) - set(arrays))
+        if missing:
+            raise MemoStoreError(
+                f"memo store file {path!r} is missing arrays the header "
+                f"promises: {missing}")
+        bad = [k for k in sorted(arrays)
+               if zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
+               != csums.get(k)]
+        if bad:
+            raise MemoStoreError(
+                f"checksum mismatch in memo store file {path!r} for "
+                f"{bad} — the file is corrupt (bit flips or a partial "
+                f"write); rebuild or restore from a good copy")
+        for req in ("store_n", "store_embs", "store_lens", "store_live"):
+            if req not in arrays:
+                raise MemoStoreError(
+                    f"memo store file {path!r} is missing required "
+                    f"array {req!r}")
+        # spec compatibility: the embedding mirror must be as wide as
+        # the spec's embed dim, and every persisted arena row count must
+        # agree with the entry count — failing here is an actionable
+        # "file does not match spec", not a shape error deep in numpy
+        spec_d = meta.get("spec") or {}
+        embed_dim = int((spec_d.get("embed") or {}).get("dim", -1))
+        embs = arrays["store_embs"]
+        if embs.ndim != 2 or (embed_dim > 0
+                              and embs.shape[1] != embed_dim):
+            raise MemoStoreError(
+                f"memo store file {path!r} embedding mirror has shape "
+                f"{embs.shape} but the spec declares embed dim "
+                f"{embed_dim} — the file was saved under a different "
+                f"spec")
+        n = int(arrays["store_n"])
+        rows = {k: arrays[k].shape[0] for k in arrays
+                if k.startswith("store_part_")}
+        wrong = sorted(k for k, r in rows.items() if r != n)
+        if wrong or embs.shape[0] != n:
+            raise MemoStoreError(
+                f"memo store file {path!r} declares {n} entries but "
+                f"arrays {wrong or ['store_embs']} disagree — the file "
+                f"is inconsistent")

@@ -159,6 +159,10 @@ class RuntimeSpec:
     max_layers: Optional[int] = None
     interpret: Optional[bool] = None    # None → auto-detect backend
     device_slack: float = 1.0       # device-arena slack for delta sync
+    # fault injection (DESIGN.md §2.9): None = production (no injector is
+    # ever constructed — zero cost); {} = injector enabled for post-build
+    # arm(); {"store.sync_fail": {"p": 0.5}, ...} arms points up front
+    faults: Optional[Dict[str, Dict]] = None
 
     def __post_init__(self):
         _require(math.isfinite(float(self.threshold)),
@@ -175,6 +179,14 @@ class RuntimeSpec:
                  f"max_layers must be None or >= 1: {self.max_layers}")
         _require(float(self.device_slack) >= 0,
                  f"device_slack must be >= 0: {self.device_slack}")
+        if self.faults is not None:
+            from repro.core.faults import FAULT_POINTS
+            _require(isinstance(self.faults, dict),
+                     f"faults must be None or a dict: {self.faults!r}")
+            for point in self.faults:
+                _require(point in FAULT_POINTS,
+                         f"unknown fault point {point!r}; registered: "
+                         f"{sorted(FAULT_POINTS)}")
 
 
 # old flat MemoConfig field → (component, field) — the single source of
@@ -207,6 +219,8 @@ FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
     # new in v1 (no legacy MemoConfig field); named *_kind so the flat
     # property cannot shadow the ``eviction`` component attribute
     "eviction_kind": ("eviction", "kind"),
+    # new in the fault-tolerance layer (DESIGN.md §2.9)
+    "faults": ("runtime", "faults"),
 }
 
 

@@ -1,0 +1,433 @@
+"""Failure model: fault injection, supervised maintenance, degradation
+(ISSUE 6 / DESIGN.md §2.9).
+
+Covers: FaultInjector trigger semantics and RuntimeSpec arming, arena
+checksum quarantine (corrupt rows tombstoned before publication, no
+hits on quarantined entries), eviction-policy output validation,
+delta-sync failure atomicity, the supervised maintenance worker
+(bounded retries with backoff, HEALTHY → DEGRADED → MEMO_DISABLED,
+exact-attention logits parity in MEMO_DISABLED, ``recover()``),
+maintenance-queue shedding under overflow, ``drain_maintenance``
+timeout + worker liveness, and ``MemoSession.load`` failing with an
+actionable ``MemoStoreError`` on truncated / bit-flipped /
+spec-mismatched files (satellite).
+"""
+import json
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import MemoEngine, MemoStats
+from repro.core.faults import (CHAOS_PRESETS, FAULT_POINTS, FaultInjector,
+                               MemoStoreError, fire)
+from repro.core.index import TOMBSTONE
+from repro.core.runtime import Health, MemoMaintenanceError, MemoServer
+from repro.core.store import MemoStore
+from repro.memo import MemoSession, MemoSpec
+
+SEQ = 32
+APM_SHAPE = (2, 4, 4)
+EMB_DIM = 8
+
+
+# ------------------------------------------------------ injector semantics
+
+def test_injector_every_and_count():
+    inj = FaultInjector()
+    inj.arm("store.sync_fail", every=2, count=2)
+    hits = [inj.fire("store.sync_fail") is not None for _ in range(8)]
+    # fires on probes 2 and 4, then the count cap holds
+    assert hits == [False, True, False, True, False, False, False, False]
+    assert inj.fired["store.sync_fail"] == 2
+    assert inj.activations["store.sync_fail"] == 8
+
+
+def test_injector_at_default_and_disarm():
+    inj = FaultInjector()
+    inj.arm("server.maint_crash")          # no trigger kwargs -> at=1
+    assert inj.fire("server.maint_crash") is not None
+    inj.disarm("server.maint_crash")
+    assert inj.fire("server.maint_crash") is None
+    # un-armed points never fire but still count activations
+    assert inj.fire("store.corrupt_row") is None
+    assert inj.activations["store.corrupt_row"] == 1
+
+
+def test_injector_args_ride_along():
+    inj = FaultInjector()
+    inj.arm("server.maint_stall", at=1, stall_s=0.25)
+    assert inj.fire("server.maint_stall") == {"stall_s": 0.25}
+
+
+def test_injector_rejects_unknown_point():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultInjector().arm("bogus.point")
+
+
+def test_from_spec_production_path_is_none():
+    assert FaultInjector.from_spec(None) is None
+    # and the site helper short-circuits without an injector
+    assert fire(None, "store.sync_fail") is None
+    inj = FaultInjector.from_spec({})
+    assert inj is not None and not inj.armed("store.sync_fail")
+    inj2 = FaultInjector.from_spec(CHAOS_PRESETS["corrupt_row"])
+    assert inj2.armed("store.corrupt_row")
+
+
+def test_runtime_spec_validates_fault_points():
+    with pytest.raises(ValueError, match="fault point"):
+        MemoSpec.flat(faults={"bogus.point": {}})
+    spec = MemoSpec.flat(faults={"store.sync_fail": {"p": 0.5}})
+    assert spec.runtime.faults == {"store.sync_fail": {"p": 0.5}}
+
+
+# --------------------------------------------------------- store integrity
+
+def _entries(rng, n):
+    apms = rng.random((n, *APM_SHAPE)).astype(np.float16)
+    embs = rng.normal(0, 0.01, (n, EMB_DIM)).astype(np.float32)
+    embs[:, 0] += 10.0 * np.arange(1, n + 1)
+    return apms, embs
+
+
+def _mk_store(faults=None):
+    return MemoStore(APM_SHAPE, EMB_DIM, capacity=4, faults=faults)
+
+
+def test_corrupt_row_quarantined_before_publication():
+    inj = FaultInjector()
+    s = _mk_store(faults=inj)
+    rng = np.random.default_rng(0)
+    apms, embs = _entries(rng, 6)
+    s.admit(apms[:4], embs[:4])
+    inj.arm("store.corrupt_row", at=1, count=1)
+    bad_slot = int(s.admit(apms[4:5], embs[4:5])[0])
+    s.admit(apms[5:], embs[5:])
+    # the sync integrity gate must catch the corrupt row and tombstone it
+    s.sync()
+    assert s.stats.n_quarantined == 1
+    assert not s.db._live[bad_slot]
+    assert np.all(s._embs_host[bad_slot] == TOMBSTONE)
+    # lookups can never return the quarantined slot
+    _, idx = s.lookup(embs, 1)
+    assert bad_slot not in set(int(i) for i in idx[:, 0])
+    # the survivors are intact and found
+    _, idx5 = s.lookup(embs[5:], 1)
+    assert s.db._live[int(idx5[0, 0])]
+
+
+def test_verify_integrity_finds_manual_corruption():
+    s = _mk_store()
+    rng = np.random.default_rng(1)
+    apms, embs = _entries(rng, 3)
+    slots = s.admit(apms, embs)
+    victim = int(slots[1])
+    row = s.db._arenas[0][victim]
+    row.view(np.uint8).reshape(-1)[0] ^= 0xFF
+    quarantined = s.verify_integrity(quarantine=True)
+    assert quarantined == [victim]
+    assert s.stats.n_quarantined == 1
+    assert s.verify_integrity() == []      # second sweep: clean
+
+
+def test_evict_bogus_policy_output_is_rejected():
+    inj = FaultInjector()
+    s = _mk_store(faults=inj)
+    rng = np.random.default_rng(2)
+    apms, embs = _entries(rng, 5)
+    s.admit(apms, embs)
+    live_before = s.live_count
+    inj.arm("store.evict_bogus", at=1, count=1)
+    evicted = s.evict(2)
+    # duplicate + out-of-range + dead slots were all refused; the store
+    # still evicted valid entries and its invariants held
+    assert s.stats.n_evict_rejected >= 1
+    assert len(evicted) == len(set(evicted))
+    assert all(0 <= sl < s.db._n for sl in evicted)
+    assert s.live_count == live_before - len(evicted)
+
+
+def test_sync_fail_raises_before_any_mutation_then_recovers():
+    inj = FaultInjector()
+    s = _mk_store(faults=inj)
+    rng = np.random.default_rng(3)
+    apms, embs = _entries(rng, 4)
+    s.admit(apms, embs)
+    gen = s.generation
+    inj.arm("store.sync_fail", at=1, count=1)
+    with pytest.raises(MemoStoreError, match="delta-sync"):
+        s.sync()
+    # nothing moved: the host tier is untouched and still dirty
+    assert s.generation == gen
+    assert s.device_stale
+    s.sync()                                # injector spent -> clean
+    assert not s.device_stale
+    assert s.live_count == 4
+
+
+# ----------------------------------------------------- supervised serving
+
+@pytest.fixture(scope="module")
+def fault_engine():
+    from repro.configs import get_reduced
+    from repro.data import TemplateCorpus
+    from repro.models import build_model
+
+    cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=2,
+                                           d_model=128, d_ff=256, n_heads=4)
+    m = build_model(cfg, layer_loop="unroll")
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, n_templates=6,
+                            slot_fraction=0.2)
+    spec = MemoSpec.flat(threshold=0.6, embed_steps=40, mode="bucket",
+                         device_slack=8.0, admit=True, budget_mb=64.0,
+                         faults={})
+    eng = MemoEngine(m, params, spec)
+    eng.build(jax.random.PRNGKey(1),
+              [{"tokens": jnp.asarray(corpus.sample(16)[0])}
+               for _ in range(3)])
+    assert eng.faults is not None           # faults={} arms nothing but
+    assert eng.store._faults is eng.faults  # builds the shared injector
+    return eng, corpus, m, params
+
+
+@pytest.fixture()
+def clean_faults(fault_engine):
+    eng = fault_engine[0]
+    eng.faults.disarm()
+    eng.faults.reset()
+    yield eng.faults
+    eng.faults.disarm()
+    eng.faults.reset()
+
+
+def _make_server(eng, **kw):
+    return MemoServer(eng, buckets=(SEQ,), max_batch=8, max_delay=1e-4,
+                      **kw)
+
+
+def _serve_some(srv, corpus, n=4):
+    comps = []
+    for _ in range(n):
+        toks = corpus.sample(8)[0]
+        for r in range(8):
+            srv.submit(np.asarray(toks[r], np.int32))
+        comps.extend(srv.step(flush=True))
+    return comps
+
+
+def test_healthy_serving_stays_healthy(fault_engine, clean_faults):
+    eng, corpus, _, _ = fault_engine
+    srv = _make_server(eng)
+    try:
+        comps = _serve_some(srv, corpus)
+        srv.drain_maintenance(timeout=30)
+        assert len(comps) == 32
+        assert srv.health is Health.HEALTHY
+        assert srv.health_log == []         # no transitions at all
+    finally:
+        srv.close()
+
+
+def test_maint_crash_disables_memo_and_serves_exact(fault_engine,
+                                                    clean_faults):
+    """Worker crashes exhaust retries -> DEGRADED -> MEMO_DISABLED; every
+    request still completes, and MEMO_DISABLED logits bit-match the
+    engine's no-memo path (acceptance: graceful degradation)."""
+    eng, corpus, _, _ = fault_engine
+    clean_faults.arm("server.maint_crash", p=1.0)
+    srv = _make_server(eng, maint_retries=1, maint_backoff_s=0.005,
+                       disable_after=2)
+    try:
+        comps = _serve_some(srv, corpus, n=6)
+        assert len(comps) == 48             # zero dropped requests
+        deadline = time.monotonic() + 10
+        while (srv.health is not Health.MEMO_DISABLED
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        assert srv.health is Health.MEMO_DISABLED, srv.health_log
+        # satellite: the maintenance error keeps its traceback and names
+        # the payload generation it was applying
+        e0 = srv.maintenance_errors[0]
+        assert isinstance(e0, MemoMaintenanceError)
+        assert e0.__cause__ is not None
+        assert "generation" in str(e0) and "attempt" in str(e0)
+        # exact-attention parity while disabled
+        toks = corpus.sample(8)[0]
+        for r in range(8):
+            srv.submit(np.asarray(toks[r], np.int32))
+        got = srv.step(flush=True)
+        assert srv.n_exact_batches >= 1
+        batch = {"tokens": jnp.asarray(np.asarray(toks, np.int32)),
+                 "lengths": np.full(8, SEQ, np.int32), "n_valid": 8}
+        ref = np.asarray(eng.infer(batch, stats=MemoStats(),
+                                   use_memo=False)[0])
+        for i, c in enumerate(got):
+            assert np.array_equal(c.logits, ref[i]), f"row {i} differs"
+        # recover(): back to HEALTHY, memo path serves hits again
+        clean_faults.disarm()
+        info = srv.recover()
+        assert srv.health is Health.HEALTHY
+        assert info["live_entries"] > 0
+        hits_before = srv.stats.n_hits
+        _serve_some(srv, corpus, n=2)
+        srv.drain_maintenance(timeout=30)
+        assert srv.health is Health.HEALTHY
+        assert srv.stats.n_hits > hits_before
+    finally:
+        srv.close()
+
+
+def test_transient_failure_is_retried_to_success(fault_engine,
+                                                 clean_faults):
+    eng, corpus, _, _ = fault_engine
+    clean_faults.arm("store.sync_fail", p=1.0, count=1)
+    srv = _make_server(eng, maint_retries=2, maint_backoff_s=0.005)
+    try:
+        _serve_some(srv, corpus, n=2)
+        srv.drain_maintenance(timeout=30)
+        assert srv.health is Health.HEALTHY, srv.health_log
+        assert srv.n_maint_retries >= 1
+        assert srv.maintenance_errors == []
+    finally:
+        srv.close()
+
+
+def test_queue_overflow_sheds_payload_not_requests(fault_engine,
+                                                   clean_faults):
+    eng, corpus, _, _ = fault_engine
+    clean_faults.arm("server.queue_overflow", p=1.0)
+    srv = _make_server(eng, maint_put_timeout=0.01)
+    try:
+        comps = _serve_some(srv, corpus, n=3)
+        assert len(comps) == 24             # every request answered
+        assert srv.n_maint_shed >= 1
+        assert srv.health is Health.DEGRADED
+        clean_faults.disarm()
+        srv.recover()
+        assert srv.health is Health.HEALTHY
+    finally:
+        srv.close()
+
+
+def test_drain_timeout_and_stall_watchdog(fault_engine, clean_faults):
+    eng, corpus, _, _ = fault_engine
+    clean_faults.arm("server.maint_stall", p=1.0, stall_s=0.3)
+    srv = _make_server(eng, watchdog_s=0.05, maint_retries=0)
+    try:
+        _serve_some(srv, corpus, n=2)
+        with pytest.raises(TimeoutError, match="timed out"):
+            srv.drain_maintenance(timeout=0.01)
+        clean_faults.disarm()
+        srv.drain_maintenance(timeout=30)   # stall passes, then drains
+    finally:
+        srv.close()
+
+
+def test_drain_raises_on_dead_worker_with_pending_payloads(fault_engine,
+                                                           clean_faults):
+    eng, corpus, _, _ = fault_engine
+    srv = _make_server(eng)
+    try:
+        _serve_some(srv, corpus, n=1)
+        srv.drain_maintenance(timeout=30)
+        # simulate a hard worker death with work still queued
+        srv._maint_q.put(object())
+        w = srv._worker
+        srv._worker = None
+        with pytest.raises(MemoMaintenanceError, match="not alive"):
+            srv.drain_maintenance(timeout=5)
+        srv._worker = w
+        srv._maint_q.get()
+        srv._maint_q.task_done()
+    finally:
+        srv.close()
+
+
+# --------------------------------------------- session persistence faults
+
+@pytest.fixture(scope="module")
+def saved_store(fault_engine, tmp_path_factory):
+    eng, _, m, params = fault_engine
+    eng.faults.disarm()
+    path = str(tmp_path_factory.mktemp("faults") / "store.npz")
+    MemoSession(eng).save(path)
+    return path, m, params
+
+
+def test_load_roundtrip(saved_store):
+    path, m, params = saved_store
+    sess = MemoSession.load(path, m, params)
+    assert sess.store.live_count > 0
+
+
+def test_load_rejects_truncated_file(saved_store, tmp_path):
+    path, m, params = saved_store
+    torn = str(tmp_path / "torn.npz")
+    shutil.copy(path, torn)
+    with open(torn, "rb+") as f:
+        f.truncate(os.path.getsize(torn) // 2)
+    with pytest.raises(MemoStoreError, match="truncated or corrupt"):
+        MemoSession.load(torn, m, params)
+
+
+def test_load_rejects_bitflip_on_disk(saved_store, tmp_path):
+    path, m, params = saved_store
+    flipped = str(tmp_path / "flip.npz")
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(flipped, "wb").write(bytes(data))
+    with pytest.raises(MemoStoreError):
+        MemoSession.load(flipped, m, params)
+
+
+def test_load_bitflip_fault_point_hits_checksum_gate(saved_store):
+    path, m, params = saved_store
+    inj = FaultInjector()
+    inj.arm("session.load_bitflip", at=1, count=1)
+    with pytest.raises(MemoStoreError, match="checksum mismatch"):
+        MemoSession.load(path, m, params, faults=inj)
+    # the injector is spent: the same file loads cleanly afterwards
+    sess = MemoSession.load(path, m, params, faults=inj)
+    assert sess.store.live_count > 0
+
+
+def test_save_truncate_fault_produces_torn_write(fault_engine,
+                                                 clean_faults, tmp_path):
+    eng, _, m, params = fault_engine
+    clean_faults.arm("session.save_truncate", at=1, count=1)
+    torn = str(tmp_path / "torn.npz")
+    MemoSession(eng).save(torn)
+    with pytest.raises(MemoStoreError, match="truncated or corrupt"):
+        MemoSession.load(torn, m, params)
+
+
+def _rewrite_meta(path, out, mutate):
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["meta"]))
+        arrays = {k: data[k] for k in data.files if k != "meta"}
+    mutate(meta)
+    with open(out, "wb") as f:
+        np.savez_compressed(f, meta=json.dumps(meta), **arrays)
+
+
+def test_load_rejects_spec_mismatch(saved_store, tmp_path):
+    path, m, params = saved_store
+    bad = str(tmp_path / "mismatch.npz")
+    _rewrite_meta(path, bad,
+                  lambda meta: meta["spec"]["embed"].update(dim=999))
+    with pytest.raises(MemoStoreError, match="saved under a different"):
+        MemoSession.load(bad, m, params)
+
+
+def test_load_rejects_unknown_format(saved_store, tmp_path):
+    path, m, params = saved_store
+    bad = str(tmp_path / "fmt.npz")
+    _rewrite_meta(path, bad, lambda meta: meta.update(format=999))
+    with pytest.raises(MemoStoreError, match="format"):
+        MemoSession.load(bad, m, params)
