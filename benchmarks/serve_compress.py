@@ -67,7 +67,8 @@ def _search_micro():
         cl_ms = timeit_ms(lambda: f_cl(qd, cargs), reps=10)
         exact = ExactIndex(SEARCH_DIM)
         exact.add(db)
-        flat_bytes = int(np.prod(fargs.shape)) * 4
+        flat_bytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                         for a in fargs)
         cl_bytes = sum(int(np.prod(a.shape)) * a.dtype.itemsize
                        for a in cargs)
         out[f"N{n}"] = {

@@ -9,7 +9,13 @@ per-layer timers by design (that is the point), so its phases are
 microbenchmarked on the same tensors.
 
 Emitted as machine-readable JSON by ``python -m benchmarks.run
---json BENCH_serve.json`` for the perf trajectory.
+--json BENCH_serve.json`` for the perf trajectory. ``collect_kernel``
+adds the ``serve_kernel`` family (ISSUE 7): kernel-mode latency ratios
+vs bucket and select plus a modeled HBM-bytes-moved account of the
+fused dispatch. Standalone:
+
+    python -m benchmarks.serve_fastpath --quick   # interpret-Pallas smoke
+    python -m benchmarks.serve_fastpath --hw      # compiled TPU/GPU leg
 """
 from __future__ import annotations
 
@@ -24,7 +30,9 @@ from benchmarks.common import built_engine, timeit_ms
 from repro.core.engine import MemoStats
 
 BATCH = 32
-REPS = {"select": 8, "bucket": 8, "kernel": 2}   # kernel = interpret-slow
+# kernel mode now serves through the one-matmul XLA form on CPU
+# (engine._kernel_impl), so its timings are as stable as bucket's
+REPS = {"select": 8, "bucket": 8, "kernel": 8}
 
 
 def _median_ms(eng, toks, thr, reps):
@@ -129,6 +137,114 @@ def collect():
     }
 
 
+def _hbm_bytes_model(cfg, codec_name, B, S, n_hit):
+    """Modeled HBM→VMEM bytes per memoized layer for one batch, from
+    tile counts × codec bytes (what the fused dispatch's index maps
+    admit — boundary refetches, ≤1 per operand per hit↔miss boundary,
+    are ignored):
+
+    * ``kernel_fused`` — the hit flag drives the index maps: a miss
+      program streams Q (once per q-row) + K/V; a hit program streams
+      V + its APM tiles + (int8) the per-row scale slivers, and zero
+      Q/K bytes. Misses move zero DB bytes.
+    * ``kernel_unfused`` — the pre-aliasing design: every program
+      fetched every operand (misses speculatively streamed entry 0's
+      APM row; hits still paid the full K stream).
+    * ``gather_path`` — the select/bucket shape: gather + dequantize
+      all B full APMs out of the DB, then stream Q/K/V for attention.
+    """
+    H = cfg.n_heads
+    Hkv = getattr(cfg, "n_kv_heads", None) or H
+    dh = cfg.d_model // H
+    blk = max(8, min(128, S))
+    Sp = -(-S // blk) * blk
+    nq = nk = Sp // blk
+    t_q = blk * dh * 4                              # f32 activations
+    t_kv = blk * dh * 4
+    code_b = 1 if codec_name == "int8" else 2
+    t_apm = blk * blk * code_b
+    sliver = blk * 2 if codec_name == "int8" else 0
+    n_miss = B - n_hit
+    miss = nq * t_q + nq * nk * 2 * t_kv            # Q per row, K+V stream
+    hit = nq * nk * (t_kv + t_apm) + nq * sliver    # V + APM (+ scales)
+    fused = H * (n_hit * hit + n_miss * miss)
+    every = nq * t_q + nq * nk * (2 * t_kv + t_apm) + nq * sliver
+    unfused = H * B * every
+    gather = B * H * (S * S * code_b + (S * 2 if code_b == 1 else 0))
+    gather_path = gather + H * B * (nq * t_q + nq * nk * 2 * t_kv)
+    return {"kernel_fused": int(fused), "kernel_unfused": int(unfused),
+            "gather_path": int(gather_path),
+            "fused_over_unfused": fused / max(1, unfused),
+            "fused_over_gather": fused / max(1, gather_path)}
+
+
+def _codec_parity():
+    """Kernel-mode select-parity under BOTH streamed codecs (the fused
+    dispatch has a distinct tile path per codec — f16 tiles vs int8
+    codes + scale slivers): a small 2-layer engine per codec, one
+    kernel-mode batch vs its own select reference."""
+    from benchmarks.common import trained_encoder
+    from repro.data import TemplateCorpus
+    from repro.memo import MemoSession, MemoSpec
+    model, params, _ = trained_encoder("bert_base", n_layers=2, seq_len=32)
+    corpus = TemplateCorpus(vocab=model.cfg.vocab, seq_len=32,
+                            n_templates=6, slot_fraction=0.2, seed=0)
+    calib = [{"tokens": jnp.asarray(corpus.sample(16)[0])}
+             for _ in range(3)]
+    toks = jnp.asarray(corpus.sample(16)[0])
+    out = {}
+    for codec in ("f16", "int8"):
+        sess = MemoSession.build(
+            model, params,
+            MemoSpec.flat(threshold=0.8, mode="select", embed_steps=60,
+                          apm_codec=codec, device_slack=4.0),
+            batches=calib, key=jax.random.PRNGKey(1))
+        eng = sess.engine
+        thr = float(eng.suggest_levels([calib[0]])["moderate"])
+        ref, _ = eng.infer({"tokens": toks}, threshold=thr)
+        eng.mc.mode = "kernel"
+        fast, st = eng.infer({"tokens": toks}, threshold=thr)
+        out[codec] = {
+            "memo_rate": st.memo_rate,
+            "logits_match_select": bool(np.allclose(
+                np.asarray(fast), np.asarray(ref), rtol=2e-3, atol=2e-3)),
+            "logits_max_abs_diff": float(np.max(np.abs(
+                np.asarray(fast) - np.asarray(ref)))),
+        }
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def collect_kernel():
+    """The ``serve_kernel`` family (ISSUE 7): kernel mode's standing
+    relative to the bucket fast path and the select reference, the
+    modeled HBM-byte account, and select-parity under both streamed
+    codecs. Reuses the lru-cached ``collect()`` sweep — free when
+    serve_fastpath already ran."""
+    base = collect()
+    eng, corpus = built_engine(threshold=0.8, mode="select")
+    S = base["config"]["seq"]
+    levels = {}
+    for level, blk in base["levels"].items():
+        kern = blk["modes"]["kernel"]
+        buck = blk["modes"]["bucket"]
+        sel_ms = blk["modes"]["select"]["host_ms"]
+        n_hit = int(round(kern["memo_rate"] * BATCH))
+        levels[level] = {
+            "threshold": blk["threshold"],
+            "kernel_fast_ms": kern["fast_ms"],
+            "kernel_speedup": kern["speedup"],          # host/fast, >1 wins
+            "kernel_over_bucket": kern["fast_ms"] / buck["fast_ms"],
+            "kernel_over_select": kern["fast_ms"] / sel_ms,
+            "memo_rate": kern["memo_rate"],
+            "logits_match_select": kern["logits_match_select"],
+            "hbm_bytes_model": _hbm_bytes_model(
+                eng.cfg, eng.store.codec.name, BATCH, S, n_hit),
+        }
+    return {"config": base["config"], "kernel_impl": eng._kernel_impl,
+            "levels": levels, "codec_parity": _codec_parity()}
+
+
 def run():
     out = collect()
     for level, blk in out["levels"].items():
@@ -141,3 +257,87 @@ def run():
                        f"match={row['logits_match_select']}")
     for name, ms in out["phase_micro_ms"].items():
         yield (f"serve_phase_{name}", ms * 1e3, "")
+    kern = collect_kernel()
+    for level, row in kern["levels"].items():
+        hbm = row["hbm_bytes_model"]
+        yield (f"serve_kernel_{level}", row["kernel_fast_ms"] * 1e3,
+               f"vs_bucket={row['kernel_over_bucket']:.2f}x "
+               f"vs_select={row['kernel_over_select']:.2f}x "
+               f"hbm_fused_mb={hbm['kernel_fused'] / 1e6:.1f} "
+               f"hbm_ratio={hbm['fused_over_unfused']:.2f}")
+
+
+def _quick_smoke():
+    """CI leg (kernel-smoke): one interpret-Pallas kernel-mode batch vs
+    the select reference — compiled-path semantics under the interpreter,
+    small enough to finish in seconds."""
+    eng, corpus = built_engine(threshold=0.8, mode="select")
+    toks = jnp.asarray(corpus.sample(8)[0])
+    thr = float(eng.levels["moderate"])
+    old = (eng.mc.mode, eng.mc.kernel_impl, eng.mc.device_fast_path)
+    try:
+        eng.mc.mode, eng.mc.device_fast_path = "select", None
+        ref, _ = eng.infer({"tokens": toks}, threshold=thr)
+        eng.mc.mode = "kernel"
+        eng.mc.kernel_impl = "pallas"     # pin the kernel: this leg exists
+        eng.mc.device_fast_path = True    # to smoke the Pallas dispatch
+        out, st = eng.infer({"tokens": toks}, threshold=thr)
+        ok = bool(np.allclose(np.asarray(out), np.asarray(ref),
+                              rtol=2e-3, atol=2e-3))
+        print(f"quick kernel smoke: parity={ok} "
+              f"memo_rate={st.memo_rate:.2f} backend=interpret")
+        return 0 if ok else 1
+    finally:
+        eng.mc.mode, eng.mc.kernel_impl, eng.mc.device_fast_path = old
+
+
+def _hw_leg():
+    """Real-hardware leg: the compiled (interpret=False) fused kernel on
+    TPU/GPU. Skips cleanly on CPU — the interpreter numbers are covered
+    by --quick and the XLA-form numbers by the main sweep."""
+    if jax.default_backend() == "cpu":
+        print("serve_fastpath --hw: backend is cpu (no accelerator) — "
+              "skipping the compiled-kernel leg")
+        return 0
+    eng, corpus = built_engine(threshold=0.8, mode="select")
+    toks = jnp.asarray(corpus.sample(BATCH)[0])
+    old = (eng.mc.mode, eng.mc.kernel_impl, eng.mc.device_fast_path,
+           eng.mc.interpret)
+    try:
+        eng.mc.mode, eng.mc.device_fast_path = "select", None
+        for level in ("moderate", "aggressive"):
+            thr = float(eng.levels[level])
+            eng.mc.mode, eng.mc.kernel_impl = "select", None
+            ref_ms, _, ref = _median_ms(eng, toks, thr, REPS["select"])
+            eng.mc.mode = "kernel"
+            eng.mc.kernel_impl = "pallas"
+            eng.mc.interpret = False      # compiled Pallas, not interpreter
+            eng.mc.device_fast_path = True
+            fast_ms, st, logits = _median_ms(eng, toks, thr, REPS["kernel"])
+            ok = bool(np.allclose(np.asarray(logits), np.asarray(ref),
+                                  rtol=2e-3, atol=2e-3))
+            print(f"hw kernel {level}: {fast_ms:.2f}ms vs select "
+                  f"{ref_ms:.2f}ms ({ref_ms / fast_ms:.2f}x) "
+                  f"rate={st.memo_rate:.2f} parity={ok} "
+                  f"backend={jax.default_backend()}")
+    finally:
+        (eng.mc.mode, eng.mc.kernel_impl, eng.mc.device_fast_path,
+         eng.mc.interpret) = old
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one interpret-Pallas kernel batch vs select")
+    ap.add_argument("--hw", action="store_true",
+                    help="compiled-kernel leg on TPU/GPU (skips on CPU)")
+    a = ap.parse_args()
+    if a.quick:
+        sys.exit(_quick_smoke())
+    if a.hw:
+        sys.exit(_hw_leg())
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

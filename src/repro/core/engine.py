@@ -228,6 +228,22 @@ class MemoEngine:
         # (RuntimeSpec.faults), so production serving pays one `is None`
         self.faults = FaultInjector.from_spec(self.mc.runtime.faults)
 
+    @property
+    def _kernel_impl(self) -> str:
+        """Resolved memo_attention implementation for kernel mode
+        ("pallas" | "xla"). Explicit ``mc.kernel_impl`` wins; an explicit
+        ``mc.interpret`` pins the Pallas path (that is how kernel tests
+        keep exercising the kernel); otherwise the backend decides —
+        the one-matmul XLA form on CPU (the Pallas interpreter is ~30x
+        slower there), the compiled kernel on TPU/GPU. A property, not
+        an ``__init__`` capture: callers mutate ``mc`` between builds."""
+        ki = self.mc.kernel_impl
+        if ki:
+            return ki
+        if self.mc.interpret is not None:
+            return "pallas"
+        return "xla" if jax.default_backend() == "cpu" else "pallas"
+
     # --- store delegation (compat: the pre-store attribute API) ---------
     @property
     def db(self) -> Optional[AttentionDB]:
@@ -422,8 +438,9 @@ class MemoEngine:
         through attention, memo lookup and the head) and ``n_valid`` (the
         runtime's batch padding — trailing rows are shape filler and are
         excluded from stats and admission). Variable length is served by
-        the device fast path and the select reference; the host
-        bucket/kernel paths stay fixed-length."""
+        the device fast path, the select reference and kernel mode (the
+        memo_attention ``lengths`` operand); only the host-synchronous
+        bucket path stays fixed-length."""
         thr = self.mc.threshold if threshold is None else threshold
         active = set(self.layers if active_layers is None else active_layers)
         st = stats or MemoStats()
@@ -445,11 +462,12 @@ class MemoEngine:
             self._serve_batches += 1
         tokens = batch["tokens"]
         lengths = batch.get("lengths")
-        if lengths is not None and use_memo and self.mc.mode != "select":
+        if lengths is not None and use_memo and self.mc.mode == "bucket":
             raise ValueError(
                 "variable-length batches are served by the device fast "
-                "path or the select reference; the host-synchronous "
-                "bucket/kernel paths are fixed-length")
+                "path, the select reference, or kernel mode (the "
+                "memo_attention lengths operand); the host-synchronous "
+                "bucket path is fixed-length")
         B, S = tokens.shape[0], tokens.shape[1]
         n_valid = int(batch.get("n_valid", B))
         st.n_inputs += n_valid
@@ -474,7 +492,8 @@ class MemoEngine:
                 h = self._layer_bucket(lp, h, kind, li, memo, positions)
             elif memo is not None and self.mc.mode == "kernel" \
                     and kind == "attn":
-                h = self._layer_kernel(lp, h, li, memo, positions)
+                h = self._layer_kernel(lp, h, li, memo, positions,
+                                       lengths=lengths)
             else:
                 h = self._layer_plain(lp, h, kind, li, memo, positions,
                                       kpad=kpad)
@@ -508,10 +527,6 @@ class MemoEngine:
         cfg = self.cfg
         tokens = jnp.asarray(batch["tokens"])
         lengths = batch.get("lengths")
-        if lengths is not None and self.mc.mode == "kernel":
-            raise ValueError(
-                "variable-length serving supports bucket mode; the "
-                "memo_attention kernel path is fixed-length")
         thr = self.mc.threshold if threshold is None else float(threshold)
         active = set(self.layers if active_layers is None
                      else active_layers)
@@ -617,13 +632,21 @@ class MemoEngine:
           host-side bucketing, but the batch composition never leaves the
           accelerator and shapes stay static (no recompiles across hit
           counts, unlike the host path's per-bucket-size cache entries).
-        * ``kernel`` — the APM gather is elided entirely: the Pallas
-          memo_attention kernel gathers its own tiles from the device DB
-          by scalar-prefetched index and skips QKᵀ per-sequence via
-          pl.when; misses route through the clamped-gather (ops.py), so
-          they never touch the host arena. Under the int8 codec the
-          kernel gathers codes + scale slivers and dequantizes in VMEM
-          (the fused-dequant gather, DESIGN.md §2.6).
+        * ``kernel`` — ONE fused dispatch end to end: the search runs
+          with ``fused=True`` (the one-matmul prologue, reusing the
+          snapshot's cached DB norms) so the only Pallas kernel a
+          memoized layer issues is memo_attention itself. The APM gather
+          is elided entirely: the kernel gathers its own tiles from the
+          device DB via the scalar-prefetched hit index, and the hit
+          flag drives the BlockSpec index maps — hit programs alias the
+          Q/K fetch to one resident tile and stream only APM tiles, miss
+          programs alias the APM (and int8 scale-sliver) fetch and run
+          pure flash attention, never touching the DB or the host arena.
+          Under the int8 codec the kernel gathers codes + scale slivers
+          and dequantizes in VMEM (the fused-dequant gather, DESIGN.md
+          §2.6). On CPU the same math runs as the one-matmul XLA form
+          (``_kernel_impl``); variable length rides the ``lengths``
+          operand instead of erroring.
 
         Compression plumbing: the device DB rides in as its codec
         ``parts`` tuple and the index as its ``search_args`` pytree —
@@ -642,9 +665,10 @@ class MemoEngine:
         cfg = self.cfg
         kernel_path = self.mc.mode == "kernel" and kind == "attn"
         varlen = qlen is not None
+        impl = self._kernel_impl if kernel_path else None
         key = ("fused", kernel_path, kind, li if cfg.moe else 0, h.shape,
                self.mc.device_quanta, capture, view.codec_key,
-               view.index_key, varlen)
+               view.index_key, varlen, impl)
         fn = self._jit_cache.get(key)
         if fn is None:
             pool, act = self.embedder.pool, self.embedder.act
@@ -704,7 +728,11 @@ class MemoEngine:
                 x = bb.norm_apply(lp["norm1"], h, cfg.norm)
                 emb = embed_apply(emb_p, x, pool, act, lengths=qlen,
                                   full_len=arena_len)
-                d2, idx = index.search_device(emb, args=sargs)
+                # fused=True on the kernel path forces the one-matmul
+                # search prologue so memo_attention is the layer's ONLY
+                # Pallas dispatch (the norms cached in sargs keep it cheap)
+                d2, idx = index.search_device(emb, args=sargs,
+                                              fused=kernel_path)
                 dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
                 sim = a * dist + b
                 hit = sim > thr
@@ -742,7 +770,11 @@ class MemoEngine:
                     qq, kk, vv = attn_mod._qkv(lp["mix"], x, cfg, positions)
                     blk = max(8, min(128, S))
                     kw = dict(causal=cfg.causal, window=cfg.sliding_window,
-                              block_q=blk, block_k=blk, interpret=interpret)
+                              block_q=blk, block_k=blk, impl=impl,
+                              interpret=(interpret if impl == "pallas"
+                                         else None))
+                    if varlen:      # padded key positions mask per sequence
+                        kw["lengths"] = qlen
                     if codec_name == "int8":
                         # fused-dequant gather: int8 tiles + scale slivers,
                         # dequantized in the kernel's VMEM
@@ -1162,33 +1194,44 @@ class MemoEngine:
                   jnp.asarray(sel_m), jnp.asarray(keep_h),
                   jnp.asarray(keep_m), positions)
 
-    def _layer_kernel(self, lp, h, li, memo, positions):
-        """The TPU-native serving path: hits are served by the fused
-        Pallas memo_attention kernel — APM tiles gathered from the
-        device-resident DB by scalar-prefetched index, QKᵀ+softmax skipped
-        per-sequence via pl.when. ``interpret`` is backend-aware (the
-        Pallas interpreter on CPU CI, compiled on TPU; override via
-        MemoConfig.interpret). Misses route through the kernel's
-        clamped-gather, so they never touch the host arena."""
+    def _layer_kernel(self, lp, h, li, memo, positions, lengths=None):
+        """The host-synchronous kernel-mode layer: hits are served by the
+        fused memo_attention dispatch — APM tiles gathered from the
+        device-resident DB by scalar-prefetched index, the hit flag
+        driving the BlockSpec index maps so misses fetch zero DB bytes
+        and hits skip the Q/K stream. The implementation is
+        ``_kernel_impl`` ("pallas" on accelerators / explicit interpret;
+        the one-matmul XLA form on CPU). ``lengths`` (B,) serves
+        variable-length batches through the kernel's per-sequence key
+        mask."""
         cfg = self.cfg
         self.store.sync()        # generation-counted: no-op unless stale
         hit_idx = jnp.asarray(memo.idx, jnp.int32)
         hit = jnp.asarray(memo.hit, jnp.int32)
         interpret = self._interpret
+        impl = self._kernel_impl
         store = self.store
-        key = ("kernel", li if cfg.moe else 0, h.shape, store.codec.key)
+        varlen = lengths is not None
+        if varlen:
+            lengths = jnp.asarray(lengths, jnp.int32)
+        key = ("kernel", li if cfg.moe else 0, h.shape, store.codec.key,
+               varlen, impl)
         fn = self._jit_cache.get(key)
         if fn is None:
             codec_name = store.codec.name
 
-            def run(lp, h, db_parts, hit_idx, hit, positions):
+            def run(lp, h, db_parts, hit_idx, hit, positions, lengths):
                 from repro.kernels.memo_attention.ops import memo_attention
                 x = bb.norm_apply(lp["norm1"], h, cfg.norm)
                 q, k, v = attn_mod._qkv(lp["mix"], x, cfg, positions)
                 S = x.shape[1]
                 blk = max(8, min(128, S))
                 kw = dict(causal=cfg.causal, window=cfg.sliding_window,
-                          block_q=blk, block_k=blk, interpret=interpret)
+                          block_q=blk, block_k=blk, impl=impl,
+                          interpret=(interpret if impl == "pallas"
+                                     else None))
+                if varlen:
+                    kw["lengths"] = lengths
                 if codec_name == "int8":   # fused-dequant gather in VMEM
                     out = memo_attention(q, k, v, db_parts[0], hit_idx, hit,
                                          db_scales=db_parts[1], **kw)
@@ -1205,7 +1248,8 @@ class MemoEngine:
                 return self._chan_tail(lp, h + y, li)
             fn = jax.jit(run)
             self._jit_cache[key] = fn
-        return fn(lp, h, self.device_db.parts, hit_idx, hit, positions)
+        return fn(lp, h, self.device_db.parts, hit_idx, hit, positions,
+                  lengths)
 
     def _memo_only(self, lp, x, kind, apm):
         key = ("memo_only", kind, x.shape)

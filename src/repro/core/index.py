@@ -112,6 +112,21 @@ def _sq_dists(q, d):
     return qn - 2.0 * (q @ d.T) + dn[None, :]
 
 
+@jax.jit
+def _sq_dists_cached(q, d, dn):
+    """The matmul form with precomputed per-row ‖d‖² — the hot-path
+    variant: DeviceIndex caches the norms per mutation generation, so a
+    search is ONE matmul plus broadcasts instead of re-reducing the
+    whole table."""
+    qn = jnp.sum(q * q, -1, keepdims=True)
+    return qn - 2.0 * (q @ d.T) + dn[None, :]
+
+
+@jax.jit
+def _row_norms(t):
+    return jnp.sum(t * t, axis=-1)
+
+
 def _kmeans(x: np.ndarray, k: int, iters: int, seed: int):
     """Plain Lloyd k-means (matmul-shaped assignment steps); returns
     (centroids (k, dim) f32, assignment (n,) int64). Shared by the host
@@ -238,6 +253,7 @@ class DeviceIndex:
         self.mesh = mesh
         self.db_axis = db_axis
         self._table: Optional[jnp.ndarray] = None
+        self._norms: Optional[jnp.ndarray] = None   # cached per generation
         self._n = 0
         self.transfer_bytes = 0
         if capacity:
@@ -272,6 +288,7 @@ class DeviceIndex:
         if self._n:
             table = table.at[: self._n].set(self._table[: self._n])
         self._table = table
+        self._norms = None
         self.transfer_bytes += self._n * self.dim * 4   # prefix re-upload
 
     def add(self, embs):
@@ -279,6 +296,7 @@ class DeviceIndex:
         b = embs.shape[0]
         self._ensure_capacity(self._n + b)
         self._table = self._table.at[self._n: self._n + b].set(embs)
+        self._norms = None
         self._n += b
         self.transfer_bytes += int(embs.nbytes)
 
@@ -296,6 +314,7 @@ class DeviceIndex:
         slots, values = pad_delta_pow2(slots, np.asarray(embs, np.float32))
         values = jnp.asarray(values)
         self._table = self._table.at[jnp.asarray(slots)].set(values)
+        self._norms = None
         self._n = max(self._n, n_max + 1)
         self.transfer_bytes += int(values.nbytes + slots.size * 4)
 
@@ -305,44 +324,77 @@ class DeviceIndex:
         if slots.size and self._table is not None:
             slots, _ = pad_delta_pow2(slots)
             self._table = self._table.at[jnp.asarray(slots)].set(TOMBSTONE)
+            self._norms = None
             self.transfer_bytes += int(slots.size * 4)
+
+    @property
+    def norms(self) -> Optional[jnp.ndarray]:
+        """Cached per-row squared norms ‖d‖² of the FULL table (slack and
+        TOMBSTONE rows included — their huge norms keep losing every
+        comparison). Computed lazily ONCE per mutation generation
+        (add/assign/remove/growth invalidate) and shipped inside
+        ``search_args``, so every search this generation — the fused
+        serving jit, the nn_search kernel, the host-compat API — reuses
+        one O(N·D) reduction instead of recomputing ‖d‖² per query tile."""
+        if self._norms is None and self._table is not None:
+            self._norms = _row_norms(self._table)
+        return self._norms
 
     @property
     def search_args(self):
         """The pytree of device arrays ``search_device`` consumes —
         jitted callers pass this as a traced argument so index growth or
         a rebuild re-specializes (shape change → retrace) instead of
-        serving stale closures. Flat index: just the table."""
-        return self._table
+        serving stale closures. Flat index: ``(table, row_norms)`` — the
+        norms are the per-generation ‖d‖² cache (see ``norms``), so a
+        StoreSnapshot publish freezes them alongside the table."""
+        return (self._table, self.norms)
 
     def search_device(self, q, k: int = 1, *, table: Optional[jnp.ndarray]
-                      = None, args=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                      = None, args=None, fused: bool = False
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Traceable search. q: (B, dim) device array →
         (sq_dists (B, k), idx (B, k)) device arrays — SQUARED L2, unlike the
         host API (sqrt belongs to the caller's fused sim calculation).
         ``table``/``args`` let a jitted caller pass the index state as a
         traced argument so index growth re-specializes instead of
-        staleness."""
-        if table is None and args is not None:
-            table = args
+        staleness; ``args`` is the ``search_args`` tuple (a bare table is
+        accepted for back-compat). ``fused=True`` is the scalar-prefetch
+        prologue contract of the fused memo-attention dispatch: it forces
+        the one-matmul XLA formulation even when the nn_search kernel is
+        enabled, so a memoized layer issues exactly ONE Pallas kernel
+        (memo_attention) — nn_search would be a second dispatch with an
+        HBM round-trip between them."""
+        norms = None
+        if args is not None:
+            if isinstance(args, tuple):
+                table, norms = args
+            else:
+                table = args
         t = self._table if table is None else table
+        if norms is None and table is None:
+            norms = self.norms
         q = jnp.asarray(q, jnp.float32)
         if k == 1:
             if self.mesh is not None:
                 from repro.core.database import distributed_search
                 d2, idx = distributed_search(t, q, self.mesh,
                                              db_axis=self.db_axis)
-            elif self.use_kernel:
+            elif self.use_kernel and not fused:
                 from repro.kernels.nn_search.ops import nn_search
-                d2, idx = nn_search(q, t, block_q=self.block_q,
+                d2, idx = nn_search(q, t, db_norms=norms,
+                                    block_q=self.block_q,
                                     block_n=self.block_n,
                                     interpret=self.interpret)
             else:
-                d2 = _sq_dists(q, t)
+                d2 = (_sq_dists(q, t) if norms is None
+                      else _sq_dists_cached(q, t, norms))
                 idx = jnp.argmin(d2, -1).astype(jnp.int32)
                 d2 = jnp.take_along_axis(d2, idx[:, None], -1)[:, 0]
             return d2[:, None], idx[:, None]
-        neg, idx = jax.lax.top_k(-_sq_dists(q, t), k)
+        d2_all = (_sq_dists(q, t) if norms is None
+                  else _sq_dists_cached(q, t, norms))
+        neg, idx = jax.lax.top_k(-d2_all, k)
         return -neg, idx.astype(jnp.int32)
 
     def search(self, q, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
@@ -729,8 +781,12 @@ class ClusteredDeviceIndex(DeviceIndex):
         return self._packed
 
     # ------------------------------------------------------------- search
-    def search_device(self, q, k: int = 1, *, table=None, args=None
+    def search_device(self, q, k: int = 1, *, table=None, args=None,
+                      fused: bool = False
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        # ``fused`` is accepted for API parity with DeviceIndex: the
+        # clustered search is already pure XLA (no Pallas dispatch), so
+        # it IS the fused-prologue form
         q = jnp.asarray(q, jnp.float32)
         if self.mesh is not None:
             # args is the traced f32 table here (see search_args); the

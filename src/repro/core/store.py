@@ -539,6 +539,11 @@ class MemoStore:
             generation=self.generation,
             db_parts=self.device_db.parts,
             index=di,
+            # reading ``search_args`` here freezes the index's cached
+            # per-row squared norms into the snapshot: the O(N·dim)
+            # reduction runs once per mutation generation at publish,
+            # and every fused-path search (and the nn_search kernel's
+            # norm sliver) reuses it until the next sync republishes.
             search_args=di.search_args,
             index_key=type(di).__name__,
             codec_key=self.codec.key,

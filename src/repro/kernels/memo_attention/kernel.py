@@ -1,19 +1,32 @@
 """Fused memoized attention (the paper's hot path, TPU-native).
 
-Per (batch, head, q-tile, k-tile) with per-sequence hit flags scalar-
-prefetched:
+ONE Pallas dispatch serves the whole mixed hit/miss batch. The grid is
+(batch, head, q-tile, k-tile) with three scalar-prefetch operands — the
+per-sequence gather index, hit flag and true length — and the hit flag
+drives the BlockSpec *index maps*, not just ``pl.when``, so each
+program only streams the tiles its path actually consumes:
 
 * hit  — the APM tile is gathered straight out of the HBM-resident
-  attention database by ``db_apm[hit_idx[b], h, iq, ik]`` in the BlockSpec
-  index_map and consumed by the APM·V matmul in VMEM. The gathered APM
-  never materializes in HBM — this is the TPU analogue of the paper's
-  mmap zero-copy gathering (DESIGN.md §2). QKᵀ and softmax are skipped
-  via ``pl.when``.
-* miss — inline flash attention (online softmax), and the (speculatively
-  fetched) APM tile is ignored.
+  attention database by ``db_apm[hit_idx[b], h, iq, ik]`` in the
+  BlockSpec index_map and consumed by the APM·V matmul in VMEM. The
+  gathered APM never materializes in HBM — this is the TPU analogue of
+  the paper's mmap zero-copy gathering (DESIGN.md §2). QKᵀ and softmax
+  are skipped via ``pl.when`` AND the Q/K index maps alias to block
+  (0, 0, 0, 0): Pallas skips a re-fetch when consecutive grid steps map
+  to the same block, so a hit program re-uses whatever Q/K tile is
+  already resident instead of streaming S·d bytes of keys it would
+  ignore through every k-iteration. V still streams — APM·V consumes
+  every V tile.
+* miss — inline flash attention (online softmax). The APM (and int8
+  scale-sliver) index maps alias to block 0 for misses, so a miss moves
+  at most ONE boundary DB tile instead of speculatively streaming entry
+  0's full tile row per program (the previous design clamped
+  ``hit_idx`` to 0 in ops.py and paid that fetch on every miss).
 
-Scalar prefetch is what lets the gather index be data-dependent per
-sequence while the grid stays static.
+Variable length rides the same dispatch: ``lengths`` (B,) bounds the
+miss path's key mask per sequence. The hit path needs no mask — stored
+APM rows/cols past an entry's length are hard zeros, and the engine's
+length gate only admits hits whose entry length equals the query's.
 
 Quantized DB (DESIGN.md §2.6): with ``db_scales`` the database holds
 int8 codes + per-row f16 scales (the ``int8`` APM codec); the kernel
@@ -33,8 +46,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, *rest,
-                 scale, causal, window, block_q, block_k, seq_len,
+def _memo_kernel(hit_idx_ref, hit_ref, len_ref, q_ref, k_ref, v_ref,
+                 apm_ref, *rest, scale, causal, window, block_q, block_k,
                  quantized=False):
     if quantized:      # static: the int8 variant carries a scale sliver
         sc_ref, o_ref, m_scr, l_scr, acc_scr = rest
@@ -74,7 +87,7 @@ def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, *rest,
             jnp.int32, (block_q, block_k), 0)
         kpos = ik * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
-        mask = kpos < seq_len
+        mask = kpos < len_ref[b]        # per-sequence true length (varlen)
         if causal:
             mask &= kpos <= qpos
         if window is not None:
@@ -97,48 +110,82 @@ def _memo_kernel(hit_idx_ref, hit_ref, q_ref, k_ref, v_ref, apm_ref, *rest,
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, db_scales=None,
-                        causal=True, window=None, block_q=128, block_k=128,
-                        interpret=False):
+def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, lengths=None,
+                        db_scales=None, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=False):
     """q: (B, H, S, d); k, v: (B, Hkv, S, d); db_apm: (N, H, S, S) —
-    the device-resident attention DB; hit_idx, hit: (B,) int32.
+    the device-resident attention DB; hit_idx, hit: (B,) int32;
+    ``lengths`` (B,) int32 bounds the miss path's key mask per sequence
+    (None → every sequence is full-length S).
 
     ``db_scales`` (N, H, S) f16 switches the DB to the int8 codec:
     ``db_apm`` holds int8 codes and each gathered tile is dequantized in
-    VMEM against its per-row scale sliver (fused-dequant gather)."""
+    VMEM against its per-row scale sliver (fused-dequant gather).
+
+    The hit flag conditions every index map (see module docstring): hit
+    programs alias Q/K to one resident tile and stream only APM tiles;
+    miss programs alias the APM (and scale sliver) and stream only Q/K/V.
+    """
     B, H, S, d = q.shape
     Hkv = k.shape[1]
     group = H // Hkv
     block_q = min(block_q, S)
     block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, "pad upstream"
+    assert S % block_q == 0 and S % block_k == 0, \
+        "ragged S is padded by ops.memo_attention"
+    assert db_apm.shape[-2] == S and db_apm.shape[-1] == S, \
+        "DB tiles must cover the (padded) sequence: pad/slice in ops"
     nq, nk = S // block_q, S // block_k
     quantized = db_scales is not None
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
 
     kernel = functools.partial(
         _memo_kernel, scale=d ** -0.5, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, seq_len=S, quantized=quantized)
+        block_q=block_q, block_k=block_k, quantized=quantized)
+
+    # Index maps — the aliasing core. A Pallas program whose index map
+    # resolves to the same block as the previous grid step re-uses the
+    # resident tile; a CONSTANT block for the never-read operand of a
+    # path therefore reduces that operand's HBM traffic to (at most) one
+    # fetch per hit↔miss boundary in grid order, instead of one per
+    # program.
+    def q_map(b, h, iq, ik, hit_idx, hit, lens):
+        m = hit[b] == 1          # hit never reads Q: alias to block 0
+        return (jnp.where(m, 0, b), jnp.where(m, 0, h),
+                jnp.where(m, 0, iq), 0)
+
+    def k_map(b, h, iq, ik, hit_idx, hit, lens):
+        m = hit[b] == 1          # hit never reads K: alias to block 0
+        return (jnp.where(m, 0, b), jnp.where(m, 0, h // group),
+                jnp.where(m, 0, ik), 0)
+
+    def v_map(b, h, iq, ik, hit_idx, hit, lens):
+        return (b, h // group, ik, 0)      # both paths consume V
+
+    def apm_map(b, h, iq, ik, hit_idx, hit, lens):
+        m = hit[b] == 1          # miss never reads the APM: alias to 0
+        return (jnp.where(m, hit_idx[b], 0), jnp.where(m, h, 0),
+                jnp.where(m, iq, 0), jnp.where(m, ik, 0))
+
+    def sc_map(b, h, iq, ik, hit_idx, hit, lens):
+        m = hit[b] == 1          # quantized misses move zero scale bytes
+        return (jnp.where(m, hit_idx[b], 0), jnp.where(m, h, 0),
+                jnp.where(m, iq, 0))
+
     in_specs = [
-        pl.BlockSpec((1, 1, block_q, d),
-                     lambda b, h, iq, ik, *_: (b, h, iq, 0)),
-        pl.BlockSpec((1, 1, block_k, d),
-                     lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
-        pl.BlockSpec((1, 1, block_k, d),
-                     lambda b, h, iq, ik, *_: (b, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_q, d), q_map),
+        pl.BlockSpec((1, 1, block_k, d), k_map),
+        pl.BlockSpec((1, 1, block_k, d), v_map),
         # the DB gather: data-dependent entry via scalar prefetch
-        pl.BlockSpec((1, 1, block_q, block_k),
-                     lambda b, h, iq, ik, hit_idx, hit:
-                     (hit_idx[b], h, iq, ik)),
+        pl.BlockSpec((1, 1, block_q, block_k), apm_map),
     ]
     operands = [q, k, v, db_apm]
     if quantized:
-        in_specs.append(
-            pl.BlockSpec((1, 1, block_q),
-                         lambda b, h, iq, ik, hit_idx, hit:
-                         (hit_idx[b], h, iq)))
+        in_specs.append(pl.BlockSpec((1, 1, block_q), sc_map))
         operands.append(db_scales)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, H, nq, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, d),
@@ -153,4 +200,5 @@ def memo_attention_bhsd(q, k, v, db_apm, hit_idx, hit, *, db_scales=None,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(hit_idx.astype(jnp.int32), hit.astype(jnp.int32), *operands)
+    )(hit_idx.astype(jnp.int32), hit.astype(jnp.int32),
+      lengths.astype(jnp.int32), *operands)

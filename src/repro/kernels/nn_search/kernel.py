@@ -6,6 +6,12 @@ one MXU matmul (‖q‖² − 2·q·Dᵀ + ‖d‖²) and the running (min, argm
 in VMEM scratch across the sequential N-grid dimension. This is the index
 database's TPU-native search primitive (paper §5.3 uses Faiss HNSW; see
 DESIGN.md §2 for why HNSW does not transfer).
+
+``db_norms`` optionally carries precomputed per-row ‖d‖² (the DeviceIndex
+caches them per mutation generation): the kernel then streams a (block_n,)
+sliver instead of recomputing the reduction over every (block_n, dim) tile
+for every query block — the norms are O(N) work total but the naive form
+pays O(nb·N·dim) per search.
 """
 from __future__ import annotations
 
@@ -19,8 +25,12 @@ from jax.experimental.pallas import tpu as pltpu
 BIG = 1e30
 
 
-def _nn_kernel(q_ref, db_ref, od_ref, oi_ref, bd_scr, bi_scr, *,
-               block_q, block_n, n_total):
+def _nn_kernel(q_ref, db_ref, *rest, block_q, block_n, n_total, has_norms):
+    if has_norms:      # static: precomputed ‖d‖² rides as a sliver
+        dn_ref, od_ref, oi_ref, bd_scr, bi_scr = rest
+    else:
+        od_ref, oi_ref, bd_scr, bi_scr = rest
+        dn_ref = None
     iN = pl.program_id(1)
 
     @pl.when(iN == 0)
@@ -31,7 +41,8 @@ def _nn_kernel(q_ref, db_ref, od_ref, oi_ref, bd_scr, bi_scr, *,
     q = q_ref[...].astype(jnp.float32)               # (block_q, dim)
     d = db_ref[...].astype(jnp.float32)              # (block_n, dim)
     qn = jnp.sum(q * q, axis=-1, keepdims=True)
-    dn = jnp.sum(d * d, axis=-1)
+    dn = (dn_ref[...].astype(jnp.float32) if has_norms
+          else jnp.sum(d * d, axis=-1))
     d2 = qn - 2.0 * jax.lax.dot_general(
         q, d, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) + dn[None, :]
@@ -51,8 +62,11 @@ def _nn_kernel(q_ref, db_ref, od_ref, oi_ref, bd_scr, bi_scr, *,
         oi_ref[...] = bi_scr[...]
 
 
-def nn_search_kernel(q, db, *, block_q=128, block_n=512, interpret=False):
-    """q: (B, dim), db: (N, dim) → (sq_dists (B,), idx (B,))."""
+def nn_search_kernel(q, db, *, db_norms=None, block_q=128, block_n=512,
+                     interpret=False):
+    """q: (B, dim), db: (N, dim) → (sq_dists (B,), idx (B,)).
+    ``db_norms`` (N,) f32: precomputed per-row squared norms (padded rows
+    are masked by ``n_total``, so their norm values never matter)."""
     B, dim = q.shape
     N = db.shape[0]
     block_q = min(block_q, B)
@@ -63,18 +77,26 @@ def nn_search_kernel(q, db, *, block_q=128, block_n=512, interpret=False):
         q = jnp.pad(q, ((0, pad_b), (0, 0)))
     if pad_n:
         db = jnp.pad(db, ((0, pad_n), (0, 0)))
+        if db_norms is not None:
+            db_norms = jnp.pad(db_norms, ((0, pad_n),))
     nb = q.shape[0] // block_q
     nN = db.shape[0] // block_n
+    has_norms = db_norms is not None
 
     kernel = functools.partial(_nn_kernel, block_q=block_q, block_n=block_n,
-                               n_total=N)
+                               n_total=N, has_norms=has_norms)
+    in_specs = [
+        pl.BlockSpec((block_q, dim), lambda ib, iN: (ib, 0)),
+        pl.BlockSpec((block_n, dim), lambda ib, iN: (iN, 0)),
+    ]
+    operands = [q, db]
+    if has_norms:
+        in_specs.append(pl.BlockSpec((block_n,), lambda ib, iN: (iN,)))
+        operands.append(db_norms.astype(jnp.float32))
     od, oi = pl.pallas_call(
         kernel,
         grid=(nb, nN),
-        in_specs=[
-            pl.BlockSpec((block_q, dim), lambda ib, iN: (ib, 0)),
-            pl.BlockSpec((block_n, dim), lambda ib, iN: (iN, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q,), lambda ib, iN: (ib,)),
             pl.BlockSpec((block_q,), lambda ib, iN: (ib,)),
@@ -88,5 +110,5 @@ def nn_search_kernel(q, db, *, block_q=128, block_n=512, interpret=False):
             pltpu.VMEM((block_q,), jnp.int32),
         ],
         interpret=interpret,
-    )(q, db)
+    )(*operands)
     return od[:B], oi[:B]

@@ -4,22 +4,35 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.nn_search.kernel import nn_search_kernel
 
 
-@partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
-def _nn_search_jit(q, db, *, block_q, block_n, interpret):
-    return nn_search_kernel(q, db, block_q=block_q, block_n=block_n,
+@partial(jax.jit, static_argnames=("block_q", "block_n", "interpret",
+                                   "has_norms"))
+def _nn_search_jit(q, db, db_norms, *, block_q, block_n, interpret,
+                   has_norms):
+    return nn_search_kernel(q, db,
+                            db_norms=db_norms if has_norms else None,
+                            block_q=block_q, block_n=block_n,
                             interpret=interpret)
 
 
-def nn_search(q, db, *, block_q=128, block_n=512, interpret=None):
+def nn_search(q, db, *, db_norms=None, block_q=128, block_n=512,
+              interpret=None):
     """Top-1 L2 over the DB. Returns (squared_dists (B,), idx (B,)).
+
+    ``db_norms`` (N,) f32 optionally carries precomputed per-row ‖d‖²
+    (the DeviceIndex caches them per generation) so the kernel streams
+    a sliver instead of recomputing the reduction per query tile.
 
     ``interpret=None`` resolves per backend: the Pallas interpreter on CPU
     (CI), compiled on TPU. Traceable inside an outer jit."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    return _nn_search_jit(q, db, block_q=block_q, block_n=block_n,
-                          interpret=interpret)
+    has_norms = db_norms is not None
+    if db_norms is None:       # static placeholder keeps the jit signature
+        db_norms = jnp.zeros((1,), jnp.float32)
+    return _nn_search_jit(q, db, db_norms, block_q=block_q, block_n=block_n,
+                          interpret=interpret, has_norms=has_norms)

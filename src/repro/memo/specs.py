@@ -158,6 +158,10 @@ class RuntimeSpec:
     bucket_quantum: int = 4         # host-path hit-bucket padding quantum
     max_layers: Optional[int] = None
     interpret: Optional[bool] = None    # None → auto-detect backend
+    # kernel-mode implementation: "pallas" (tiled kernel; compiled on
+    # TPU/GPU, interpreter on CPU) | "xla" (one-matmul formulation —
+    # what CPU serving wants) | None → auto by backend
+    kernel_impl: Optional[str] = None
     device_slack: float = 1.0       # device-arena slack for delta sync
     # fault injection (DESIGN.md §2.9): None = production (no injector is
     # ever constructed — zero cost); {} = injector enabled for post-build
@@ -177,6 +181,8 @@ class RuntimeSpec:
                  f"bucket_quantum must be >= 1: {self.bucket_quantum}")
         _require(self.max_layers is None or int(self.max_layers) >= 1,
                  f"max_layers must be None or >= 1: {self.max_layers}")
+        _require(self.kernel_impl in (None, "pallas", "xla"),
+                 f"kernel_impl must be None|pallas|xla: {self.kernel_impl!r}")
         _require(float(self.device_slack) >= 0,
                  f"device_slack must be >= 0: {self.device_slack}")
         if self.faults is not None:
@@ -200,6 +206,7 @@ FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
     "bucket_quantum": ("runtime", "bucket_quantum"),
     "max_layers": ("runtime", "max_layers"),
     "interpret": ("runtime", "interpret"),
+    "kernel_impl": ("runtime", "kernel_impl"),
     "device_slack": ("runtime", "device_slack"),
     "index_kind": ("index", "host"),
     "device_index": ("index", "device"),

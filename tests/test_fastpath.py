@@ -86,6 +86,69 @@ def test_fast_path_zero_per_layer_host_sync(fast_engine, monkeypatch, mode):
         eng.mc.mode = "bucket"
 
 
+def test_kernel_mode_single_pallas_dispatch(fast_engine, monkeypatch):
+    """Kernel mode is ONE fused Pallas dispatch per memoized layer
+    (acceptance criterion, ISSUE 7): with the search prologue forced to
+    its one-matmul form (``fused=True``), tracing the serving layer must
+    construct exactly one pallas_call — memo_attention — and nothing
+    else (no separate nn_search kernel, no gather kernel). Counted at
+    trace time by patching the ``pl`` module both kernel packages
+    share; both fixture layers reuse one jit entry, so one trace total."""
+    import repro.kernels.memo_attention.kernel as mk
+    eng, corpus = fast_engine
+    toks = jnp.asarray(corpus.sample(8)[0])
+    old_cache, old_mode = eng._jit_cache, eng.mc.mode
+    eng.mc.mode = "kernel"
+    eng.mc.kernel_impl = "pallas"        # pin the kernel (CPU would pick xla)
+    try:
+        eng._jit_cache = {}              # force a fresh trace under the patch
+        calls = []
+        real = mk.pl.pallas_call
+
+        def counting(*a, **k):
+            calls.append(a)
+            return real(*a, **k)
+
+        monkeypatch.setattr(mk.pl, "pallas_call", counting)
+        out, st = eng.infer({"tokens": toks})
+        assert len(calls) == 1
+        assert np.isfinite(np.asarray(out)).all()
+        assert st.n_layer_attempts == 8 * 2
+    finally:
+        eng._jit_cache = old_cache
+        eng.mc.mode = old_mode
+        eng.mc.kernel_impl = None
+
+
+def test_kernel_mode_varlen_matches_select(fast_engine):
+    """Variable-length batches serve through kernel mode (the lengths
+    operand masks padded keys per sequence) and match the select
+    reference; the length gate still forces misses for lengths with no
+    same-length entry."""
+    eng, corpus = fast_engine
+    toks = np.asarray(corpus.sample(6)[0])
+    lens = np.asarray([32, 32, 24, 17, 32, 24], np.int32)
+    for i, ln in enumerate(lens):
+        toks[i, ln:] = 0
+    batch = {"tokens": jnp.asarray(toks), "lengths": lens}
+    for thr in (-1e9, 0.6, 1e9):
+        eng.mc.mode = "select"
+        try:
+            ref_vl, _ = eng.infer(batch, threshold=thr)
+        finally:
+            eng.mc.mode = "bucket"
+        eng.mc.mode = "kernel"
+        try:
+            out, st = eng.infer(batch, threshold=thr)
+        finally:
+            eng.mc.mode = "bucket"
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_vl),
+                                   rtol=2e-3, atol=2e-3)
+        if thr == -1e9:
+            # only full-length rows can pass the length gate
+            assert st.n_hits == 3 * len(eng.layers)
+
+
 def test_host_path_syncs_per_layer(fast_engine, monkeypatch):
     """Sanity check for the counter itself: the host-synchronous path
     (device_fast_path=False) blocks at every layer, so the counting

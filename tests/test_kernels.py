@@ -139,6 +139,154 @@ def test_memo_no_hit_equals_flash():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("H,Hkv", [(4, 1), (8, 2)])
+def test_memo_matches_ref_gqa_groups(H, Hkv):
+    """GQA with group > 2: the hit path's APM·V must consume the RIGHT
+    shared K/V head per query head, on both implementations."""
+    B, S, dh, N = 3, 64, 16, 4
+    q, k, v = _qkv(jax.random.PRNGKey(10), B, S, H, Hkv, dh, jnp.float32)
+    db = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(11), (N, H, S, S)), -1)
+    hit_idx = jnp.array([2, 0, 3])
+    hit = jnp.array([1, 0, 1])
+    ref = memo_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), db, hit_idx, hit,
+                             causal=True).transpose(0, 2, 1, 3)
+    for impl in ("pallas", "xla"):
+        out = memo_attention(q, k, v, db, hit_idx, hit, causal=True,
+                             block_q=32, block_k=32,
+                             interpret=True if impl == "pallas" else None,
+                             impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=impl)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 16), (False, 8),
+                                           (True, None), (False, None)])
+def test_memo_masks_causal_sliding_window(causal, window):
+    """Mask composition on the miss path (causal × sliding window) with a
+    mixed batch: misses must match the masked oracle, hits ignore masks."""
+    B, S, H, dh, N = 4, 64, 2, 16, 3
+    q, k, v = _qkv(jax.random.PRNGKey(12), B, S, H, H, dh, jnp.float32)
+    db = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(13), (N, H, S, S)), -1)
+    hit_idx = jnp.array([1, 0, 2, 0])
+    hit = jnp.array([0, 1, 1, 0])
+    ref = memo_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), db, hit_idx, hit,
+                             causal=causal,
+                             window=window).transpose(0, 2, 1, 3)
+    for impl in ("pallas", "xla"):
+        out = memo_attention(q, k, v, db, hit_idx, hit, causal=causal,
+                             window=window, block_q=16, block_k=16,
+                             interpret=True if impl == "pallas" else None,
+                             impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=impl)
+
+
+def test_memo_int8_scale_boundaries():
+    """int8 fused dequant at the codec's scale boundaries: rows with a
+    max-magnitude element (code ±127), near-zero rows riding the 1e-4
+    scale floor, and mixed hit/miss — vs the dequantize-then-f32 oracle."""
+    from repro.core.codec import _quantize_rows
+    from repro.kernels.memo_attention.ref import memo_attention_q8_ref
+    B, S, H, dh, N = 3, 32, 2, 16, 4
+    q, k, v = _qkv(jax.random.PRNGKey(14), B, S, H, H, dh, jnp.float32)
+    apm = np.array(jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(15), (N, H, S, S)), -1))
+    apm[0, :, 0, 0] = 1.0          # a full-magnitude element → code 127
+    apm[1, :, 1, :] = 0.0          # all-zero row → scale floor path
+    codes, scales = _quantize_rows(apm)
+    hit_idx = jnp.array([0, 1, 3])
+    hit = jnp.array([1, 1, 0])
+    ref = memo_attention_q8_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), jnp.asarray(codes), jnp.asarray(scales),
+        hit_idx, hit, causal=True).transpose(0, 2, 1, 3)
+    for impl in ("pallas", "xla"):
+        out = memo_attention(q, k, v, jnp.asarray(codes), hit_idx, hit,
+                             db_scales=jnp.asarray(scales), causal=True,
+                             block_q=16, block_k=16,
+                             interpret=True if impl == "pallas" else None,
+                             impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=impl)
+
+
+def test_memo_ragged_seq_padding():
+    """S=96 with 64-blocks exercises the ops-level padding (the kernel
+    itself asserts tile alignment); parity vs the unpadded oracle."""
+    B, S, H, dh, N = 2, 96, 2, 16, 3
+    q, k, v = _qkv(jax.random.PRNGKey(16), B, S, H, H, dh, jnp.float32)
+    db = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(17), (N, H, S, S)), -1)
+    hit_idx = jnp.array([1, 0])
+    hit = jnp.array([1, 0])
+    ref = memo_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), db, hit_idx, hit,
+                             causal=True).transpose(0, 2, 1, 3)
+    for impl in ("pallas", "xla"):
+        out = memo_attention(q, k, v, db, hit_idx, hit, causal=True,
+                             block_q=64, block_k=64,
+                             interpret=True if impl == "pallas" else None,
+                             impl=impl)
+        assert out.shape == q.shape
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=impl)
+
+
+def test_memo_xla_impl_matches_pallas():
+    """The one-matmul XLA form and the tiled kernel are one contract:
+    identical outputs on a mixed batch (f16 DB and int8 DB)."""
+    from repro.core.codec import _quantize_rows
+    B, S, H, Hkv, dh, N = 4, 48, 4, 2, 16, 5
+    q, k, v = _qkv(jax.random.PRNGKey(18), B, S, H, Hkv, dh, jnp.float32)
+    apm = np.asarray(jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(19), (N, H, S, S)), -1))
+    hit_idx = jnp.array([0, 4, 2, 1])
+    hit = jnp.array([1, 0, 1, 0])
+    a = memo_attention(q, k, v, jnp.asarray(apm), hit_idx, hit, causal=True,
+                       block_q=16, block_k=16, interpret=True, impl="pallas")
+    b = memo_attention(q, k, v, jnp.asarray(apm), hit_idx, hit, causal=True,
+                       impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+    codes, scales = _quantize_rows(apm)
+    aq = memo_attention(q, k, v, jnp.asarray(codes), hit_idx, hit,
+                        db_scales=jnp.asarray(scales), causal=True,
+                        block_q=16, block_k=16, interpret=True, impl="pallas")
+    bq = memo_attention(q, k, v, jnp.asarray(codes), hit_idx, hit,
+                        db_scales=jnp.asarray(scales), causal=True,
+                        impl="xla")
+    np.testing.assert_allclose(np.asarray(aq), np.asarray(bq),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_memo_varlen_lengths():
+    """Variable-length batches through the ``lengths`` operand: each
+    sequence's valid rows match causal flash attention run on its own
+    sliced prefix (causal masking makes the slice exact)."""
+    B, S, H, dh = 3, 64, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(20), B, S, H, H, dh, jnp.float32)
+    lengths = jnp.array([64, 40, 17])
+    db = jnp.zeros((1, H, S, S))
+    zeros = jnp.zeros((B,), jnp.int32)
+    for impl in ("pallas", "xla"):
+        out = memo_attention(q, k, v, db, zeros, zeros, lengths=lengths,
+                             causal=True, block_q=16, block_k=16,
+                             interpret=True if impl == "pallas" else None,
+                             impl=impl)
+        for bi, L in enumerate([64, 40, 17]):
+            ref = flash_attention(q[bi:bi + 1, :L], k[bi:bi + 1, :L],
+                                  v[bi:bi + 1, :L], causal=True,
+                                  block_q=16, block_k=16, interpret=True)
+            np.testing.assert_allclose(np.asarray(out[bi, :L]),
+                                       np.asarray(ref[0]),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{impl} b={bi}")
+
+
 # ---------------------------------------------------------------- nn_search
 
 @pytest.mark.parametrize("B,N,dim,bq,bn", [
@@ -194,6 +342,29 @@ def test_nn_search_parity_vs_exact_index(B, N, dim, bq, bn):
     np.testing.assert_array_equal(np.asarray(idx), idx_ref[:, 0])
     np.testing.assert_allclose(np.sqrt(np.maximum(np.asarray(d2), 0.0)),
                                dist_ref[:, 0], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,N,dim,bq,bn", [
+    (3, 250, 16, 16, 64),    # B < block_q AND N % block_n != 0
+    (7, 130, 32, 8, 64),     # ragged DB tail with a norms sliver
+])
+def test_nn_search_with_db_norms(B, N, dim, bq, bn):
+    """The precomputed-norms sliver changes HBM traffic, not results:
+    bitwise-equal argmin and matching distances vs the norm-free kernel,
+    including the padded DB tail (padded norm entries are masked by
+    n_total)."""
+    rng = np.random.default_rng(B * 77 + N)
+    q = jnp.asarray(rng.normal(size=(B, dim)).astype(np.float32))
+    db = jnp.asarray(rng.normal(size=(N, dim)).astype(np.float32))
+    norms = jnp.sum(db * db, axis=-1)
+    d0, i0 = nn_search(q, db, block_q=bq, block_n=bn, interpret=True)
+    d1, i1 = nn_search(q, db, db_norms=norms, block_q=bq, block_n=bn,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=1e-5, atol=1e-5)
+    dr, ir = nn_search_ref(q, db)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(ir))
 
 
 def test_nn_search_exact_self_query():
