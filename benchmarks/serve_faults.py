@@ -20,14 +20,21 @@ disarm + ``recover()`` and a recovery phase. Per class it records
 
 Sessions are rebuilt per class via ``save`` + ``load`` of one
 calibrated store, so every class starts from the identical state (and
-the persistence path itself gets exercised once per class). A
-``persistence`` section additionally records that truncated /
-bit-flipped save files fail with a clean ``MemoStoreError``.
+the persistence path itself gets exercised once per class). Disk
+classes (DESIGN.md §2.11) serve with a capacity tier attached and
+additionally assert the tier DIRECTORY reopens clean afterwards. A
+``capacity`` section serves a store ~10x the host byte budget and
+gates the steady-state hit gap vs all-in-RAM (≤ 0.05); a
+``persistence`` section records that truncated / bit-flipped save
+files fail with a clean ``MemoStoreError`` and that a torn re-save
+never clobbers the existing good file.
 
 Emitted into BENCH_serve.json as the ``serve_faults`` section.
 Standalone (the CI chaos-smoke job)::
 
     PYTHONPATH=src python -m benchmarks.serve_faults --quick
+    PYTHONPATH=src python -m benchmarks.serve_faults --quick \\
+        --classes disk_write_io,journal_torn
 """
 from __future__ import annotations
 
@@ -64,7 +71,19 @@ SERVER_KW = {
                        "disable_after": 2},
     "maint_stall":    {"maint_retries": 0, "watchdog_s": 0.02},
     "queue_overflow": {"maint_put_timeout": 0.01},
+    # disk classes (DESIGN.md §2.11): checkpoint every apply so the
+    # crash point actually fires inside the fault window
+    "disk_write_io":    {},
+    "journal_torn":     {},
+    "checkpoint_crash": {"checkpoint_every": 1},
+    "mmap_bitflip":     {},
 }
+
+# classes that need a capacity tier attached to the session (the fault
+# points live inside CapacityTier) — they additionally assert that the
+# tier directory REOPENS clean after the trace (crash consistency)
+DISK_CLASSES = ("disk_write_io", "journal_torn", "checkpoint_crash",
+                "mmap_bitflip")
 
 
 def _build_and_save(path: str):
@@ -99,6 +118,24 @@ def _workload(corpus, rate: float, n_requests: int, seed: int):
     return wl
 
 
+def _hot_workload(corpus, rate: float, n_requests: int, seed: int,
+                  n_hot: int):
+    """A workload whose distinct-request set is capped at ``n_hot``
+    (sequence AND length fixed per hot item, so repeats can hit). The
+    capacity leg needs a working set that fits the host budget:
+    steady-state hit rate then measures what demotion cost, not cache
+    thrash from a working set no budget could hold."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    items = []
+    for _ in range(max(1, n_hot)):
+        bucket = int(rng.choice(BUCKETS))
+        length = bucket - int(rng.choice([0, 2]))
+        items.append(corpus.sample(1, rng)[0][0, :length])
+    return [(float(arrivals[i]), items[int(rng.integers(0, len(items)))])
+            for i in range(n_requests)]
+
+
 def _phase_rate(stats, mark):
     """Hit rate over the window since ``mark`` (a (hits, attempts)
     tuple)."""
@@ -108,8 +145,15 @@ def _phase_rate(stats, mark):
 
 def _chaos_leg(cls, path, model, params, corpus, rate, n_requests):
     """One three-phase trace: warm → fault window → recover. ``cls`` is
-    a CHAOS_PRESETS key or None for the fault-free baseline."""
-    sess = MemoSession.load(path, model, params)
+    a CHAOS_PRESETS key or None for the fault-free baseline. Disk
+    classes run with a capacity tier attached and finish by reopening
+    the tier directory cold (``MemoSession.load(<dir>)``), asserting it
+    recovers to a store that passes ``verify_integrity``."""
+    disk = cls in DISK_CLASSES
+    capdir = tempfile.mkdtemp(prefix="memo_chaos_tier_") if disk else None
+    sess = MemoSession.load(
+        path, model, params,
+        overrides={"capacity_dir": capdir} if disk else None)
     inj = sess.engine.faults
     srv = sess.serve(buckets=BUCKETS, max_batch=BATCH, max_delay=4e-3,
                      async_maintenance=True,
@@ -141,7 +185,7 @@ def _chaos_leg(cls, path, model, params, corpus, rate, n_requests):
         srv.drain_maintenance(timeout=30, raise_errors=False)
         recovered_rate = _phase_rate(srv.stats, mark)
         lat_ms = np.asarray(lats) * 1e3
-        return {
+        leg = {
             "availability": completed / max(1, submitted),
             "n_submitted": submitted,
             "n_completed": completed,
@@ -152,6 +196,7 @@ def _chaos_leg(cls, path, model, params, corpus, rate, n_requests):
             "final_health": srv.health.value,
             "health_log": [(round(t, 4), h, why)
                            for t, h, why in srv.health_log],
+            "n_health_transitions": srv.n_health_transitions,
             "n_maint_shed": srv.n_maint_shed,
             "n_maint_retries": srv.n_maint_retries,
             "n_exact_batches": srv.n_exact_batches,
@@ -159,9 +204,92 @@ def _chaos_leg(cls, path, model, params, corpus, rate, n_requests):
             "n_evict_rejected": sess.store.stats.n_evict_rejected,
             "live_entries": sess.store.live_count,
         }
+        if disk:
+            leg["n_disk_errors"] = sess.store.stats.n_disk_errors
+            leg["n_disk_quarantined"] = \
+                sess.store.stats.n_disk_quarantined
     finally:
         inj.disarm()
         srv.close()
+    if disk:
+        # crash consistency: the tier directory must reopen cold
+        # (``close`` checkpointed best-effort; recovery replays the
+        # rest) to a store that passes verify_integrity, no matter
+        # what the class did to it
+        try:
+            re = MemoSession.load(capdir, model, params)
+            leg["reopen_verify_clean"] = \
+                not re.store.verify_integrity(quarantine=False)
+            leg["reopen_live_entries"] = re.store.live_count
+            leg["reopen_recovery"] = re.store.capacity.recovery
+        except MemoStoreError as e:
+            leg["reopen_verify_clean"] = False
+            leg["reopen_error"] = str(e)
+        shutil.rmtree(capdir, ignore_errors=True)
+    return leg
+
+
+def _capacity_leg(path, model, params, corpus, rate, n_requests):
+    """The big-memory acceptance leg (DESIGN.md §2.11): serve a store
+    ~10x the host byte budget from the capacity tier and compare
+    steady-state hit rate against the identical all-in-RAM session.
+    Each leg runs the SAME hot-set workload twice (distinct requests
+    sized to fit the host budget, the cold mass stays on disk) — pass 1
+    warms (promotions migrate hot rows disk → host → device), pass 2 is
+    the steady state that gets scored — so the gap isolates what
+    demotion truly cost."""
+
+    def two_pass(sess, wl):
+        srv = sess.serve(buckets=BUCKETS, max_batch=BATCH, max_delay=4e-3,
+                         async_maintenance=True)
+        srv.warmup()
+        try:
+            srv.run(list(wl))
+            srv.drain_maintenance(timeout=30, raise_errors=False)
+            mark = (srv.stats.n_hits, srv.stats.n_layer_attempts)
+            srv.run(list(wl))
+            srv.drain_maintenance(timeout=30, raise_errors=False)
+            return _phase_rate(srv.stats, mark), srv
+        finally:
+            srv.close()
+
+    ram = MemoSession.load(path, model, params)
+    n_total = ram.store.live_count
+    entry_nbytes = ram.store.entry_nbytes
+    # host budget = a tenth of the store → the tier holds ~10x the
+    # bytes RAM is allowed; everything else rides the disk tier. The
+    # hot set is a quarter of that budget, leaving headroom for the
+    # per-layer entries each request admits plus warmup junk.
+    host_entries = max(1, n_total // 10)
+    wl = _hot_workload(corpus, rate, n_requests, 29,
+                       max(2, host_entries // 4))
+    hit_ram, _ = two_pass(ram, wl)
+
+    d = tempfile.mkdtemp(prefix="memo_chaos_capacity_")
+    try:
+        budget_mb = host_entries * entry_nbytes / 1e6
+        sess = MemoSession.load(
+            path, model, params,
+            overrides={"capacity_dir": os.path.join(d, "tier"),
+                       "budget_mb": budget_mb})
+        demoted = sess.store.demote_to_budget()
+        sess.store.sync(force_full=True)
+        hit_disk, srv = two_pass(sess, wl)
+        return {
+            "n_entries": int(n_total),
+            "host_budget_entries": int(host_entries),
+            "n_demoted_at_start": len(demoted),
+            "bytes_ratio": float(n_total / host_entries),
+            "hit_rate_ram": float(hit_ram),
+            "hit_rate_capacity": float(hit_disk),
+            "hit_gap": max(0.0, float(hit_ram) - float(hit_disk)),
+            "n_promoted": sess.store.stats.n_promoted,
+            "n_demoted": sess.store.stats.n_demoted,
+            "n_checkpoints": srv.n_checkpoints,
+            "final_health": srv.health.value,
+        }
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
 
 
 def _persistence_leg(path, model, params):
@@ -197,17 +325,35 @@ def _persistence_leg(path, model, params):
             out["save_truncate_clean_error"] = False
         except MemoStoreError:
             out["save_truncate_clean_error"] = True
+
+        # atomic save: a crash mid-save over an EXISTING good file must
+        # leave the old bytes serving (temp + os.replace, never inplace)
+        good = os.path.join(d, "good.m3")
+        sess.save(good)
+        sess.engine.faults.arm("session.save_truncate", at=1, count=1)
+        sess.save(good)                       # torn re-save, same path
+        try:
+            out["atomic_save_old_survives"] = (
+                MemoSession.load(good, model, params)
+                .store.live_count == sess.store.live_count)
+        except MemoStoreError:
+            out["atomic_save_old_survives"] = False
     finally:
         shutil.rmtree(d, ignore_errors=True)
     return out
 
 
 @functools.lru_cache(maxsize=2)
-def collect(quick: bool = False):
+def collect(quick: bool = False, classes: tuple = None):
+    if classes:
+        unknown = sorted(set(classes) - set(CHAOS_PRESETS))
+        if unknown:
+            raise ValueError(f"unknown chaos classes {unknown}; known: "
+                             f"{sorted(CHAOS_PRESETS)}")
     n_requests = 16 if quick else 32          # per phase
     d = tempfile.mkdtemp(prefix="memo_chaos_store_")
     try:
-        path = os.path.join(d, "store.npz")
+        path = os.path.join(d, "store.m3")
         model, params, corpus, rate = _build_and_save(path)
         out = {"config": {"arch": "bert_base (reduced, 2 layers)",
                           "requests_per_phase": n_requests,
@@ -219,7 +365,7 @@ def collect(quick: bool = False):
                           n_requests)
         out["baseline"] = base
         out["classes"] = {}
-        for cls in CHAOS_PRESETS:
+        for cls in (classes or CHAOS_PRESETS):
             t0 = time.time()
             leg = _chaos_leg(cls, path, model, params, corpus, rate,
                              n_requests)
@@ -228,7 +374,12 @@ def collect(quick: bool = False):
                 - leg["hit_rate_after_recovery"])
             leg["wall_s"] = round(time.time() - t0, 2)
             out["classes"][cls] = leg
-        out["persistence"] = _persistence_leg(path, model, params)
+        # The capacity + persistence legs ride the full run, or any run
+        # that explicitly selects a disk class (the machinery they gate).
+        if not classes or set(classes) & set(DISK_CLASSES):
+            out["capacity"] = _capacity_leg(path, model, params, corpus,
+                                            rate, n_requests)
+            out["persistence"] = _persistence_leg(path, model, params)
     finally:
         shutil.rmtree(d, ignore_errors=True)
     return out
@@ -243,23 +394,46 @@ def run():
                f"hit_rec={leg['hit_rate_after_recovery']:.3f};"
                f"gap={leg['hit_recovery_gap']:.3f};"
                f"health={leg['final_health']}")
-    p = out["persistence"]
-    yield ("serve_faults_persistence", 0.0,
-           f"truncated={p['truncated_clean_error']};"
-           f"bitflip={p['bitflip_clean_error']};"
-           f"save_truncate={p['save_truncate_clean_error']}")
+    p = out.get("persistence")
+    if p:
+        yield ("serve_faults_persistence", 0.0,
+               f"truncated={p['truncated_clean_error']};"
+               f"bitflip={p['bitflip_clean_error']};"
+               f"save_truncate={p['save_truncate_clean_error']};"
+               f"atomic={p['atomic_save_old_survives']}")
+    cap = out.get("capacity")
+    if cap:
+        yield ("serve_faults_capacity", cap["hit_gap"] * 1e3,
+               f"ratio={cap['bytes_ratio']:.1f}x;"
+               f"hit_ram={cap['hit_rate_ram']:.3f};"
+               f"hit_cap={cap['hit_rate_capacity']:.3f};"
+               f"gap={cap['hit_gap']:.3f};"
+               f"promoted={cap['n_promoted']}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="16 requests/phase (the CI chaos-smoke size)")
+    ap.add_argument("--classes", default=None,
+                    help="comma-separated chaos classes to run (default: "
+                         "all; the capacity + persistence legs run on the "
+                         "full set or whenever a disk class is selected)")
     args = ap.parse_args()
-    out = collect(quick=args.quick)
+    classes = None
+    if args.classes:
+        classes = tuple(c.strip() for c in args.classes.split(",")
+                        if c.strip())
+        unknown = sorted(set(classes) - set(CHAOS_PRESETS))
+        if unknown:
+            raise SystemExit(f"unknown chaos classes {unknown}; known: "
+                             f"{sorted(CHAOS_PRESETS)}")
+    out = collect(quick=args.quick, classes=classes)
     failures = []
     for cls, leg in out["classes"].items():
         ok_avail = leg["availability"] >= 1.0
         ok_gap = leg["hit_recovery_gap"] <= 0.05
+        ok_reopen = leg.get("reopen_verify_clean", True)
         print(f"{cls:>16}: avail={leg['availability']:.3f} "
               f"p99={leg['p99_ms']:.1f}ms "
               f"hit_rec={leg['hit_rate_after_recovery']:.3f} "
@@ -268,17 +442,38 @@ def main():
               f"shed={leg['n_maint_shed']} "
               f"retries={leg['n_maint_retries']} "
               f"quarantined={leg['n_quarantined']}"
-              + ("" if ok_avail and ok_gap else "   <-- FAIL"))
+              + (f" reopen={'ok' if ok_reopen else 'DIRTY'}"
+                 if cls in DISK_CLASSES else "")
+              + ("" if ok_avail and ok_gap and ok_reopen
+                 else "   <-- FAIL"))
         if not ok_avail:
             failures.append(f"{cls}: availability "
                             f"{leg['availability']:.3f} < 1.0")
         if not ok_gap:
             failures.append(f"{cls}: hit_recovery_gap "
                             f"{leg['hit_recovery_gap']:.3f} > 0.05")
+        if not ok_reopen:
+            failures.append(
+                f"{cls}: capacity dir did not reopen clean "
+                f"({leg.get('reopen_error', 'verify_integrity dirty')})")
         if leg["final_health"] != Health.HEALTHY.value:
             failures.append(f"{cls}: final health "
                             f"{leg['final_health']} != healthy")
-    for k, v in out["persistence"].items():
+    cap = out.get("capacity")
+    if cap:
+        ok_cap = cap["hit_gap"] <= 0.05
+        print(f"{'capacity':>16}: ratio={cap['bytes_ratio']:.1f}x "
+              f"hit_ram={cap['hit_rate_ram']:.3f} "
+              f"hit_cap={cap['hit_rate_capacity']:.3f} "
+              f"gap={cap['hit_gap']:.3f} "
+              f"promoted={cap['n_promoted']} "
+              f"demoted={cap['n_demoted']} "
+              f"health={cap['final_health']}"
+              + ("" if ok_cap else "   <-- FAIL"))
+        if not ok_cap:
+            failures.append(f"capacity: hit_gap {cap['hit_gap']:.3f} "
+                            f"> 0.05 at {cap['bytes_ratio']:.1f}x budget")
+    for k, v in (out.get("persistence") or {}).items():
         print(f"{'persistence':>16}: {k}={v}"
               + ("" if v else "   <-- FAIL"))
         if not v:

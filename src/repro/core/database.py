@@ -230,6 +230,39 @@ class AttentionDB:
             slots = np.concatenate([slots, self.add(apms[n_reuse:])])
         return slots
 
+    def put_parts(self, parts: Sequence[np.ndarray],
+                  checksums: Optional[Sequence[np.ndarray]] = None
+                  ) -> np.ndarray:
+        """``put`` for rows ALREADY in the codec's encoded form — the
+        capacity tier's promotion path (DESIGN.md §2.11): the stored
+        bytes land in the arenas verbatim, so a demote → promote round
+        trip is bit-identical for every codec. ``checksums`` (per part,
+        as recorded at first admission) are adopted when given and
+        recomputed otherwise."""
+        parts = tuple(np.ascontiguousarray(np.asarray(p, a.dtype))
+                      for p, a in zip(parts, self._arenas))
+        b = int(parts[0].shape[0])
+        if b == 0:
+            return np.zeros(0, np.int64)
+        if checksums is None:
+            checksums = [self._crc_rows(p) for p in parts]
+        n_reuse = min(b, len(self._free))
+        slots = np.asarray([self._free.pop() for _ in range(n_reuse)],
+                           np.int64)
+        if b > n_reuse:
+            tail = b - n_reuse
+            self._grow_to(self._n + tail)
+            slots = np.concatenate(
+                [slots, np.arange(self._n, self._n + tail)])
+            self._n += tail
+        for a, p in zip(self._arenas, parts):
+            a[slots] = p
+        for csum, c in zip(self.checksums, checksums):
+            csum[slots] = np.asarray(c, np.uint32)
+        self.reuse_counts[slots] = 0
+        self._live[slots] = True
+        return slots
+
     def overwrite(self, slots: Sequence[int], apms: np.ndarray) -> None:
         """In-place update of existing slots (no allocation, no id churn)."""
         slots = np.asarray(slots).reshape(-1)

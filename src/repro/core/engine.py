@@ -303,7 +303,11 @@ class MemoEngine:
             device_index_kind=mc.device_index,
             cluster_crossover=mc.cluster_crossover,
             nprobe=mc.nprobe, n_clusters=mc.n_clusters,
-            eviction=mc.eviction.kind, faults=self.faults)
+            eviction=mc.eviction.kind, faults=self.faults,
+            capacity_dir=mc.capacity.dir,
+            capacity_budget_mb=mc.capacity.budget_mb,
+            capacity_fsync=mc.capacity.fsync,
+            capacity_stall_s=mc.capacity.stall_s)
 
     # ------------------------------------------------------------------ build
     def build(self, key, batches: Sequence[dict], *, train_pairs=512,
@@ -953,6 +957,19 @@ class MemoEngine:
         apms = np.concatenate([a for a, _, _ in pend], 0)
         embs = np.concatenate([e for _, e, _ in pend], 0)
         lens = np.concatenate([l for _, _, l in pend], 0)
+        cspec = self.mc.capacity
+        if (apms.shape[0] and cspec.promote
+                and self.store.capacity is not None):
+            # async promotion (DESIGN.md §2.11): misses the disk tier can
+            # satisfy are re-admitted bit-identically from their durable
+            # copies instead of re-encoded from the fresh capture — the
+            # promoted rows ride the same delta sync as the admissions
+            promoted = self.store.promote_for(
+                embs, lens, threshold=float(self.mc.threshold),
+                max_promote=int(cspec.promote_max))
+            if promoted.any():
+                keep = ~promoted
+                apms, embs, lens = apms[keep], embs[keep], lens[keep]
         if apms.shape[0]:
             slots = self.store.admit(apms, embs, lens)
             st.add_admitted(int(slots.size))

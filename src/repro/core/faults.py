@@ -58,10 +58,23 @@ FAULT_POINTS: Dict[str, str] = {
                             "applying (staleness-watchdog food)",
     "server.queue_overflow": "MemoServer: treat the maintenance queue as "
                              "full (payload must be shed, not the batch)",
-    "session.save_truncate": "MemoSession.save: truncate the written "
-                             ".npz (torn write)",
+    "session.save_truncate": "MemoSession.save: crash between the temp "
+                             "write and os.replace (torn temp, target "
+                             "untouched)",
     "session.load_bitflip":  "MemoSession.load: flip one byte of a store "
                              "array before checksum verification",
+    # capacity tier (DESIGN.md §2.11)
+    "capacity.disk_write_io":   "CapacityTier.append: raise OSError before "
+                                "any mutation — or, with a ``stall_s`` "
+                                "rider, sleep (promotion stall)",
+    "capacity.journal_torn":    "Journal.append: only a prefix of the "
+                                "frame hits the disk, then the append "
+                                "raises (crash mid-WAL-write)",
+    "capacity.checkpoint_crash": "CapacityTier.checkpoint: die after the "
+                                 "manifest temp write, before os.replace "
+                                 "(old manifest + journal survive)",
+    "capacity.mmap_bitflip":    "CapacityTier.append: flip one arena byte "
+                                "after its row checksum was recorded",
 }
 
 
@@ -177,4 +190,10 @@ CHAOS_PRESETS: Dict[str, Dict[str, Dict]] = {
     "maint_crash":    {"server.maint_crash": {"p": 1.0}},
     "maint_stall":    {"server.maint_stall": {"p": 0.4, "stall_s": 0.05}},
     "queue_overflow": {"server.queue_overflow": {"p": 1.0}},
+    # disk-fault classes (capacity tier, DESIGN.md §2.11): serving must
+    # ride each out at RAM speed (DISK_DEGRADED, never unavailable)
+    "disk_write_io":    {"capacity.disk_write_io": {"p": 1.0}},
+    "journal_torn":     {"capacity.journal_torn": {"p": 1.0}},
+    "checkpoint_crash": {"capacity.checkpoint_crash": {"p": 1.0}},
+    "mmap_bitflip":     {"capacity.mmap_bitflip": {"every": 2}},
 }

@@ -63,9 +63,12 @@ from repro.core.faults import fire
 
 class Health(enum.Enum):
     """The serving-health ladder (DESIGN.md §2.9). Order matters:
-    each step gives up store freshness, then the memo path, never the
-    request."""
+    each step gives up store durability, then freshness, then the memo
+    path, never the request."""
     HEALTHY = "healthy"
+    DISK_DEGRADED = "disk_degraded"  # capacity tier detached: serve from
+    #                                  RAM at full speed, no durability /
+    #                                  demotion (recover() reattaches)
     DEGRADED = "degraded"            # serve last snapshot; shed maintenance
     MEMO_DISABLED = "memo_disabled"  # exact attention; no maintenance
 
@@ -119,7 +122,9 @@ class MemoServer:
                  batch_quantum: int = 4, async_maintenance: bool = True,
                  maint_queue_depth: int = 4, maint_retries: int = 2,
                  maint_backoff_s: float = 0.02, watchdog_s: float = 30.0,
-                 disable_after: int = 3, maint_put_timeout: float = 0.25):
+                 disable_after: int = 3, maint_put_timeout: float = 0.25,
+                 health_log_cap: int = 64,
+                 checkpoint_every: Optional[int] = None):
         if engine.store is None:
             raise RuntimeError("build() the engine before serving")
         if not engine._use_fast_path():
@@ -157,7 +162,18 @@ class MemoServer:
         self.disable_after = max(1, int(disable_after))
         self.maint_put_timeout = float(maint_put_timeout)
         self.health = Health.HEALTHY
-        self.health_log: List[Tuple[float, str, str]] = []
+        # BOUNDED transition history: a flapping fault must not grow
+        # memory without limit over a long serve; n_health_transitions
+        # keeps the total count honest past the ring's horizon
+        self.health_log: deque = deque(maxlen=max(1, int(health_log_cap)))
+        self.n_health_transitions = 0
+        # capacity-tier checkpoint cadence (DESIGN.md §2.11): flush the
+        # WAL into a fresh shadow manifest every N applied payloads
+        self.checkpoint_every = int(
+            engine.mc.capacity.checkpoint_every if checkpoint_every is None
+            else checkpoint_every)
+        self._applies_since_ckpt = 0
+        self.n_checkpoints = 0
         self.n_maint_shed = 0             # payloads dropped, never requests
         self.n_maint_retries = 0
         self.n_exact_batches = 0          # batches served in MEMO_DISABLED
@@ -285,6 +301,7 @@ class MemoServer:
                 self._enqueue_payload(payload)
             else:
                 eng.apply_maintenance(payload, stats=self.stats)
+                self._after_apply()
         self.stats.merge(st)
         self.n_batches += 1
         done = self._now()
@@ -304,7 +321,35 @@ class MemoServer:
             if self.health is health:
                 return
             self.health = health
+            self.n_health_transitions += 1
             self.health_log.append((self._now(), health.value, reason))
+
+    def _note_disk(self) -> None:
+        """Walk HEALTHY down to DISK_DEGRADED when the capacity tier has
+        detached (disk I/O error, stalled promotion, failed checkpoint).
+        Never touches DEGRADED/MEMO_DISABLED — losing the disk tier is
+        the mildest rung — and never auto-heals: reattaching the tier is
+        ``recover()``'s job."""
+        store = self.engine.store
+        if store.capacity_error is not None \
+                and self.health is Health.HEALTHY:
+            self._set_health(
+                Health.DISK_DEGRADED,
+                f"capacity tier detached ({store.capacity_error}); "
+                f"serving RAM-only (recover() to reattach)")
+
+    def _after_apply(self) -> None:
+        """Post-payload bookkeeping on the maintenance actor: capacity
+        checkpoint cadence + disk-health probe. Checkpoint failures
+        detach the tier inside ``store.checkpoint`` (never raise)."""
+        store = self.engine.store
+        if store.capacity_ok:
+            self._applies_since_ckpt += 1
+            if self._applies_since_ckpt >= max(1, self.checkpoint_every):
+                self._applies_since_ckpt = 0
+                if store.checkpoint():
+                    self.n_checkpoints += 1
+        self._note_disk()
 
     def _check_worker(self) -> None:
         """Serving-thread supervision, once per batch: restart a dead
@@ -324,6 +369,7 @@ class MemoServer:
                 Health.DEGRADED,
                 f"maintenance stalled > {self.watchdog_s:.3g}s "
                 f"(staleness watchdog)")
+        self._note_disk()
 
     def _enqueue_payload(self, payload) -> None:
         """Hand one payload to the worker, shedding — never blocking the
@@ -394,6 +440,7 @@ class MemoServer:
                 self._note_failure()
                 return
             self._note_success()
+            self._after_apply()
             return
 
     def _note_failure(self) -> None:
@@ -478,8 +525,14 @@ class MemoServer:
         mirrors with a forced full sync, restart the worker if it died,
         and reset health to HEALTHY. The host tier survives worker
         crashes and shed payloads untouched, so post-recovery hit rate
-        returns to the fault-free level (minus quarantined entries)."""
+        returns to the fault-free level (minus quarantined entries).
+        A detached capacity tier is re-opened (journal replay + CRC
+        sweep) and re-checkpointed; if the disk stays broken the tier
+        stays detached and serving continues RAM-only."""
         store = self.engine.store
+        if store.capacity_error is not None:
+            if store.reattach_capacity():
+                store.checkpoint()
         quarantined = store.verify_integrity(quarantine=True)
         store.sync(force_full=True)
         if self.async_maintenance and self._maint_q is not None \
@@ -492,9 +545,14 @@ class MemoServer:
         self.maintenance_errors = []
         self._set_health(Health.HEALTHY, "recovered: device tier "
                          "re-materialized from host mirrors")
+        self._note_disk()       # a still-broken disk re-degrades at once
         return {"quarantined": len(quarantined),
                 "live_entries": store.live_count,
-                "generation": store.generation}
+                "generation": store.generation,
+                # None when no capacity dir is configured — only a real
+                # tier can be meaningfully (not-)ok
+                "capacity_ok": (store.capacity_ok
+                                if store._capacity_dir else None)}
 
     def close(self):
         if self._worker is not None:
@@ -507,6 +565,11 @@ class MemoServer:
                     continue
             w.join(timeout=30)
             self._worker = None
+        # parting durability: fold the WAL tail into a clean manifest so
+        # a reopen replays nothing (best-effort; failures just detach)
+        store = self.engine.store
+        if store is not None and store.capacity_ok:
+            self.engine.store.checkpoint()
 
     def __enter__(self):
         return self

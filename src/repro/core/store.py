@@ -45,12 +45,14 @@ policy — resolve through the string-keyed registries
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.capacity import CapacityTier
 from repro.core.database import AttentionDB, DeviceDB, pad_delta_pow2
 from repro.core.faults import FaultInjector, MemoStoreError, fire
 from repro.core.index import TOMBSTONE, ClusteredDeviceIndex, DeviceIndex
@@ -94,6 +96,11 @@ class StoreStats:
     bytes_full: int = 0           # bytes moved by full re-materializations
     n_quarantined: int = 0        # entries tombstoned on checksum mismatch
     n_evict_rejected: int = 0     # bogus policy slots the store refused
+    # capacity tier (DESIGN.md §2.11)
+    n_demoted: int = 0            # evictions that kept a disk copy (cooled)
+    n_promoted: int = 0           # disk rows re-admitted into the host tier
+    n_disk_quarantined: int = 0   # disk rows retired on checksum mismatch
+    n_disk_errors: int = 0        # tier ops that failed (→ RAM-only)
 
     @property
     def bytes_total(self) -> int:
@@ -112,7 +119,11 @@ class MemoStore:
                  cluster_crossover: int = 4096, nprobe: int = 16,
                  n_clusters: Optional[int] = None,
                  eviction: str = "clock",
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 capacity_dir: Optional[str] = None,
+                 capacity_budget_mb: Optional[float] = None,
+                 capacity_fsync: bool = True,
+                 capacity_stall_s: float = 5.0):
         self.apm_shape = tuple(apm_shape)
         self.embed_dim = embed_dim
         self.index_kind = index_kind
@@ -163,6 +174,24 @@ class MemoStore:
         # device tier (materialized by the first sync)
         self.device_db: Optional[DeviceDB] = None
         self.device_index: Optional[DeviceIndex] = None
+        # capacity tier (DESIGN.md §2.11): the durable mmap-backed disk
+        # tier. Eviction becomes demotion (host copy dropped, disk copy
+        # cooled) and misses can promote disk → host → device. Any disk
+        # error detaches the tier (``capacity_error`` set) — serving
+        # continues RAM-only; ``reattach_capacity`` re-opens it.
+        self._capacity_dir = capacity_dir
+        self._capacity_budget_mb = capacity_budget_mb
+        self._capacity_fsync = capacity_fsync
+        self._capacity_stall_s = float(capacity_stall_s)
+        self.capacity: Optional[CapacityTier] = None
+        self.capacity_error: Optional[str] = None
+        self._host_to_disk: Dict[int, int] = {}
+        self._disk_to_host: Dict[int, int] = {}
+        if capacity_dir is not None:
+            try:
+                self._open_capacity_locked()
+            except Exception as e:       # noqa: BLE001 — degrade, don't die
+                self._capacity_fail(e)
 
     # ------------------------------------------------------------ accounting
     @property
@@ -232,6 +261,242 @@ class MemoStore:
         slots = np.asarray(slots).reshape(-1)
         return self._embs_host[slots].copy()
 
+    # ------------------------------------------------------- capacity tier
+    @property
+    def capacity_ok(self) -> bool:
+        """True while the disk tier is attached and error-free."""
+        return self.capacity is not None and self.capacity_error is None
+
+    def _open_capacity_locked(self) -> None:
+        budget = (None if self._capacity_budget_mb is None
+                  else int(float(self._capacity_budget_mb) * 1e6))
+        self.capacity = CapacityTier(
+            self._capacity_dir, codec=self.db.codec,
+            embed_dim=self.embed_dim, capacity=self.db.capacity,
+            budget_bytes=budget, faults=self._faults,
+            fsync=self._capacity_fsync)
+        self.capacity.on_retire = self._on_disk_retire
+        # a recovered manifest carries the calibration it was
+        # checkpointed under — adopt it so a dir-load serves with the
+        # sim map the entries were admitted against
+        cal = (self.capacity.extra_meta or {}).get("sim_cal")
+        if cal is not None and len(cal) == 2:
+            self.sim_cal = (float(cal[0]), float(cal[1]))
+
+    def _capacity_fail(self, e: BaseException) -> None:
+        """Disk fault: flag the tier offline (RAM-only serving) — never
+        raise into admission/eviction/serving (DESIGN.md §2.11)."""
+        self.capacity_error = f"{type(e).__name__}: {e}"
+        self.stats.n_disk_errors += 1
+
+    def _on_disk_retire(self, slots) -> None:
+        """Tier callback: disk rows retired (budget/quarantine) — drop
+        any host↔disk mapping so a recycled disk slot can't alias."""
+        for d in np.asarray(slots).reshape(-1):
+            h = self._disk_to_host.pop(int(d), None)
+            if h is not None:
+                self._host_to_disk.pop(h, None)
+
+    def _capacity_op(self, fn, *args, **kwargs):
+        """Run one tier op with the stall watchdog: an op slower than
+        ``capacity_stall_s`` (an injected ``stall_s`` rider, a hung
+        disk) fails the tier just like an IO error — promotion stalls
+        degrade to RAM-only serving, never block it indefinitely."""
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        dt = time.perf_counter() - t0
+        if dt > self._capacity_stall_s:
+            raise TimeoutError(
+                f"capacity tier op {getattr(fn, '__name__', fn)!r} took "
+                f"{dt:.3f}s (stall threshold {self._capacity_stall_s}s)")
+        return out
+
+    def _mirror_to_capacity_locked(self, slots) -> None:
+        """Write-through: durably append the given host slots' encoded
+        rows (+ their recorded checksums) to the disk tier. Already
+        mirrored slots are skipped — demotion is then free (drop the
+        host copy; the disk copy is the cooled entry)."""
+        fresh = [int(s) for s in np.asarray(slots).reshape(-1)
+                 if int(s) not in self._host_to_disk]
+        if not fresh:
+            return
+        arr = np.asarray(fresh, np.int64)
+        parts = self.db.parts_at(arr)
+        csums = [c[arr] for c in self.db.checksums]
+        dslots = self._capacity_op(
+            self.capacity.append, parts, self._embs_host[arr],
+            self._lens_host[arr], csums)
+        for h, d in zip(fresh, dslots):
+            self._host_to_disk[h] = int(d)
+            self._disk_to_host[int(d)] = h
+
+    def promote_for(self, embs, lengths=None, *, threshold: float,
+                    max_promote: int = 64) -> np.ndarray:
+        """Asynchronous promotion disk → host → device: search the disk
+        tier for the given miss embeddings; rows whose calibrated
+        predicted similarity clears ``threshold`` (and whose stored
+        length matches) are re-admitted into the host arena
+        *bit-identically* (``put_parts``) after a per-row CRC re-check
+        — corrupt disk rows are quarantined through the retire path.
+        Promoted slots are dirty; the next generation-counted delta
+        sync ships them to the device tier (the publish protocol is
+        unchanged). Returns a (B,) bool mask of queries satisfied by a
+        disk-resident entry (already-resident matches count — their
+        capture need not be re-admitted)."""
+        embs = np.asarray(embs, np.float32)
+        B = embs.shape[0]
+        satisfied = np.zeros(B, bool)
+        if B == 0 or not self.capacity_ok:
+            return satisfied
+        with self._lock:
+            tier = self.capacity
+            lens = (np.full(B, self.default_len, np.int32)
+                    if lengths is None
+                    else np.asarray(lengths, np.int32).reshape(-1))
+            try:
+                d2, dslots = self._capacity_op(tier.search, embs, 1)
+            except Exception as e:      # noqa: BLE001 — degrade
+                self._capacity_fail(e)
+                return satisfied
+            a, b = self.sim_cal
+            sim = a * np.sqrt(np.maximum(d2[:, 0], 0.0)) + b
+            chosen = np.full(B, -1, np.int64)   # query → disk slot
+            picks: List[int] = []               # unique disk slots to pull
+            for i in range(B):
+                d = int(dslots[i, 0])
+                if d < 0 or sim[i] < float(threshold) \
+                        or int(tier._lens[d]) != int(lens[i]):
+                    continue
+                h = self._disk_to_host.get(d)
+                if h is not None and self.db._live[h]:
+                    satisfied[i] = True         # already resident
+                    continue
+                if d in picks or len(picks) < int(max_promote):
+                    satisfied[i] = True
+                    chosen[i] = d
+                    if d not in picks:
+                        picks.append(d)
+            if not picks:
+                return satisfied
+            dlist = np.asarray(picks, np.int64)
+            try:
+                parts, dembs, dlens, dcsums = self._capacity_op(
+                    tier.rows_at, dlist)
+            except Exception as e:      # noqa: BLE001 — degrade
+                self._capacity_fail(e)
+                return np.zeros(B, bool)
+            good = np.ones(dlist.size, bool)
+            for p, c in zip(parts, dcsums):
+                good &= AttentionDB._crc_rows(p) == c
+            if not good.all():
+                bad = dlist[~good]
+                try:
+                    tier.retire(bad)
+                except Exception as e:  # noqa: BLE001
+                    self._capacity_fail(e)
+                self.stats.n_disk_quarantined += int(bad.size)
+                satisfied[np.isin(chosen, bad)] = False
+                dlist = dlist[good]
+                parts = tuple(p[good] for p in parts)
+                dembs, dlens = dembs[good], dlens[good]
+                dcsums = tuple(c[good] for c in dcsums)
+            if dlist.size == 0:
+                return satisfied
+            cap = self.budget_entries
+            if cap is not None:
+                over = self.live_count + int(dlist.size) - cap
+                if over > 0:
+                    self.evict(over)
+            slots = self.db.put_parts(parts, dcsums)
+            self._ensure_emb_capacity(int(slots.max()) + 1)
+            self._embs_host[slots] = dembs
+            self._lens_host[slots] = dlens
+            if self.index is not self.device_index:
+                self.index.assign(slots, dembs)
+            self._dirty.update(int(s) for s in slots)
+            self.generation += 1
+            self.stats.n_promoted += int(slots.size)
+            tier.note_reuse(dlist)
+            for h, d in zip(slots, dlist):
+                self._host_to_disk[int(h)] = int(d)
+                self._disk_to_host[int(d)] = int(h)
+        return satisfied
+
+    def checkpoint(self) -> bool:
+        """Flush the disk tier's WAL into a fresh shadow manifest (the
+        supervised worker calls this every ``checkpoint_every`` applied
+        payloads). Failures detach the tier, never raise."""
+        with self._lock:
+            if not self.capacity_ok:
+                return False
+            try:
+                self._capacity_op(
+                    self.capacity.checkpoint,
+                    {"sim_cal": [float(self.sim_cal[0]),
+                                 float(self.sim_cal[1])]})
+                return True
+            except Exception as e:      # noqa: BLE001 — degrade
+                self._capacity_fail(e)
+                return False
+
+    def reattach_capacity(self) -> bool:
+        """Re-open the capacity tier after a disk fault (the
+        ``MemoServer.recover`` path): recover the directory, clear the
+        error, rebuild the host↔disk mapping by checksum (so entries
+        already on disk are not duplicated) and write-through anything
+        the disk missed during the outage."""
+        with self._lock:
+            if self._capacity_dir is None:
+                return False
+            old, self.capacity = self.capacity, None
+            if old is not None:
+                try:
+                    old.close()
+                except Exception:       # noqa: BLE001 — already failed
+                    pass
+            self.capacity_error = None
+            self._host_to_disk.clear()
+            self._disk_to_host.clear()
+            try:
+                self._open_capacity_locked()
+                self._remirror_locked()
+                return True
+            except Exception as e:      # noqa: BLE001 — stay detached
+                self._capacity_fail(e)
+                return False
+
+    def _remirror_locked(self) -> None:
+        """Reconcile host tier → disk tier: map host entries to disk
+        rows whose primary-part checksum matches (no duplicate
+        appends), then write through the rest."""
+        tier = self.capacity
+        by_csum: Dict[int, int] = {}
+        for d in tier.live_slots:
+            by_csum.setdefault(int(tier._csums[0][d]), int(d))
+        unmapped: List[int] = []
+        for h in np.flatnonzero(self.db.live_mask):
+            h = int(h)
+            if h in self._host_to_disk:
+                continue
+            d = by_csum.get(int(self.db.checksums[0][h]))
+            if d is not None and d not in self._disk_to_host:
+                self._host_to_disk[h] = d
+                self._disk_to_host[d] = h
+            else:
+                unmapped.append(h)
+        if unmapped:
+            self._mirror_to_capacity_locked(unmapped)
+
+    def demote_to_budget(self) -> List[int]:
+        """Cool the host tier down to its byte budget (capacity-leg
+        benchmarks; a plain evict when no disk tier is attached — with
+        one, every evicted entry keeps its durable disk copy)."""
+        cap = self.budget_entries
+        if cap is None:
+            return []
+        over = self.live_count - cap
+        return self.evict(over) if over > 0 else []
+
     # --------------------------------------------------------------- admit
     def _ensure_emb_capacity(self, need: int) -> None:
         cap = self._embs_host.shape[0]
@@ -286,6 +551,16 @@ class MemoStore:
         self._dirty.update(int(s) for s in slots)
         self.generation += 1
         self.stats.n_admitted += n_new
+        # write-through (DESIGN.md §2.11): every admission is durably
+        # journaled + appended to the disk tier NOW, so demotion later
+        # is free (drop the host copy, keep the cooled disk copy). Runs
+        # before the corrupt_row fault site: the disk keeps the bytes
+        # as encoded, exactly like the recorded checksums do.
+        if self.capacity_ok:
+            try:
+                self._mirror_to_capacity_locked(slots)
+            except Exception as e:      # noqa: BLE001 — degrade
+                self._capacity_fail(e)
         if fire(self._faults, "store.corrupt_row") is not None:
             # bit-flip the newest row's primary arena part WITHOUT
             # refreshing its checksum — the sync-boundary verification
@@ -334,11 +609,28 @@ class MemoStore:
             self.stats.n_evicted += len(evicted)
         return evicted
 
-    def _retire_slots_locked(self, slots: List[int]) -> None:
+    def _retire_slots_locked(self, slots: List[int],
+                             demote: bool = True) -> None:
         """Shared eviction/quarantine bookkeeping: release the arena
         slots and tombstone every index row, so a hit on them is
-        impossible (the PR 2 tombstone invariant)."""
+        impossible (the PR 2 tombstone invariant). With a healthy
+        capacity tier and ``demote=True`` (eviction), the entries are
+        COOLED, not lost: any not yet mirrored are written through
+        first, then only the host copy is dropped — the disk row stays
+        live and promotable. Quarantine passes ``demote=False`` (its
+        host bytes are corrupt; the disk copy, written at admission
+        before the corruption, survives if it exists)."""
         db = self.db
+        if demote and self.capacity_ok:
+            try:
+                self._mirror_to_capacity_locked(slots)
+                self.stats.n_demoted += len(slots)
+            except Exception as e:      # noqa: BLE001 — plain eviction
+                self._capacity_fail(e)
+        for h in slots:                 # host slots recycle; unlink maps
+            d = self._host_to_disk.pop(int(h), None)
+            if d is not None:
+                self._disk_to_host.pop(d, None)
         db.release(slots)
         self.index.remove(slots)
         self._ensure_emb_capacity(max(slots) + 1)
@@ -351,7 +643,7 @@ class MemoStore:
     def _quarantine_locked(self, bad: np.ndarray) -> List[int]:
         bad = [int(s) for s in np.asarray(bad).reshape(-1)]
         if bad:
-            self._retire_slots_locked(bad)
+            self._retire_slots_locked(bad, demote=False)
             self.stats.n_quarantined += len(bad)
         return bad
 
@@ -361,8 +653,20 @@ class MemoStore:
         tombstoned — they can never hit again) when ``quarantine`` is
         set; returns the bad slot ids either way. The full-arena sweep
         is the recovery path (``MemoServer.recover``); routine syncs
-        verify just the delta (see ``_sync_locked``)."""
+        verify just the delta (see ``_sync_locked``). With a capacity
+        tier attached the sweep extends to every live DISK row — torn
+        or bit-flipped rows are retired there the same way (counted in
+        ``stats.n_disk_quarantined``); the returned list stays
+        host-tier slot ids."""
         with self._lock:
+            if self.capacity_ok:
+                try:
+                    dbad = self.capacity.verify()
+                    if dbad.size and quarantine:
+                        self.capacity.retire(dbad)
+                        self.stats.n_disk_quarantined += int(dbad.size)
+                except Exception as e:  # noqa: BLE001 — degrade
+                    self._capacity_fail(e)
             bad = self.db.verify()
             if quarantine:
                 return self._quarantine_locked(bad)
@@ -586,21 +890,39 @@ class MemoStore:
                 out["index_embs"] = np.asarray(embs).copy()
             return out
 
-    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+    def load_state_dict(self, state: Dict[str, np.ndarray],
+                        adopt_arenas: bool = False) -> None:
         """Restore ``state_dict`` output into this (freshly constructed,
         identically configured) store. The host index is rebuilt from the
         slot mirrors — assign() for live rows, remove() for dead ones —
         which reproduces the saved index state exactly (tombstones and
         all), so host-tier lookups are bit-identical across a
         save/load round trip. The device tier stays unmaterialized; the
-        next ``sync()`` performs the full (deterministic) upload."""
+        next ``sync()`` performs the full (deterministic) upload.
+
+        ``adopt_arenas=True`` (the ``MemoSession.load(..., mmap=True)``
+        path) installs the given part arrays AS the arenas instead of
+        copying rows in — with format-3 copy-on-write memmaps the
+        arena bytes stay on disk until first written (zero-copy open;
+        the untouched preallocated zeros are never faulted in)."""
         with self._lock:
-            n = int(state["n"])
+            n = int(np.asarray(state["n"]).reshape(-1)[0])
             db = self.db
             db._grow_to(n)
+            parts_state = [state.get(f"part_{spec.name}")
+                           for spec in self.codec.parts]
+            adopted = (adopt_arenas and n > 0 and db.capacity == n
+                       and all(p is not None
+                               and p.shape == a.shape and p.dtype == a.dtype
+                               for p, a in zip(parts_state, db._arenas)))
+            if adopted:
+                db._arenas = [p if isinstance(p, np.memmap)
+                              else np.ascontiguousarray(p)
+                              for p in parts_state]
             for spec, arena, csum in zip(self.codec.parts, db._arenas,
                                          db.checksums):
-                arena[:n] = state[f"part_{spec.name}"]
+                if not adopted:
+                    arena[:n] = state[f"part_{spec.name}"]
                 saved = state.get(f"csum_{spec.name}")
                 if saved is not None:
                     csum[:n] = saved
@@ -613,8 +935,10 @@ class MemoStore:
             self._ensure_emb_capacity(n)
             self._embs_host[:n] = state["embs"]
             self._lens_host[:n] = state["lens"]
-            self._clock_hand = int(state["clock_hand"])
-            self.sim_cal = tuple(float(v) for v in state["sim_cal"])
+            self._clock_hand = int(
+                np.asarray(state["clock_hand"]).reshape(-1)[0])
+            self.sim_cal = tuple(
+                float(v) for v in np.asarray(state["sim_cal"]).reshape(-1))
             # restore the host index from the saved staging array at its
             # EXACT shape — approximate indexes (ivf) k-means over the
             # whole array including slack rows, and assign()'s minimum
@@ -643,6 +967,55 @@ class MemoStore:
             self.device_index = None
             self._dev_lens = None
             self._snapshot = None
+            # a capacity dir attached to a file-load: reconcile the two
+            # (checksum-matched mapping, write-through for the rest) so
+            # the disk tier mirrors the loaded host tier from the start
+            if self.capacity_ok:
+                try:
+                    self._remirror_locked()
+                except Exception as e:  # noqa: BLE001 — degrade
+                    self._capacity_fail(e)
+
+    def adopt_capacity(self, max_entries: Optional[int] = None) -> int:
+        """Populate an EMPTY host tier from the recovered disk tier (the
+        ``MemoSession.load(<capacity dir>)`` warm start): hottest disk
+        rows first (reuse-ordered), up to ``max_entries`` / the byte
+        budget, admitted bit-identically via ``put_parts``. Returns the
+        number of promoted entries; the rest stay disk-resident and
+        promotable on demand."""
+        with self._lock:
+            if not self.capacity_ok:
+                return 0
+            tier = self.capacity
+            live = tier.live_slots
+            if live.size == 0:
+                return 0
+            order = live[np.argsort(-tier._reuse[live], kind="stable")]
+            cap = self.budget_entries
+            take = live.size if max_entries is None else int(max_entries)
+            if cap is not None:
+                take = min(take, max(0, cap - self.live_count))
+            order = order[:take]
+            if order.size == 0:
+                return 0
+            try:
+                parts, dembs, dlens, dcsums = tier.rows_at(order)
+            except Exception as e:      # noqa: BLE001 — degrade
+                self._capacity_fail(e)
+                return 0
+            slots = self.db.put_parts(parts, dcsums)
+            self._ensure_emb_capacity(int(slots.max()) + 1)
+            self._embs_host[slots] = dembs
+            self._lens_host[slots] = dlens
+            if self.index is not self.device_index:
+                self.index.assign(slots, dembs)
+            self._dirty.update(int(s) for s in slots)
+            self.generation += 1
+            tier.note_reuse(order)
+            for h, d in zip(slots, order):
+                self._host_to_disk[int(h)] = int(d)
+                self._disk_to_host[int(d)] = int(h)
+            return int(slots.size)
 
 
 # ------------------------------------------------------ eviction policies

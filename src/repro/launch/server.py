@@ -14,6 +14,8 @@ compute/maintenance overlap that the async runtime buys.
 from __future__ import annotations
 
 import argparse
+import shutil
+import tempfile
 import time
 
 import jax
@@ -58,12 +60,20 @@ def build_session(args, seed: int = 0):
     corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=args.seq, seed=1)
     thr = args.threshold if args.threshold is not None else LEVELS.get(
         args.level, 0.97)
+    fault = getattr(args, "fault", None)
+    # Disk chaos classes need a capacity tier attached or their
+    # capacity.* fault points have nothing to fire in (DESIGN.md §2.11).
+    cap_dir = None
+    if fault and any(p.startswith("capacity.")
+                     for p in CHAOS_PRESETS.get(fault, {})):
+        cap_dir = tempfile.mkdtemp(prefix="memo_fault_capacity_")
     spec = MemoSpec.flat(
         threshold=thr, mode="bucket", apm_codec=args.codec,
         admit=True, budget_mb=args.budget_mb,
         admit_every=args.admit_every, recal_every=2,
         device_slack=8.0, embed_steps=args.embed_steps,
-        faults=({} if getattr(args, "fault", None) else None))
+        capacity_dir=cap_dir, capacity_checkpoint_every=1,
+        faults=({} if fault else None))
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     sess = MemoSession.build(model, params, spec, batches=calib,
@@ -144,9 +154,17 @@ def run_fault_demo(args):
     if rate is None:
         rate = probe_rate(sess, buckets=args.bucket_list,
                           max_batch=args.batch, seq=args.seq)
+        stale = sess.spec.capacity.dir
         sess, corpus = build_session(args)   # the probe mutated the store
+        if stale:                            # the probe leg's tier dir
+            shutil.rmtree(stale, ignore_errors=True)
     inj = sess.engine.faults
-    preset = CHAOS_PRESETS[args.fault]
+    try:
+        preset = CHAOS_PRESETS[args.fault]
+    except KeyError:
+        raise SystemExit(
+            f"unknown chaos class {args.fault!r}; known classes: "
+            f"{sorted(CHAOS_PRESETS)}") from None
     n = max(3, args.requests // 3)
     server = sess.serve(buckets=args.bucket_list, max_batch=args.batch,
                         max_delay=args.max_delay_ms * 1e-3,
@@ -158,10 +176,17 @@ def run_fault_demo(args):
     logged = 0
 
     def flush_health():
+        # health_log is a BOUNDED ring: diff against the transition
+        # counter, not the log length, so narration survives wraparound
         nonlocal logged
-        for t, health, why in server.health_log[logged:]:
+        log = list(server.health_log)
+        fresh = server.n_health_transitions - logged
+        if fresh > len(log):
+            print(f"[health] ... {fresh - len(log)} transition(s) "
+                  f"aged out of the ring ...")
+        for t, health, why in log[max(0, len(log) - fresh):]:
             print(f"[health] t={t:7.3f}s  -> {health}: {why}")
-        logged = len(server.health_log)
+        logged = server.n_health_transitions
 
     completed = 0
     with server:
@@ -193,6 +218,13 @@ def run_fault_demo(args):
           f"exact batches {server.n_exact_batches}, "
           f"quarantined {sess.store.stats.n_quarantined}, "
           f"final health {server.health.value}")
+    tail = list(server.health_log)[-5:]
+    print(f"[server] last {len(tail)} of {server.n_health_transitions} "
+          f"health transition(s):")
+    for t, health, why in tail:
+        print(f"[server]   t={t:7.3f}s  -> {health}: {why}")
+    if sess.spec.capacity.dir:
+        shutil.rmtree(sess.spec.capacity.dir, ignore_errors=True)
 
 
 def main():

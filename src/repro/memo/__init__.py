@@ -3,8 +3,9 @@
 Three pillars (ISSUE 5 / DESIGN.md §2.8):
 
 * **Composable specs** — ``MemoSpec`` composes ``EmbedSpec``,
-  ``IndexSpec``, ``CodecSpec``, ``AdmissionPolicy``, ``EvictionPolicy``
-  and ``RuntimeSpec``, each validated at construction. The legacy flat
+  ``IndexSpec``, ``CodecSpec``, ``AdmissionPolicy``, ``EvictionPolicy``,
+  ``RuntimeSpec`` and the (default-inert) ``CapacitySpec``, each
+  validated at construction. The legacy flat
   ``MemoConfig(**kwargs)`` still works (one ``DeprecationWarning``);
   ``MemoSpec.flat(**kwargs)`` is the warning-free bridge.
 * **Extension registries** — ``register_codec`` / ``register_index`` /
@@ -43,6 +44,7 @@ _EXPORTS = {
     "AdmissionPolicy": ("repro.memo.specs", "AdmissionPolicy"),
     "EvictionPolicy": ("repro.memo.specs", "EvictionPolicy"),
     "RuntimeSpec": ("repro.memo.specs", "RuntimeSpec"),
+    "CapacitySpec": ("repro.memo.specs", "CapacitySpec"),
     "FLAT_FIELDS": ("repro.memo.specs", "FLAT_FIELDS"),
     # registries
     "register_codec": ("repro.core.registry", "register_codec"),

@@ -32,18 +32,30 @@ from typing import Dict, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core.capacity import (_fsync_dir, is_format3, read_format3,
+                                 write_format3)
 from repro.core.embedding import Embedder
 from repro.core.engine import LEVELS, MemoEngine, MemoStats
 from repro.core.faults import MemoStoreError, fire
 from repro.core.runtime import MemoServer
-from repro.memo.specs import MemoSpec
+from repro.memo.specs import FLAT_FIELDS, MemoSpec
 
-# format 2 adds per-array CRC32 checksums in the meta header (and the
+# format 2 added per-array CRC32 checksums in the meta header (and the
 # store's per-codec-part arena checksums ride along in state_dict), so
 # ``load`` verifies every byte before deserializing — a truncated,
 # bit-flipped or spec-mismatched file fails with an actionable
-# ``MemoStoreError`` instead of a numpy internal error (DESIGN.md §2.9)
-SAVE_FORMAT = 2
+# ``MemoStoreError`` instead of a numpy internal error (DESIGN.md §2.9).
+# Format 3 (DESIGN.md §2.11) keeps the same header + arrays but stores
+# them uncompressed and page-aligned, so ``load(..., mmap=True)`` maps
+# the arenas copy-on-write instead of materializing them. Both formats
+# load; ``save`` writes format 3 unless asked for 2.
+SAVE_FORMAT = 3
+READ_FORMATS = (2, 3)
+
+# the per-directory session descriptor a capacity tier carries so
+# ``MemoSession.load(<capacity dir>)`` can reconstruct the session
+# (spec + embedder) straight from the durable tier
+SESSION_META = "session.m3"
 
 
 class MemoSession:
@@ -60,6 +72,17 @@ class MemoSession:
                              "MemoSession.build(...) or .load(...)")
         self.engine = engine
         self._stats = MemoStats()     # session-cumulative serving stats
+        # a capacity tier makes the session self-describing: drop the
+        # spec + embedder next to the arenas so the DIRECTORY alone
+        # reopens via MemoSession.load (crash recovery has no .npz)
+        store = engine.store
+        if store.capacity_ok:
+            sess_path = os.path.join(store.capacity.root, SESSION_META)
+            if not os.path.exists(sess_path):
+                try:
+                    self._write_session_meta(sess_path)
+                except OSError as e:    # noqa: PERF203 — degrade
+                    store._capacity_fail(e)
 
     # ------------------------------------------------------------- views
     @property
@@ -154,20 +177,11 @@ class MemoSession:
         }
 
     # ------------------------------------------------------- persistence
-    def save(self, path: str) -> None:
-        """Persist the populated store to one ``.npz``: spec, trained
-        embedder, codec-part arenas, slot mirrors (embeddings, entry
-        lengths, liveness, reuse counters, free-list), ``sim_cal``.
-        ``MemoSession.load`` round-trips to bit-identical host-tier
-        lookups; the device tier is derived and re-materialized on the
-        first post-load sync."""
+    def _session_meta(self, arrays: Dict[str, np.ndarray],
+                      save_format: int) -> dict:
         eng = self.engine
-        arrays = {f"emb_param_{k}": np.asarray(v)
-                  for k, v in eng.embedder.params.items()}
-        for k, v in self.store.state_dict().items():
-            arrays[f"store_{k}"] = v
-        meta = {
-            "format": SAVE_FORMAT,
+        return {
+            "format": int(save_format),
             "spec": self.spec.to_dict(),
             "embedder": {"pool": eng.embedder.pool,
                          "act": eng.embedder.act},
@@ -181,20 +195,86 @@ class MemoSession:
             "checksums": {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
                           for k, v in arrays.items()},
         }
-        with open(str(path), "wb") as f:
+
+    def _write_session_meta(self, path: str) -> None:
+        """Drop the session descriptor (spec + embedder, no store
+        arrays) next to the capacity arenas — what makes a bare tier
+        directory loadable."""
+        arrays = {f"emb_param_{k}": np.asarray(v)
+                  for k, v in self.engine.embedder.params.items()}
+        write_format3(path, self._session_meta(arrays, 3), arrays)
+
+    def save(self, path: str, *, save_format: int = SAVE_FORMAT) -> None:
+        """Persist the populated store to one file: spec, trained
+        embedder, codec-part arenas, slot mirrors (embeddings, entry
+        lengths, liveness, reuse counters, free-list), ``sim_cal``.
+        ``MemoSession.load`` round-trips to bit-identical host-tier
+        lookups; the device tier is derived and re-materialized on the
+        first post-load sync.
+
+        ``save_format=3`` (default) writes the page-aligned uncompressed
+        layout that ``load(..., mmap=True)`` maps zero-copy;
+        ``save_format=2`` writes the compressed ``.npz``. Both writes
+        are ATOMIC — temp file in the target directory, fsync, then
+        ``os.replace`` — so a crash (or the ``session.save_truncate``
+        fault) mid-save leaves any existing good file untouched."""
+        if save_format not in READ_FORMATS:
+            raise ValueError(f"save_format must be one of "
+                             f"{list(READ_FORMATS)}: {save_format!r}")
+        eng = self.engine
+        arrays = {f"emb_param_{k}": np.asarray(v)
+                  for k, v in eng.embedder.params.items()}
+        for k, v in self.store.state_dict().items():
+            arrays[f"store_{k}"] = np.asarray(v)
+        meta = self._session_meta(arrays, save_format)
+        if save_format == 3:
+            write_format3(str(path), meta, arrays, faults=eng.faults,
+                          fault_point="session.save_truncate")
+            return
+        tmp = str(path) + ".tmp"
+        with open(tmp, "wb") as f:
             np.savez_compressed(f, meta=json.dumps(meta), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
         if fire(eng.faults, "session.save_truncate") is not None:
-            # torn write: chop the tail so load must fail CLEANLY
-            size = os.path.getsize(str(path))
-            with open(str(path), "rb+") as f:
+            # crash between the temp write and the rename: the temp is
+            # torn, the target (if any) still holds the previous save
+            size = os.path.getsize(tmp)
+            with open(tmp, "rb+") as f:
                 f.truncate(max(1, int(size * 0.6)))
+            return
+        os.replace(tmp, str(path))
+        _fsync_dir(os.path.dirname(os.path.abspath(str(path))))
+
+    @staticmethod
+    def _spec_from_meta(path: str, meta: dict,
+                        overrides: Optional[Dict[str, object]]) -> MemoSpec:
+        try:
+            spec = MemoSpec.from_dict(meta["spec"])
+            for k, v in (overrides or {}).items():
+                if k not in FLAT_FIELDS:
+                    raise ValueError(
+                        f"unknown override field {k!r}; valid flat "
+                        f"fields: {sorted(FLAT_FIELDS)}")
+                setattr(spec, k, v)     # flat property → re-validates
+        except MemoStoreError:
+            raise
+        except Exception as e:
+            raise MemoStoreError(
+                f"invalid memo spec in {path!r}: "
+                f"{type(e).__name__}: {e}") from e
+        return spec
 
     @classmethod
-    def load(cls, path: str, model, params, *,
-             faults=None) -> "MemoSession":
-        """Warm-start a session from ``save`` output. ``model``/``params``
-        must be the network the store was built against (the file holds
-        the memo state, not the transformer weights).
+    def load(cls, path: str, model, params, *, faults=None,
+             mmap: bool = False,
+             overrides: Optional[Dict[str, object]] = None
+             ) -> "MemoSession":
+        """Warm-start a session from ``save`` output — or from a bare
+        capacity-tier DIRECTORY (crash recovery: the journaled arenas
+        plus the ``session.m3`` descriptor are the save). ``model`` /
+        ``params`` must be the network the store was built against (the
+        file holds the memo state, not the transformer weights).
 
         Every failure mode — unreadable/truncated file, bad format
         number, per-array checksum mismatch (bit flips), a spec that
@@ -202,31 +282,45 @@ class MemoSession:
         ``MemoStoreError`` naming the problem; numpy/zipfile internals
         never escape.
 
-        ``faults`` (a ``FaultInjector``) overrides the injector the
-        file's spec would construct — chaos harnesses arm
-        ``session.load_bitflip`` on it; production leaves it None."""
-        try:
-            with np.load(str(path), allow_pickle=False) as data:
-                meta = json.loads(str(data["meta"]))
-                arrays = {k: data[k] for k in data.files if k != "meta"}
-        except MemoStoreError:
-            raise
-        except Exception as e:          # zipfile/zlib/json/KeyError...
-            raise MemoStoreError(
-                f"unreadable memo store file {path!r} (truncated or "
-                f"corrupt): {type(e).__name__}: {e}") from e
-        if meta.get("format") != SAVE_FORMAT:
+        ``mmap=True`` (format-3 files only) adopts the codec-part
+        arenas as copy-on-write memory maps instead of materializing
+        them — open is zero-copy and whole-file verification is
+        deferred to the store's per-row checksums
+        (``store.verify_integrity()``). ``overrides`` remaps flat spec
+        fields (e.g. ``{"capacity_dir": ..., "budget_mb": 1.0}``)
+        before the store is constructed. ``faults`` (a
+        ``FaultInjector``) overrides the injector the file's spec would
+        construct — chaos harnesses arm ``session.load_bitflip`` on it;
+        production leaves it None."""
+        if os.path.isdir(str(path)):
+            return cls._load_capacity_dir(str(path), model, params,
+                                          faults=faults,
+                                          overrides=overrides)
+        if is_format3(str(path)):
+            meta, arrays = read_format3(str(path), mmap=mmap,
+                                        verify=False)
+        else:
+            if mmap:
+                raise MemoStoreError(
+                    f"memo store file {path!r} is not format 3 — "
+                    f"mmap=True needs the page-aligned layout; re-save "
+                    f"with save_format=3 (see MIGRATION.md)")
+            try:
+                with np.load(str(path), allow_pickle=False) as data:
+                    meta = json.loads(str(data["meta"]))
+                    arrays = {k: data[k] for k in data.files
+                              if k != "meta"}
+            except MemoStoreError:
+                raise
+            except Exception as e:      # zipfile/zlib/json/KeyError...
+                raise MemoStoreError(
+                    f"unreadable memo store file {path!r} (truncated or "
+                    f"corrupt): {type(e).__name__}: {e}") from e
+        if meta.get("format") not in READ_FORMATS:
             raise MemoStoreError(
                 f"unsupported memo save format {meta.get('format')!r} "
-                f"(this build reads format {SAVE_FORMAT})")
-        try:
-            spec = MemoSpec.from_dict(meta["spec"])
-        except MemoStoreError:
-            raise
-        except Exception as e:
-            raise MemoStoreError(
-                f"invalid memo spec in {path!r}: "
-                f"{type(e).__name__}: {e}") from e
+                f"(this build reads formats {list(READ_FORMATS)})")
+        spec = cls._spec_from_meta(path, meta, overrides)
         eng = MemoEngine(model, params, spec)
         if faults is not None:
             eng.faults = faults      # threads into the store via _make_store
@@ -239,7 +333,7 @@ class MemoSession:
                     arr.view(np.uint8).reshape(-1)[0] ^= 0xFF
                     arrays[k] = arr
                     break
-        cls._verify_arrays(path, meta, arrays)
+        cls._verify_arrays(path, meta, arrays, check_crc=not mmap)
         emb_meta = meta["embedder"]
         eng.embedder = Embedder(
             {k[len("emb_param_"):]: jax.numpy.asarray(v)
@@ -252,7 +346,7 @@ class MemoSession:
                                     capacity=max(1, n),
                                     n_lists=meta.get("n_lists"))
         try:
-            eng.store.load_state_dict(state)
+            eng.store.load_state_dict(state, adopt_arenas=mmap)
         except MemoStoreError:
             raise
         except Exception as e:
@@ -266,27 +360,70 @@ class MemoSession:
             eng.store.sync()
         return cls(eng)
 
+    @classmethod
+    def _load_capacity_dir(cls, path: str, model, params, *, faults=None,
+                           overrides=None) -> "MemoSession":
+        """Reopen a session from its capacity-tier directory: recover
+        the journaled arenas (WAL replay + CRC sweep, see
+        ``CapacityTier``), rebuild the session from ``session.m3`` and
+        warm the host tier from the hottest disk rows. This is the
+        crash-recovery path — a process SIGKILLed at ANY instant
+        reopens here with at most the un-journaled tail lost."""
+        sess_path = os.path.join(path, SESSION_META)
+        if not os.path.exists(sess_path):
+            raise MemoStoreError(
+                f"capacity dir {path!r} has no {SESSION_META} — not a "
+                f"memo capacity tier (or the session descriptor was "
+                f"never written)")
+        meta, arrays = read_format3(sess_path)
+        spec = cls._spec_from_meta(sess_path, meta, overrides)
+        spec.capacity.dir = path        # the directory may have moved
+        eng = MemoEngine(model, params, spec)
+        if faults is not None:
+            eng.faults = faults
+        emb_meta = meta["embedder"]
+        eng.embedder = Embedder(
+            {k[len("emb_param_"):]: jax.numpy.asarray(v)
+             for k, v in arrays.items() if k.startswith("emb_param_")},
+            int(emb_meta["pool"]), str(emb_meta["act"]))
+        eng.store = eng._make_store(meta["apm_shape"], capacity=1,
+                                    n_lists=meta.get("n_lists"))
+        if not eng.store.capacity_ok:
+            raise MemoStoreError(
+                f"capacity dir {path!r} failed recovery: "
+                f"{eng.store.capacity_error}")
+        eng.store.adopt_capacity()
+        if spec.runtime.store == "device" and spec.runtime.mode in (
+                "bucket", "kernel"):
+            eng.store.sync()
+        return cls(eng)
+
     @staticmethod
-    def _verify_arrays(path: str, meta: dict, arrays: Dict[str, np.ndarray]
-                       ) -> None:
+    def _verify_arrays(path: str, meta: dict,
+                       arrays: Dict[str, np.ndarray], *,
+                       check_crc: bool = True) -> None:
         """The load-time integrity + spec-compatibility gate: every
         array's CRC32 must match the checksummed header, the required
         store arrays must exist, and the arrays must actually have the
         shapes the spec/meta describe. All failures are
-        ``MemoStoreError`` with the offending keys named."""
+        ``MemoStoreError`` with the offending keys named.
+        ``check_crc=False`` (the mmap path) skips the byte sweep — it
+        would fault every page in; per-row arena checksums still guard
+        what actually gets served."""
         csums = meta.get("checksums")
         if not isinstance(csums, dict):
             raise MemoStoreError(
                 f"memo store file {path!r} has no checksummed header "
-                f"(format {SAVE_FORMAT} requires one)")
+                f"(formats {list(READ_FORMATS)} require one)")
         missing = sorted(set(csums) - set(arrays))
         if missing:
             raise MemoStoreError(
                 f"memo store file {path!r} is missing arrays the header "
                 f"promises: {missing}")
-        bad = [k for k in sorted(arrays)
-               if zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
-               != csums.get(k)]
+        bad = [] if not check_crc else [
+            k for k in sorted(arrays)
+            if zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
+            != csums.get(k)]
         if bad:
             raise MemoStoreError(
                 f"checksum mismatch in memo store file {path!r} for "

@@ -11,8 +11,12 @@ small policy objects, each validated at construction:
 * ``AdmissionPolicy`` — online miss capture under a byte budget (§2.5)
 * ``EvictionPolicy``  — which entries go when the budget binds
 * ``RuntimeSpec``     — serving execution (threshold, mode, fast path)
+* ``CapacitySpec``    — the big-memory disk tier (DESIGN.md §2.11);
+                        default-inert (``dir=None``), so five-component
+                        call sites are unaffected
 
-``MemoSpec`` composes the six. For compatibility it also exposes the old
+``MemoSpec`` composes the six (plus the inert-by-default capacity
+component). For compatibility it also exposes the old
 flat field names as read/write properties (``spec.threshold`` ↔
 ``spec.runtime.threshold``), so existing engine code and call sites that
 tweak a knob keep working; writes through the flat view re-validate the
@@ -46,8 +50,8 @@ def _registries():
 
 __all__ = [
     "EmbedSpec", "IndexSpec", "CodecSpec", "AdmissionPolicy",
-    "EvictionPolicy", "RuntimeSpec", "MemoSpec", "MemoConfig",
-    "FLAT_FIELDS",
+    "EvictionPolicy", "RuntimeSpec", "CapacitySpec", "MemoSpec",
+    "MemoConfig", "FLAT_FIELDS",
 ]
 
 
@@ -195,6 +199,33 @@ class RuntimeSpec:
                          f"{sorted(FAULT_POINTS)}")
 
 
+@dataclass
+class CapacitySpec:
+    """The big-memory capacity tier (DESIGN.md §2.11): an mmap-backed,
+    crash-consistent third storage tier under the host arena. ``dir``
+    is the opt-in — ``None`` (the default) attaches no disk tier and
+    every other field is inert."""
+    dir: Optional[str] = None       # tier directory (None = no disk tier)
+    budget_mb: Optional[float] = None   # disk byte budget (None = ∞)
+    promote: bool = True            # serve misses from disk when similar
+    promote_max: int = 64           # promotions per maintenance flush
+    checkpoint_every: int = 8       # WAL→manifest every N applied payloads
+    stall_s: float = 5.0            # disk-op watchdog → DISK_DEGRADED
+    fsync: bool = True              # fsync WAL frames + checkpoints (off:
+                                    # survive crashes, not power loss)
+
+    def __post_init__(self):
+        _require(self.budget_mb is None or float(self.budget_mb) > 0,
+                 f"capacity budget_mb must be None or > 0: {self.budget_mb}")
+        _require(int(self.promote_max) >= 1,
+                 f"capacity promote_max must be >= 1: {self.promote_max}")
+        _require(int(self.checkpoint_every) >= 1,
+                 f"capacity checkpoint_every must be >= 1: "
+                 f"{self.checkpoint_every}")
+        _require(float(self.stall_s) > 0,
+                 f"capacity stall_s must be > 0: {self.stall_s}")
+
+
 # old flat MemoConfig field → (component, field) — the single source of
 # truth for the flat view, the MemoConfig shim and MIGRATION.md
 FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
@@ -228,6 +259,14 @@ FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
     "eviction_kind": ("eviction", "kind"),
     # new in the fault-tolerance layer (DESIGN.md §2.9)
     "faults": ("runtime", "faults"),
+    # new in the capacity tier (DESIGN.md §2.11)
+    "capacity_dir": ("capacity", "dir"),
+    "capacity_budget_mb": ("capacity", "budget_mb"),
+    "capacity_promote": ("capacity", "promote"),
+    "capacity_promote_max": ("capacity", "promote_max"),
+    "capacity_checkpoint_every": ("capacity", "checkpoint_every"),
+    "capacity_stall_s": ("capacity", "stall_s"),
+    "capacity_fsync": ("capacity", "fsync"),
 }
 
 
@@ -245,12 +284,14 @@ class MemoSpec:
     admission: AdmissionPolicy = field(default_factory=AdmissionPolicy)
     eviction: EvictionPolicy = field(default_factory=EvictionPolicy)
     runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
+    capacity: CapacitySpec = field(default_factory=CapacitySpec)
 
     _COMPONENTS = ("embed", "index", "codec", "admission", "eviction",
-                   "runtime")
+                   "runtime", "capacity")
     _COMPONENT_TYPES = {"embed": EmbedSpec, "index": IndexSpec,
                         "codec": CodecSpec, "admission": AdmissionPolicy,
-                        "eviction": EvictionPolicy, "runtime": RuntimeSpec}
+                        "eviction": EvictionPolicy, "runtime": RuntimeSpec,
+                        "capacity": CapacitySpec}
 
     def __post_init__(self):
         # fail-fast on the likeliest migration mistake: passing a string

@@ -1,0 +1,652 @@
+"""Crash-consistent capacity tier (ISSUE 8 / DESIGN.md §2.11).
+
+Covers: the page-aligned format-3 save layout (roundtrip incl. 0-d and
+empty arrays, mmap reads, truncation/bit-flip rejection, atomic
+publish), the CRC-framed write-ahead journal (replay order, torn-tail
+stop), CapacityTier durability (reopen = manifest + replay + CRC sweep,
+injected checkpoint crashes and torn journal frames, disk budget
+demotion), a subprocess SIGKILL harness (tier-level and through
+``MemoSession.load``), write-through admission / demotion / promotion
+on ``MemoStore`` (bit-identical round-trips for all three codecs via a
+hypothesis property test, corrupt-row quarantine through the retire
+path, the stall watchdog), the DISK_DEGRADED health rung + bounded
+``health_log`` ring, and fail-fast unknown chaos-preset names.
+"""
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.capacity import (CapacityTier, Journal, is_format3,
+                                 read_format3, write_format3)
+from repro.core.codec import get_codec
+from repro.core.faults import (CHAOS_PRESETS, FAULT_POINTS, FaultInjector,
+                               MemoStoreError)
+from repro.core.runtime import Health
+from repro.core.store import MemoStore
+from repro.memo import MemoSession, MemoSpec
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO_ROOT, "src")
+
+SEQ = 32
+APM = (2, 4, 4)
+EMB = 8
+
+
+def _entries(rng, n):
+    apms = rng.random((n, *APM)).astype(np.float16)
+    embs = rng.normal(0, 0.01, (n, EMB)).astype(np.float32)
+    embs[:, 0] += 10.0 * np.arange(1, n + 1)   # well separated
+    return apms, embs
+
+
+def _tier(root, **kw):
+    kw.setdefault("codec", get_codec("f16", APM))
+    kw.setdefault("embed_dim", EMB)
+    return CapacityTier(str(root), **kw)
+
+
+def _tier_rows(rng, codec, n):
+    apms = rng.random((n, *APM)).astype(np.float16)
+    parts = codec.encode(apms)
+    embs = rng.normal(0, 1, (n, EMB)).astype(np.float32)
+    return parts, embs, np.full(n, SEQ, np.int32)
+
+
+# ------------------------------------------------------------- format 3
+
+def test_format3_roundtrip_plain_and_mmap(tmp_path):
+    path = str(tmp_path / "f.m3")
+    arrays = {
+        "scalar": np.asarray(7, np.int64),          # 0-d must stay 0-d
+        "empty": np.zeros((0, 3), np.float32),
+        "flags": np.asarray([True, False, True]),
+        "apm": np.arange(24, dtype=np.float16).reshape(2, 3, 4),
+        "big": np.arange(5000, dtype=np.int32),     # crosses a page
+    }
+    meta = {"format": 3, "nested": {"a": [1, 2]}, "name": "x"}
+    assert write_format3(path, meta, arrays)
+    assert is_format3(path)
+    for mmap in (False, True):
+        m, a = read_format3(path, mmap=mmap, verify=not mmap)
+        assert m == meta
+        assert set(a) == set(arrays)
+        for k in arrays:
+            assert a[k].shape == arrays[k].shape
+            assert a[k].dtype == arrays[k].dtype
+            np.testing.assert_array_equal(np.asarray(a[k]), arrays[k])
+        if mmap:
+            assert isinstance(a["big"], np.memmap)
+            # every segment is page-aligned (the mmap contract)
+            m2, _ = read_format3(path, verify=False)
+            assert m2 == meta
+
+
+def test_format3_rejects_truncation_and_bitflip(tmp_path):
+    path = str(tmp_path / "f.m3")
+    write_format3(path, {"k": 1}, {"x": np.arange(4096, dtype=np.int64)})
+    torn = str(tmp_path / "torn.m3")
+    shutil.copy(path, torn)
+    with open(torn, "rb+") as f:
+        f.truncate(os.path.getsize(torn) // 2)
+    with pytest.raises(MemoStoreError, match="truncated or corrupt"):
+        read_format3(torn)
+    flip = str(tmp_path / "flip.m3")
+    shutil.copy(path, flip)
+    with open(flip, "rb+") as f:                  # flip a segment byte
+        f.seek(os.path.getsize(flip) - 8)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(MemoStoreError, match="checksum mismatch"):
+        read_format3(flip)
+    assert not is_format3(str(tmp_path / "missing.m3"))
+
+
+def test_format3_atomic_write_never_clobbers(tmp_path):
+    """An injected crash between the temp write and the publish leaves
+    the existing good file byte-identical (satellite: atomic save)."""
+    path = str(tmp_path / "f.m3")
+    write_format3(path, {"v": 1}, {"x": np.arange(8)})
+    before = open(path, "rb").read()
+    inj = FaultInjector()
+    inj.arm("session.save_truncate", at=1, count=1)
+    ok = write_format3(path, {"v": 2}, {"x": np.arange(9)},
+                       faults=inj, fault_point="session.save_truncate")
+    assert ok is False
+    assert open(path, "rb").read() == before
+    meta, _ = read_format3(path)
+    assert meta == {"v": 1}
+    # the raising flavor (CapacityTier.checkpoint's contract)
+    inj2 = FaultInjector()
+    inj2.arm("session.save_truncate", at=1, count=1)
+    with pytest.raises(OSError, match="injected crash"):
+        write_format3(path, {"v": 3}, {"x": np.arange(9)}, faults=inj2,
+                      fault_point="session.save_truncate",
+                      fault_raises=True)
+    assert open(path, "rb").read() == before
+
+
+# -------------------------------------------------------------- journal
+
+def test_journal_append_replay_roundtrip(tmp_path):
+    j = Journal(str(tmp_path / "j.wal"))
+    a = {"slots": np.asarray([0, 1]), "embs": np.eye(2, dtype=np.float32)}
+    j.append("append", a)
+    j.append("retire", {"slots": np.asarray([1])})
+    recs, torn = j.replay()
+    assert not torn and [k for k, _ in recs] == ["append", "retire"]
+    np.testing.assert_array_equal(recs[0][1]["embs"], a["embs"])
+    j.truncate()
+    assert j.replay() == ([], False) and j.nbytes == 0
+    j.close()
+
+
+def test_journal_torn_tail_stops_cleanly(tmp_path):
+    path = str(tmp_path / "j.wal")
+    j = Journal(path)
+    j.append("append", {"slots": np.asarray([0])})
+    j.append("append", {"slots": np.asarray([1])})
+    with open(path, "rb+") as f:                  # crash mid-frame
+        f.truncate(os.path.getsize(path) - 3)
+    recs, torn = j.replay()
+    assert torn and len(recs) == 1
+    np.testing.assert_array_equal(recs[0][1]["slots"], [0])
+    # the injected flavor: a torn frame hits the disk, the append fails
+    inj = FaultInjector()
+    inj.arm("capacity.journal_torn", at=2, count=1, frac=0.4)
+    j2 = Journal(str(tmp_path / "j2.wal"), faults=inj)
+    j2.append("append", {"slots": np.asarray([0])})
+    with pytest.raises(OSError, match="torn journal frame"):
+        j2.append("append", {"slots": np.asarray([1])})
+    recs2, torn2 = j2.replay()
+    assert torn2 and len(recs2) == 1
+    j.close(), j2.close()
+
+
+# -------------------------------------------------------- capacity tier
+
+def test_tier_append_retire_verify(tmp_path):
+    rng = np.random.default_rng(0)
+    t = _tier(tmp_path / "t", capacity=4)
+    parts, embs, lens = _tier_rows(rng, t.codec, 6)
+    slots = t.append(parts, embs, lens)
+    assert t.live_count == 6 and t.verify().size == 0
+    got_parts, got_embs, got_lens, _ = t.rows_at(slots)
+    for p, g in zip(parts, got_parts):
+        assert np.asarray(g).tobytes() == np.asarray(p).tobytes()
+    np.testing.assert_array_equal(np.asarray(got_embs), embs)
+    retired = []
+    t.on_retire = lambda s: retired.extend(int(x) for x in s)
+    t.retire(slots[:2])
+    assert t.live_count == 4 and retired == [int(s) for s in slots[:2]]
+    d2, hits = t.search(embs[2:3], 1)
+    assert int(hits[0, 0]) == int(slots[2]) and d2[0, 0] < 1e-6
+    t.close()
+
+
+def test_tier_budget_retires_coldest_first(tmp_path):
+    rng = np.random.default_rng(1)
+    codec = get_codec("f16", APM)
+    t = _tier(tmp_path / "t", codec=codec, capacity=4,
+              budget_bytes=4 * (codec.entry_nbytes + EMB * 4))
+    parts, embs, lens = _tier_rows(rng, codec, 4)
+    first = t.append(parts, embs, lens)
+    t.note_reuse(first[:2])                       # rows 0,1 are hot
+    parts2, embs2, lens2 = _tier_rows(rng, codec, 2)
+    fresh = t.append(parts2, embs2, lens2)
+    assert t.live_count == 4
+    live = set(int(s) for s in t.live_slots)
+    assert set(int(s) for s in first[:2]) <= live       # hot survived
+    assert set(int(s) for s in fresh) <= live           # fresh excluded
+    assert t.n_retired == 2
+    t.close()
+
+
+def test_tier_reopen_replays_journal(tmp_path):
+    rng = np.random.default_rng(2)
+    t = _tier(tmp_path / "t", capacity=4)
+    t.append(*_tier_rows(rng, t.codec, 3))
+    t.append(*_tier_rows(rng, t.codec, 2))
+    t.retire(t.live_slots[:1])
+    # no checkpoint, no close: the reopen below is the crash path
+    t2 = _tier(tmp_path / "t")
+    assert t2.recovery == {"n_replayed": 3, "torn_tail": False,
+                           "n_quarantined": 0, "live_after": 4}
+    assert t2.live_count == 4 and t2.verify().size == 0
+    assert t2.journal.nbytes == 0                 # recovery checkpointed
+    t2.close()
+
+
+def test_tier_torn_journal_tail_loses_only_the_tail(tmp_path):
+    rng = np.random.default_rng(3)
+    t = _tier(tmp_path / "t", capacity=4)
+    t.append(*_tier_rows(rng, t.codec, 2))
+    t.append(*_tier_rows(rng, t.codec, 2))
+    with open(os.path.join(str(tmp_path / "t"), CapacityTier.JOURNAL),
+              "rb+") as f:
+        f.truncate(os.path.getsize(f.name) - 5)   # tear the last frame
+    t2 = _tier(tmp_path / "t")
+    assert t2.recovery["torn_tail"] and t2.recovery["n_replayed"] == 1
+    assert t2.live_count == 2 and t2.verify().size == 0
+    t2.close()
+
+
+def test_tier_recovery_quarantines_bitflipped_row(tmp_path):
+    rng = np.random.default_rng(4)
+    t = _tier(tmp_path / "t", capacity=4)
+    slots = t.append(*_tier_rows(rng, t.codec, 3))
+    t.checkpoint()
+    t.close()
+    part0 = t.codec.parts[0]
+    with open(os.path.join(str(tmp_path / "t"),
+                           f"part_{part0.name}.dat"), "rb+") as f:
+        f.seek(int(slots[1]) * part0.entry_nbytes)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    t2 = _tier(tmp_path / "t")
+    assert t2.recovery["n_quarantined"] == 1
+    assert t2.recovery["live_after"] == 2
+    assert not t2._live[int(slots[1])]
+    assert t2.verify().size == 0
+    t2.close()
+
+
+def test_tier_checkpoint_crash_keeps_old_manifest(tmp_path):
+    rng = np.random.default_rng(5)
+    inj = FaultInjector()
+    t = _tier(tmp_path / "t", capacity=4, faults=inj)
+    t.append(*_tier_rows(rng, t.codec, 3))
+    inj.arm("capacity.checkpoint_crash", at=1, count=1)
+    with pytest.raises(OSError, match="injected crash"):
+        t.checkpoint()
+    # the old (empty) manifest + intact journal still recover everything
+    t2 = _tier(tmp_path / "t")
+    assert t2.recovery["n_replayed"] == 1 and t2.live_count == 3
+    assert t2.verify().size == 0
+    t2.close()
+
+
+# --------------------------------------------- SIGKILL subprocess harness
+
+_CHILD = textwrap.dedent("""\
+    import json, sys
+    import numpy as np
+    from repro.core.capacity import CapacityTier
+    from repro.core.codec import get_codec
+
+    root, shape, emb, codec_name = (sys.argv[1],
+                                    tuple(json.loads(sys.argv[2])),
+                                    int(sys.argv[3]), sys.argv[4])
+    codec = get_codec(codec_name, shape)
+    t = CapacityTier(root, codec=codec, embed_dim=emb, capacity=8)
+    rng = np.random.default_rng(int(sys.argv[5]))
+    print("READY", flush=True)
+    i = 0
+    while True:
+        apms = rng.random((2, *shape)).astype(np.float16)
+        t.append(codec.encode(apms),
+                 rng.normal(size=(2, emb)).astype(np.float32),
+                 np.full(2, shape[-1], np.int32))
+        print("A", flush=True)      # acked: the rows are journal-durable
+        if i % 2 == 0:
+            t.checkpoint()
+        i += 1
+""")
+
+
+def _kill_round(root, shape, emb, codec_name, delay, seed):
+    """Run the append/checkpoint child against ``root`` and SIGKILL it
+    ``delay`` seconds after READY; returns the number of acked appends
+    (each durably journaled before the ack)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CHILD, str(root),
+         str(list(shape)).replace("(", "[").replace(")", "]"),
+         str(emb), codec_name, str(seed)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+    try:
+        assert proc.stdout.readline().strip() == b"READY", \
+            proc.stderr.read().decode()
+        time.sleep(delay)
+        proc.send_signal(signal.SIGKILL)
+        out, _ = proc.communicate(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    return sum(1 for ln in out.splitlines() if ln.strip() == b"A")
+
+
+def test_sigkill_at_random_points_recovers_clean(tmp_path):
+    """SIGKILL the tier child at randomized instants across several
+    crash→recover cycles: every reopen must verify clean and keep at
+    least every acked (journal-durable) row (tentpole acceptance)."""
+    root = str(tmp_path / "t")
+    rng = np.random.default_rng(0)
+    acked_rows = 0
+    for trial in range(3):
+        acked_rows += 2 * _kill_round(
+            root, APM, EMB, "f16",
+            float(rng.uniform(0.05, 0.35)), seed=trial)
+        t = _tier(root)                           # recovery on open
+        assert t.recovery is not None
+        assert t.verify().size == 0
+        assert t.live_count >= acked_rows
+        acked_rows = t.live_count                 # next round builds on it
+        t.close()
+    assert acked_rows > 0
+
+
+# --------------------------------------- store: write-through / promotion
+
+def test_write_through_then_demotion_is_free(tmp_path):
+    rng = np.random.default_rng(0)
+    s = MemoStore(APM, EMB, capacity=8, capacity_dir=str(tmp_path / "t"))
+    apms, embs = _entries(rng, 6)
+    slots = s.admit(apms, embs)
+    assert s.capacity_ok and s.capacity.live_count == 6
+    assert len(s._host_to_disk) == 6              # mirrored at admission
+    before = s.capacity.n_appended
+    demoted = s.evict(2)
+    assert len(demoted) == 2 and s.stats.n_demoted == 2
+    assert s.capacity.live_count == 6             # disk copies survive
+    assert s.capacity.n_appended == before        # no re-append needed
+    assert s.live_count == 4
+    assert slots is not None
+
+
+@settings(max_examples=6, deadline=None)
+@given(codec_name=st.sampled_from(["f16", "int8", "lowrank"]),
+       n=st.integers(2, 5), seed=st.integers(0, 10_000))
+def test_demote_promote_roundtrip_bit_identical(tmp_path, codec_name, n,
+                                                seed):
+    """Property (satellite): demote → promote round-trips every codec
+    part bit-identically, for all three codecs."""
+    d = tempfile.mkdtemp(dir=str(tmp_path))
+    rng = np.random.default_rng(seed)
+    s = MemoStore(APM, EMB, capacity=16, codec=codec_name,
+                  capacity_dir=os.path.join(d, "t"))
+    apms, embs = _entries(rng, n)
+    slots = s.admit(apms, embs)
+    before = [np.asarray(p).copy() for p in s.db.parts_at(slots)]
+    assert s.capacity_ok
+    s.evict(n)
+    assert s.live_count == 0 and s.stats.n_demoted == n
+    satisfied = s.promote_for(embs, threshold=0.5)
+    assert satisfied.all() and s.stats.n_promoted == n
+    _, idx = s.lookup(embs, 1)
+    after = s.db.parts_at(idx[:, 0])
+    for b, a in zip(before, after):
+        assert np.asarray(a).tobytes() == b.tobytes()
+
+
+def test_promote_quarantines_corrupt_disk_rows(tmp_path):
+    rng = np.random.default_rng(7)
+    s = MemoStore(APM, EMB, capacity=8, capacity_dir=str(tmp_path / "t"))
+    apms, embs = _entries(rng, 3)
+    s.admit(apms, embs)
+    s.evict(3)
+    bad_disk = int(s.capacity.live_slots[1])
+    row = np.asarray(s.capacity._parts[0][bad_disk]).copy()
+    row.view(np.uint8).reshape(-1)[0] ^= 0xFF     # flip, checksum stale
+    s.capacity._parts[0][bad_disk] = row
+    satisfied = s.promote_for(embs, threshold=0.5)
+    assert s.stats.n_disk_quarantined == 1
+    assert int(satisfied.sum()) == 2              # the corrupt one missed
+    assert s.capacity.live_count == 2             # retired on disk too
+    assert s.capacity.verify().size == 0
+
+
+def test_promotion_respects_length_gate(tmp_path):
+    rng = np.random.default_rng(8)
+    s = MemoStore(APM, EMB, capacity=8, capacity_dir=str(tmp_path / "t"))
+    apms, embs = _entries(rng, 2)
+    s.admit(apms, embs, lengths=np.asarray([SEQ, SEQ // 2]))
+    s.evict(2)
+    sat = s.promote_for(embs, lengths=np.asarray([SEQ, SEQ]),
+                        threshold=0.5)
+    assert bool(sat[0]) and not bool(sat[1])      # wrong length: no hit
+
+
+def test_adopt_capacity_hottest_first_budget_capped(tmp_path):
+    rng = np.random.default_rng(9)
+    d = str(tmp_path / "t")
+    a = MemoStore(APM, EMB, capacity=16, capacity_dir=d)
+    apms, embs = _entries(rng, 8)
+    a.admit(apms, embs)
+    hot_disk = a.capacity.live_slots[:3]
+    a.capacity.note_reuse(hot_disk)
+    a.checkpoint()
+    b = MemoStore(APM, EMB, capacity=16, capacity_dir=d,
+                  budget_bytes=3 * a.entry_nbytes)
+    assert b.capacity_ok and b.live_count == 0
+    assert b.capacity.live_count == 8             # recovered, not wiped
+    n = b.adopt_capacity()
+    assert n == 3                                 # host budget caps it
+    assert set(b._host_to_disk.values()) == set(int(s) for s in hot_disk)
+    _, idx = b.lookup(b._embs_host[sorted(b._host_to_disk)], 1)
+    assert (np.asarray(idx[:, 0]) >= 0).all()
+
+
+def test_stall_watchdog_detaches_tier(tmp_path):
+    inj = FaultInjector()
+    inj.arm("capacity.disk_write_io", at=1, count=1, stall_s=0.2)
+    s = MemoStore(APM, EMB, capacity=8, capacity_dir=str(tmp_path / "t"),
+                  capacity_stall_s=0.05, faults=inj)
+    rng = np.random.default_rng(10)
+    apms, embs = _entries(rng, 2)
+    slots = s.admit(apms, embs)                   # stalled write-through
+    assert slots.size == 2                        # admission survived
+    assert not s.capacity_ok
+    assert "TimeoutError" in s.capacity_error
+    assert s.stats.n_disk_errors == 1
+
+
+def test_disk_write_error_detaches_then_reattach(tmp_path):
+    inj = FaultInjector()
+    s = MemoStore(APM, EMB, capacity=8, capacity_dir=str(tmp_path / "t"),
+                  faults=inj)
+    rng = np.random.default_rng(11)
+    apms, embs = _entries(rng, 4)
+    inj.arm("capacity.disk_write_io", at=1, count=1)
+    s.admit(apms[:2], embs[:2])                   # write-through fails
+    assert not s.capacity_ok and "OSError" in s.capacity_error
+    s.admit(apms[2:], embs[2:])                   # RAM-only, no raise
+    assert s.live_count == 4
+    assert s.reattach_capacity()
+    assert s.capacity_ok
+    # the outage's admissions were re-mirrored on reattach
+    assert s.capacity.live_count == 4
+    assert len(s._host_to_disk) == 4
+    assert s.verify_integrity() == []
+
+
+# ------------------------------------------------- serving: health + ring
+
+@pytest.fixture(scope="module")
+def cap_sess(tmp_path_factory):
+    from repro.configs import get_reduced
+    from repro.data import TemplateCorpus
+    from repro.models import build_model
+
+    tier_dir = str(tmp_path_factory.mktemp("captier") / "tier")
+    cfg = get_reduced("bert_base").replace(n_classes=4, n_layers=2,
+                                           d_model=128, d_ff=256,
+                                           n_heads=4)
+    m = build_model(cfg, layer_loop="unroll")
+    params = m.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, n_templates=6,
+                            slot_fraction=0.2)
+    spec = MemoSpec.flat(threshold=0.6, embed_steps=40, mode="bucket",
+                         device_slack=8.0, admit=True, budget_mb=64.0,
+                         faults={}, capacity_dir=tier_dir,
+                         capacity_checkpoint_every=1)
+    sess = MemoSession.build(
+        m, params, spec,
+        batches=[{"tokens": jnp.asarray(corpus.sample(16)[0])}
+                 for _ in range(3)],
+        key=jax.random.PRNGKey(1))
+    assert sess.store.capacity_ok
+    assert os.path.exists(os.path.join(tier_dir, "session.m3"))
+    return sess, corpus, m, params, tier_dir
+
+
+def _serve_some(srv, corpus, n=4):
+    comps = []
+    for _ in range(n):
+        toks = corpus.sample(8)[0]
+        for r in range(8):
+            srv.submit(np.asarray(toks[r], np.int32))
+        comps.extend(srv.step(flush=True))
+    return comps
+
+
+def test_disk_fault_walks_ladder_and_recovers(cap_sess):
+    """disk_write_io detaches the tier → DISK_DEGRADED; clean applies
+    do NOT heal it (no silent un-detach); ``recover()`` reattaches,
+    re-checkpoints and returns to HEALTHY (tentpole acceptance)."""
+    sess, corpus, _, _, _ = cap_sess
+    inj = sess.engine.faults
+    inj.disarm(), inj.reset()
+    srv = sess.serve(buckets=(SEQ,), max_batch=8, max_delay=1e-4)
+    try:
+        inj.arm("capacity.disk_write_io", p=1.0)
+        comps = _serve_some(srv, corpus, n=3)
+        srv.drain_maintenance(timeout=30, raise_errors=False)
+        assert len(comps) == 24                   # zero dropped requests
+        assert srv.health is Health.DISK_DEGRADED
+        assert not sess.store.capacity_ok
+        assert srv.n_health_transitions >= 1
+        t, h, reason = srv.health_log[-1]
+        assert h == "disk_degraded" and "capacity tier detached" in reason
+        inj.disarm()
+        _serve_some(srv, corpus, n=2)             # clean applies...
+        srv.drain_maintenance(timeout=30, raise_errors=False)
+        assert srv.health is Health.DISK_DEGRADED  # ...never auto-heal
+        report = srv.recover()
+        assert report["capacity_ok"] is True
+        assert srv.health is Health.HEALTHY
+        assert sess.store.capacity_ok
+        # checkpoint cadence resumes post-recovery (checkpoint_every=1)
+        before = srv.n_checkpoints
+        _serve_some(srv, corpus, n=2)
+        srv.drain_maintenance(timeout=30, raise_errors=False)
+        assert srv.n_checkpoints > before
+        assert srv.health is Health.HEALTHY
+    finally:
+        inj.disarm(), inj.reset()
+        srv.close()
+    assert sess.store.verify_integrity() == []
+
+
+def test_health_log_ring_is_bounded(cap_sess):
+    sess, _, _, _, _ = cap_sess
+    srv = sess.serve(buckets=(SEQ,), max_batch=8, max_delay=1e-4,
+                     async_maintenance=False, health_log_cap=4)
+    try:
+        for i in range(5):                        # 10 transitions
+            srv._set_health(Health.DEGRADED, f"flap {i}")
+            srv._set_health(Health.HEALTHY, f"heal {i}")
+        assert len(srv.health_log) == 4           # ring holds the tail
+        assert srv.n_health_transitions == 10     # total stays honest
+        assert [e[2] for e in srv.health_log] == \
+            ["flap 3", "heal 3", "flap 4", "heal 4"]
+    finally:
+        srv.close()
+
+
+def test_session_dir_reopens_after_sigkill(cap_sess, tmp_path):
+    """Kill a process mid-append/checkpoint on a copy of the session's
+    capacity dir, then reopen through ``MemoSession.load``: integrity
+    verifies clean and the recovered store serves hits again (tentpole
+    acceptance: reopen + verify_integrity + hit-rate recovery)."""
+    sess, corpus, m, params, tier_dir = cap_sess
+    sess.store.checkpoint()
+    d2 = str(tmp_path / "tier_copy")
+    shutil.copytree(tier_dir, d2)
+    shape = sess.store.apm_shape
+    rng = np.random.default_rng(1)
+    for trial in range(2):
+        acked = _kill_round(d2, shape, sess.store.embed_dim,
+                            sess.store.codec.name,
+                            float(rng.uniform(0.05, 0.3)), seed=trial)
+        assert acked >= 0
+    sess2 = MemoSession.load(d2, m, params)
+    assert sess2.store.capacity_ok
+    assert sess2.store.capacity.recovery is not None
+    assert sess2.store.verify_integrity() == []
+    assert sess2.store.live_count > 0
+    # hit-rate recovery: the adopted entries answer their own queries
+    live = np.flatnonzero(sess2.store.db.live_mask)[:8]
+    _, idx = sess2.store.lookup(sess2.store._embs_host[live], 1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]), live)
+    srv = sess2.serve(buckets=(SEQ,), max_batch=8, max_delay=1e-4)
+    try:
+        comps = _serve_some(srv, corpus, n=2)
+        srv.drain_maintenance(timeout=30, raise_errors=False)
+        assert len(comps) == 16
+        assert srv.health in (Health.HEALTHY, Health.DISK_DEGRADED)
+        assert srv.health is Health.HEALTHY
+    finally:
+        srv.close()
+
+
+# ------------------------------------------------ fail-fast chaos presets
+
+def test_capacity_fault_points_and_presets_registered():
+    for pt in ("capacity.disk_write_io", "capacity.journal_torn",
+               "capacity.checkpoint_crash", "capacity.mmap_bitflip"):
+        assert pt in FAULT_POINTS
+    for cls in ("disk_write_io", "journal_torn", "checkpoint_crash",
+                "mmap_bitflip"):
+        assert cls in CHAOS_PRESETS
+
+
+def test_serve_faults_rejects_unknown_class():
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks import serve_faults
+    with pytest.raises(ValueError, match="unknown chaos classes") as ei:
+        serve_faults.collect(quick=True, classes=("bogus",))
+    msg = str(ei.value)
+    for cls in sorted(CHAOS_PRESETS):
+        assert cls in msg                         # lists every choice
+
+
+def test_launch_server_rejects_unknown_fault(monkeypatch, capsys):
+    from repro.launch import server as launch_server
+    monkeypatch.setattr(sys, "argv", ["server", "--fault", "bogus"])
+    with pytest.raises(SystemExit) as ei:
+        launch_server.main()
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "invalid choice" in err and "disk_write_io" in err
+
+
+# ------------------------------------------------------------ spec plumbing
+
+def test_capacity_spec_flat_roundtrip_and_validation(tmp_path):
+    spec = MemoSpec.flat(capacity_dir=str(tmp_path / "t"),
+                         capacity_budget_mb=8.0,
+                         capacity_checkpoint_every=4)
+    assert spec.capacity.dir == str(tmp_path / "t")
+    assert spec.capacity.checkpoint_every == 4
+    spec2 = MemoSpec.from_dict(spec.to_dict())
+    assert spec2.capacity == spec.capacity
+    with pytest.raises(ValueError):
+        MemoSpec.flat(capacity_checkpoint_every=0)
+    with pytest.raises(ValueError):
+        MemoSpec.flat(capacity_stall_s=-1.0)
