@@ -36,6 +36,7 @@ MODULES = [
     "serve_compress",      # ISSUE 3: codec x index sweep (bytes/accuracy)
     "serve_runtime",       # ISSUE 4: open-loop runtime, sync vs async maint
     "serve_faults",        # ISSUE 6: chaos classes, degradation + recovery
+    "serve_sharded",       # ISSUE 9: 8-way sharded store vs single host
 ]
 
 
@@ -105,6 +106,15 @@ def _normalized_latencies(doc):
     cap = (doc.get("serve_faults") or {}).get("capacity") or {}
     if cap.get("hit_gap") is not None:
         out["faults/capacity/hit_gap"] = cap["hit_gap"]
+    # sharded store (ISSUE 9): both absolute-ceiling gates. Centroid
+    # routing may cost at most 0.05 hit rate vs the single-host store at
+    # the same total budget, and the greedy balanced ownership must keep
+    # the fullest shard within 2x of the mean occupancy.
+    sh = doc.get("serve_sharded") or {}
+    if sh.get("hit_gap") is not None:
+        out["sharded/hit_gap"] = sh["hit_gap"]
+    if (sh.get("sharded") or {}).get("imbalance") is not None:
+        out["sharded/occupancy_imbalance"] = sh["sharded"]["imbalance"]
     return out
 
 
@@ -137,6 +147,12 @@ ABS_BOUNDS["faults/capacity/hit_gap"] = 0.05
 for _lvl in ("moderate", "aggressive"):
     ABS_BOUNDS[f"serve_kernel/{_lvl}/kernel_over_select"] = 1.0
     ABS_BOUNDS[f"serve_kernel/{_lvl}/kernel_over_bucket"] = 1.35
+# sharded-store acceptance (ISSUE 9): an 8-way mesh serving a database
+# beyond any single shard's position budget stays within 0.05 hit rate
+# of the single-host store at equal total budget, with the fullest
+# shard at most 2x the mean occupancy
+ABS_BOUNDS["sharded/hit_gap"] = 0.05
+ABS_BOUNDS["sharded/occupancy_imbalance"] = 2.0
 
 
 def check_regress(new_doc, baseline_path, tol=0.10):
@@ -251,7 +267,8 @@ def main() -> None:
                            ("serve_online", "serve_online", "collect"),
                            ("serve_compress", "serve_compress", "collect"),
                            ("serve_runtime", "serve_runtime", "collect"),
-                           ("serve_faults", "serve_faults", "collect")]
+                           ("serve_faults", "serve_faults", "collect"),
+                           ("serve_sharded", "serve_sharded", "collect")]
         for doc_key, mod_name, fn_name in detail_sections:
             if not wanted(mod_name):
                 continue

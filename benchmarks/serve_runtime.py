@@ -18,10 +18,23 @@ wrapper time measured in isolation as a fraction of batch time —
 Sessions are built fresh per leg (NOT the lru-shared ``built_session``):
 serving mutates the store, and the A/B is only honest if both legs start
 from the identical calibration state.
+
+The **sharded leg** (ISSUE 9) lives in ``collect_sharded`` (exposed as
+the ``serve_sharded`` module/section): an 8-way CPU mesh subprocess
+(device count locks at first jax init) serving a database bigger than
+any single shard's position budget through ``ShardedMemoStore``, vs a
+single-host store at the SAME total byte budget. Records the hit-rate
+gap (the cost of centroid routing), per-shard occupancy balance, search
+latency, and fetched-payload parity; ``--check-regress`` ceilings the
+gap at 0.05 and the imbalance at 2x (benchmarks/run.py ABS_BOUNDS).
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -195,6 +208,151 @@ def collect():
     sess3, corpus3 = _build_session()
     out["facade_ab"] = _facade_ab(sess3, corpus3)
     return out
+
+
+# ------------------------------------------------------------- sharded leg
+
+_SHARDED_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.store import MemoStore
+from repro.core.shard import ShardedMemoStore
+
+APM, DIM = (2, 8, 8), 16
+N, T, BATCH, ROUNDS, THR = 2048, 64, 64, 12, 1.0
+rng = np.random.default_rng(0)
+
+# clustered corpus: T well-separated templates, each entry a jittered
+# template — queries near a template have an unambiguous nearest entry
+templates = (rng.normal(0, 1.0, (T, DIM)) * 4.0).astype(np.float32)
+assign = rng.integers(0, T, N)
+embs = (templates[assign]
+        + rng.normal(0, 0.05, (N, DIM))).astype(np.float32)
+apms = rng.random((N, *APM)).astype(np.float16)
+
+# equal TOTAL budget, sized so the live set exceeds one shard's
+# positions several-fold (the big-memory acceptance shape, ISSUE 9)
+entry = MemoStore(APM, DIM, codec="f16").entry_nbytes
+budget = 1536 * entry
+
+
+def build(sharded):
+    kw = dict(index_kind="exact", codec="f16", capacity=256,
+              budget_bytes=budget)
+    s = (ShardedMemoStore(APM, DIM, n_shards=8, hot_k=32,
+                          route_nprobe=4, **kw)
+         if sharded else
+         MemoStore(APM, DIM, device_index_kind="flat", **kw))
+    for i in range(0, N, 256):     # identical admission stream -> both
+        s.admit(apms[i:i + 256], embs[i:i + 256])   # stores evict the
+    s.sync(force_full=True)                         # same slots
+    return s
+
+
+def queries(rng):
+    # 3/4 near a template (should hit), 1/4 uniform noise (miss)
+    t = templates[rng.integers(0, T, BATCH)]
+    q = t + rng.normal(0, 0.05, (BATCH, DIM)).astype(np.float32)
+    q[::4] = rng.normal(0, 8.0, (BATCH // 4 + 1, DIM))[: len(q[::4])]
+    return jnp.asarray(q, jnp.float32)
+
+
+def leg(s, sharded):
+    di, db = s.device_index, s.device_db
+    if sharded:
+        fn = jax.jit(lambda args, parts, q: di.search_fetch(
+            q, args=args, parts=parts))
+    else:
+        def fn(args, parts, q):
+            d2, idx = di.search_device(q, args=args)
+            i0 = idx[:, 0].astype(jnp.int32)
+            return d2, idx, tuple(jnp.take(p, i0, 0) for p in parts)
+        fn = jax.jit(fn)
+    qrng = np.random.default_rng(42)     # same stream for both legs
+    hits = total = 0
+    times = []
+    parity = True
+    for r in range(ROUNDS):
+        q = queries(qrng)
+        jax.block_until_ready(fn(di.search_args, db.parts, q))
+        t0 = time.perf_counter()
+        d2, idx, rows = jax.block_until_ready(
+            fn(di.search_args, db.parts, q))
+        times.append(time.perf_counter() - t0)
+        dist = np.sqrt(np.maximum(np.asarray(d2)[:, 0], 0.0))
+        slot = np.asarray(idx)[:, 0]
+        ok = (dist < THR) & (slot >= 0)
+        hits += int(ok.sum())
+        total += int(ok.size)
+        if r == 0 and ok.any():          # fetched payload == arena rows
+            want = s.codec.decode_rows(
+                tuple(jnp.asarray(p)
+                      for p in s.db.parts_at(slot[ok])))
+            got = np.asarray(s.codec.decode_rows(
+                tuple(np.asarray(p)[ok] for p in rows)), np.float32)
+            parity = bool(np.allclose(got, np.asarray(want, np.float32),
+                                      atol=1e-3))
+    return {"hit_rate": hits / max(1, total),
+            "search_us_per_q": float(np.median(times) * 1e6 / BATCH),
+            "payload_parity": parity}
+
+single = leg(build(False), False)
+sh_store = build(True)
+sharded = leg(sh_store, True)
+st = sh_store.shard_stats()
+live = int(sh_store.db.live_mask[: len(sh_store.db)].sum())
+per_shard = sh_store.per_shard_budget_bytes
+out = {
+    "config": {"n_admitted": N, "dim": DIM, "batch": BATCH,
+               "rounds": ROUNDS, "threshold": THR,
+               "budget_mb": budget / 1e6, "n_shards": 8,
+               "route_nprobe": 4,
+               "backend": jax.default_backend()},
+    "single": single,
+    "sharded": dict(sharded, occupancy=st["occupancy"],
+                    imbalance=st["imbalance"],
+                    n_shard_evictions=st["n_shard_evictions"],
+                    n_spills=st["n_spills"],
+                    per_shard_budget_mb=per_shard / 1e6,
+                    db_over_shard_budget=live * entry / per_shard),
+    "hit_gap": abs(single["hit_rate"] - sharded["hit_rate"]),
+    "payload_parity": bool(single["payload_parity"]
+                           and sharded["payload_parity"]),
+}
+assert out["sharded"]["db_over_shard_budget"] > 1.0, out
+print("SHARDBENCH", json.dumps(out))
+"""
+
+
+@functools.lru_cache(maxsize=1)
+def collect_sharded():
+    """8-way mesh sharded-store leg, in a subprocess (the parent jax
+    already initialized with the default device count)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", _SHARDED_CODE],
+                         capture_output=True, text=True, env=env,
+                         cwd=repo, timeout=900)
+    for line in out.stdout.splitlines():
+        if line.startswith("SHARDBENCH "):
+            return json.loads(line[len("SHARDBENCH "):])
+    raise RuntimeError(f"sharded bench subprocess failed:\n"
+                       f"{out.stderr[-3000:]}")
+
+
+def run_sharded():
+    out = collect_sharded()
+    sh, si = out["sharded"], out["single"]
+    yield ("serve_sharded", sh["search_us_per_q"],
+           f"hit={sh['hit_rate']:.3f};single_hit={si['hit_rate']:.3f};"
+           f"hit_gap={out['hit_gap']:.3f};"
+           f"imbalance={sh['imbalance']:.2f};"
+           f"db_over_shard={sh['db_over_shard_budget']:.1f}x;"
+           f"single_us={si['search_us_per_q']:.0f};"
+           f"parity={out['payload_parity']}")
 
 
 def run():

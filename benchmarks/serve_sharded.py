@@ -1,0 +1,12 @@
+"""Sharded memo store benchmark (ISSUE 9 / DESIGN.md §2.12).
+
+Thin module wrapper so ``--only serve_sharded`` and the JSON detail
+section address the sharded leg on its own (the CI ``shard-smoke`` job);
+the implementation — an 8-way CPU-mesh subprocess serving a database
+bigger than any one shard's position budget, vs a single-host store at
+the same total byte budget — lives in ``serve_runtime.collect_sharded``.
+"""
+from __future__ import annotations
+
+from benchmarks.serve_runtime import collect_sharded as collect  # noqa: F401
+from benchmarks.serve_runtime import run_sharded as run  # noqa: F401

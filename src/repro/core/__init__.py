@@ -3,10 +3,11 @@ from repro.core.similarity import (  # noqa: F401
     memo_rate, pairwise_similarity, similarity_score)
 from repro.core.embedding import Embedder, train_embedder  # noqa: F401
 from repro.core.index import ExactIndex, IVFIndex, recall_at_1  # noqa: F401
-from repro.core.database import (  # noqa: F401
-    AttentionDB, DeviceDB, distributed_search)
+from repro.core.database import AttentionDB, DeviceDB  # noqa: F401
 from repro.core.selective import LayerProfile, PerfModel  # noqa: F401
 from repro.core.store import MemoStore, StoreStats  # noqa: F401
+from repro.core.shard import (  # noqa: F401
+    ShardedDeviceIndex, ShardedMemoStore, make_store_mesh, mesh_search)
 from repro.core.faults import (  # noqa: F401
     CHAOS_PRESETS, FAULT_POINTS, FaultInjector, MemoStoreError)
 from repro.core.registry import (  # noqa: F401

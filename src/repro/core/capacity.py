@@ -41,6 +41,7 @@ from __future__ import annotations
 import io
 import json
 import os
+import re
 import struct
 import time
 import zlib
@@ -58,6 +59,24 @@ _FRAME_HDR = struct.Struct("<III")   # magic, payload_len, payload_crc
 
 def _align(n: int) -> int:
     return (n + PAGE - 1) // PAGE * PAGE
+
+
+def _pid_alive(pid: int) -> bool:
+    """Best-effort liveness probe for stale-lock detection. ``kill(pid,
+    0)`` raising ``ProcessLookupError`` is the only *certain* answer
+    (dead); ``PermissionError`` means the pid exists under another uid —
+    treat as alive (refusing is the safe direction for a lock)."""
+    if pid <= 0:
+        return False
+    try:
+        os.kill(int(pid), 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    except OSError:
+        return True
+    return True
 
 
 def _fsync_dir(path: str) -> None:
@@ -342,8 +361,18 @@ class CapacityTier:
 
         MANIFEST.m3      format-3 bookkeeping (shadow-replaced)
         journal.wal      CRC-framed redo log since the last checkpoint
+        LOCK             single-writer pidfile (O_EXCL; stale locks of
+                         dead pids are reclaimed, live ones refused)
         part_<name>.dat  raw codec-part arena (mmap, grown by ftruncate)
         embs.dat         f32 embedding arena (mmap)
+
+    Arena files carry an *epoch*: epoch 0 keeps the bare names above,
+    epoch ``e`` > 0 uses ``part_<name>.e<e>.dat`` / ``embs.e<e>.dat``.
+    ``compact`` rewrites the live rows densely into the next epoch's
+    files and publishes the switch through the manifest (the usual
+    shadow-checkpoint commit point), returning the retired slots' bytes
+    to the filesystem; a crash at any instant leaves either the old
+    epoch (plus stray new-epoch files, GC'd on reopen) or the new one.
 
     Opening a directory that already has a manifest *recovers* it:
     replay the journal (stopping at a torn tail), CRC-sweep every live
@@ -354,6 +383,7 @@ class CapacityTier:
 
     MANIFEST = "MANIFEST.m3"
     JOURNAL = "journal.wal"
+    LOCKFILE = "LOCK"
 
     def __init__(self, root: str, *, codec, embed_dim: int,
                  capacity: int = 64,
@@ -367,25 +397,81 @@ class CapacityTier:
         self._faults = faults
         self._fsync = fsync
         os.makedirs(self.root, exist_ok=True)
+        self._lock_path = os.path.join(self.root, self.LOCKFILE)
+        self._lock_held = False
+        self._acquire_lock()
         self.recovery: Optional[dict] = None
         self.n_appended = 0
         self.n_retired = 0
         self.n_checkpoints = 0
+        self.n_compactions = 0
         self._parts: List[np.memmap] = []
         self._embs: Optional[np.memmap] = None
-        manifest = os.path.join(self.root, self.MANIFEST)
-        if os.path.exists(manifest):
-            self._recover(manifest)
-        else:
-            self._init_state(max(1, int(capacity)))
-            self._map_arenas(self.capacity)
-            self.journal = Journal(os.path.join(self.root, self.JOURNAL),
-                                   fsync=fsync, faults=faults)
-            self.checkpoint()
+        try:
+            manifest = os.path.join(self.root, self.MANIFEST)
+            if os.path.exists(manifest):
+                self._recover(manifest)
+            else:
+                self._init_state(max(1, int(capacity)))
+                self._map_arenas(self.capacity)
+                self.journal = Journal(
+                    os.path.join(self.root, self.JOURNAL),
+                    fsync=fsync, faults=faults)
+                self.checkpoint()
+        except BaseException:
+            self._release_lock()
+            raise
+
+    # ----------------------------------------------------- single-writer
+    def _acquire_lock(self) -> None:
+        """O_EXCL pidfile: exactly one process may journal this dir.
+        A lock naming a dead pid (SIGKILL'd writer) or our own pid (a
+        same-process reopen) is reclaimed; a different *live* pid is an
+        actionable conflict — two writers interleaving one WAL would
+        corrupt it silently."""
+        for _ in range(16):
+            try:
+                fd = os.open(self._lock_path,
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+            except FileExistsError:
+                try:
+                    with open(self._lock_path, "r") as f:
+                        owner = int(f.read().strip() or "0")
+                except (OSError, ValueError):
+                    owner = 0           # unreadable/empty: treat as stale
+                if owner != os.getpid() and _pid_alive(owner):
+                    raise MemoStoreError(
+                        f"capacity tier dir {self.root!r} is locked by "
+                        f"live process {owner} ({self._lock_path!r}); a "
+                        f"second writer would corrupt the journal — "
+                        f"close that process, or delete the lockfile if "
+                        f"it is wrong")
+                try:                    # stale or our own: reclaim
+                    os.unlink(self._lock_path)
+                except OSError:
+                    pass
+                continue
+            with os.fdopen(fd, "w") as f:
+                f.write(f"{os.getpid()}\n")
+            self._lock_held = True
+            return
+        raise MemoStoreError(
+            f"could not acquire capacity-tier lock {self._lock_path!r} "
+            f"(another process kept re-creating it)")
+
+    def _release_lock(self) -> None:
+        if not self._lock_held:
+            return
+        self._lock_held = False
+        try:
+            os.unlink(self._lock_path)
+        except OSError:
+            pass
 
     # ------------------------------------------------------------- state
     def _init_state(self, capacity: int) -> None:
         self.capacity = capacity
+        self.epoch = 0
         self._n = 0
         self._live = np.zeros(capacity, bool)
         self._lens = np.full(capacity, -1, np.int32)
@@ -411,9 +497,27 @@ class CapacityTier:
     def live_slots(self) -> np.ndarray:
         return np.flatnonzero(self._live[: self._n])
 
+    @property
+    def retired_fraction(self) -> float:
+        """Fraction of the allocated slot prefix that is a retired hole
+        (reclaimable by ``compact``)."""
+        return len(self._free) / max(1, int(self._n))
+
     # ------------------------------------------------------------- mmaps
-    def _part_path(self, spec) -> str:
-        return os.path.join(self.root, f"part_{spec.name}.dat")
+    def _epoch_suffix(self, epoch: Optional[int] = None) -> str:
+        e = self.epoch if epoch is None else int(epoch)
+        return ".dat" if e == 0 else f".e{e}.dat"
+
+    def _part_path(self, spec, epoch: Optional[int] = None) -> str:
+        return os.path.join(
+            self.root, f"part_{spec.name}{self._epoch_suffix(epoch)}")
+
+    def _embs_path(self, epoch: Optional[int] = None) -> str:
+        return os.path.join(self.root, f"embs{self._epoch_suffix(epoch)}")
+
+    def _arena_paths(self, epoch: Optional[int] = None) -> List[str]:
+        return [self._part_path(p, epoch) for p in self.codec.parts] \
+            + [self._embs_path(epoch)]
 
     def _map_file(self, path: str, shape: Tuple[int, ...], dtype) -> np.memmap:
         nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
@@ -429,7 +533,7 @@ class CapacityTier:
             self._map_file(self._part_path(p), (capacity,) + p.shape,
                            p.dtype)
             for p in self.codec.parts]
-        self._embs = self._map_file(os.path.join(self.root, "embs.dat"),
+        self._embs = self._map_file(self._embs_path(),
                                     (capacity, self.embed_dim), np.float32)
 
     def _flush_arenas(self) -> None:
@@ -569,6 +673,98 @@ class CapacityTier:
         if slots.size:
             np.add.at(self._reuse, slots, 1)
 
+    # -------------------------------------------------------- compaction
+    def compact(self) -> dict:
+        """Rewrite the live rows densely into the next epoch's arena
+        files and return the retired holes' bytes to the filesystem.
+
+        Commit protocol: stage the new epoch's files (dense copies,
+        flushed), then publish the switch by checkpointing a manifest
+        that names the new epoch — the same shadow-replace that commits
+        every other mutation. ``capacity.compact_crash`` fires after the
+        staging, before the publish: recovery then reopens the OLD epoch
+        (manifest + journal untouched) and GC's the stray new-epoch
+        files. Old slot ``live_slots[i]`` becomes new slot ``i``; the
+        ``on_compact(old_slots, new_slots)`` callback (fired after the
+        publish) lets the owner remap its host↔disk slot tables."""
+        old_epoch = self.epoch
+        old_paths = self._arena_paths(old_epoch)
+        old_bytes = sum(os.path.getsize(p) for p in old_paths
+                        if os.path.exists(p))
+        live = self.live_slots
+        nl = int(live.size)
+        new_cap = max(1, nl)
+        self._flush_arenas()
+        self.epoch = old_epoch + 1
+        try:
+            new_parts = [
+                self._map_file(self._part_path(p), (new_cap,) + p.shape,
+                               p.dtype)
+                for p in self.codec.parts]
+            new_embs = self._map_file(self._embs_path(),
+                                      (new_cap, self.embed_dim),
+                                      np.float32)
+            for dst, src in zip(new_parts, self._parts):
+                dst[:nl] = src[live]
+            new_embs[:nl] = self._embs[live]
+            for m in new_parts:
+                m.flush()
+            new_embs.flush()
+            if fire(self._faults, "capacity.compact_crash") is not None:
+                raise OSError(
+                    f"injected crash mid-compaction (epoch "
+                    f"{self.epoch} staged, manifest still at epoch "
+                    f"{old_epoch})")
+        except BaseException:
+            # nothing published: the manifest still names the old epoch
+            # and its arenas were never written — roll the in-memory
+            # epoch back (stray new-epoch files are GC'd on reopen)
+            self.epoch = old_epoch
+            raise
+        self._parts, self._embs = new_parts, new_embs
+        reclaimed = int(self._n) - nl
+        for name, fill in (("_live", True), ("_lens", -1), ("_reuse", 0)):
+            old = getattr(self, name)
+            fresh = np.full(new_cap, fill, old.dtype)
+            fresh[:nl] = old[live]
+            setattr(self, name, fresh)
+        self._live[nl:] = False
+        self._csums = [np.concatenate(
+            [c[live], np.zeros(new_cap - nl, np.uint32)]).astype(np.uint32)
+            for c in self._csums]
+        self._n = nl
+        self.capacity = new_cap
+        self._free = []
+        self.checkpoint()               # the commit point (new epoch)
+        cb = getattr(self, "on_compact", None)
+        if cb is not None:
+            cb(live, np.arange(nl, dtype=np.int64))
+        for p in old_paths:             # best-effort: reopen GC's strays
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+        self.n_compactions += 1
+        new_bytes = sum(os.path.getsize(p)
+                        for p in self._arena_paths(self.epoch)
+                        if os.path.exists(p))
+        return {"epoch": int(self.epoch), "live": nl,
+                "slots_reclaimed": reclaimed,
+                "bytes_returned": max(0, old_bytes - new_bytes)}
+
+    def _gc_stray_epochs(self) -> None:
+        """Remove arena files from any epoch other than the current one
+        — the debris of a compaction that crashed before (stray new
+        epoch) or after (undeleted old epoch) its manifest publish."""
+        keep = {os.path.basename(p) for p in self._arena_paths()}
+        pat = re.compile(r"^(?:part_.+?|embs)(?:\.e\d+)?\.dat$")
+        for f in os.listdir(self.root):
+            if f not in keep and pat.match(f):
+                try:
+                    os.remove(os.path.join(self.root, f))
+                except OSError:
+                    pass
+
     # ------------------------------------------------------------- reads
     def rows_at(self, slots: Sequence[int]) -> Tuple[
             Tuple[np.ndarray, ...], np.ndarray, np.ndarray,
@@ -644,6 +840,7 @@ class CapacityTier:
         meta = {"capacity": int(self.capacity),
                 "embed_dim": self.embed_dim,
                 "codec": self.codec.name,
+                "epoch": int(self.epoch),
                 "extra": self.extra_meta}
         write_format3(os.path.join(self.root, self.MANIFEST), meta, arrays,
                       fsync=self._fsync, faults=self._faults,
@@ -657,6 +854,7 @@ class CapacityTier:
         n = int(arrays["n"])
         cap = max(1, int(meta.get("capacity", n or 1)), n)
         self._init_state(cap)
+        self.epoch = int(meta.get("epoch", 0))
         self._n = n
         self._live[:n] = arrays["live"]
         self._lens[:n] = arrays["lens"]
@@ -704,6 +902,7 @@ class CapacityTier:
                          "n_quarantined": int(bad.size),
                          "live_after": self.live_count}
         self.checkpoint()
+        self._gc_stray_epochs()
 
     def flush(self) -> None:
         self._flush_arenas()
@@ -713,14 +912,20 @@ class CapacityTier:
             self._flush_arenas()
         except (OSError, ValueError):
             pass
-        self.journal.close()
+        try:
+            self.journal.close()
+        finally:
+            self._release_lock()
 
     def stats(self) -> dict:
         return {"live": self.live_count,
                 "bytes": self.nbytes,
                 "capacity": int(self.capacity),
+                "epoch": int(self.epoch),
                 "appended": self.n_appended,
                 "retired": self.n_retired,
+                "retired_fraction": self.retired_fraction,
                 "checkpoints": self.n_checkpoints,
+                "compactions": self.n_compactions,
                 "journal_bytes": self.journal.nbytes,
                 "recovery": self.recovery}

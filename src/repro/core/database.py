@@ -415,34 +415,3 @@ class DeviceDB:
         """Decoded gather (B,) → (B, H, L, L); with a sharded DB, XLA
         inserts the cross-shard collective automatically."""
         return self.codec.decode_rows(self.gather_parts(indices))
-
-
-def distributed_search(embs, queries, mesh, *, db_axis="data"):
-    """Distributed exact top-1 over an entry-sharded embedding table:
-    each shard computes its local argmin (one MXU matmul), then a small
-    (n_shards, B) all-gather + global argmin — the pod-scale index search
-    (DESIGN.md §2). embs: (N, dim) sharded P(db_axis); queries: (B, dim)
-    replicated. Returns (sq_dists (B,), global_idx (B,))."""
-    from jax.sharding import PartitionSpec as P
-
-    def body(db, q):
-        n_loc = db.shape[0]
-        d2 = (jnp.sum(q * q, -1, keepdims=True)
-              - 2.0 * q @ db.T + jnp.sum(db * db, -1)[None, :])
-        loc_arg = jnp.argmin(d2, axis=-1)
-        loc_min = jnp.take_along_axis(d2, loc_arg[:, None], -1)[:, 0]
-        shard = jax.lax.axis_index(db_axis)
-        gidx = loc_arg + shard * n_loc
-        mins = jax.lax.all_gather(loc_min, db_axis)      # (shards, B)
-        idxs = jax.lax.all_gather(gidx, db_axis)
-        best = jnp.argmin(mins, axis=0)                  # (B,)
-        cols = jnp.arange(q.shape[0])
-        return mins[best, cols], idxs[best, cols]
-
-    specs = dict(in_specs=(P(db_axis, None), P()), out_specs=(P(), P()))
-    if hasattr(jax, "shard_map"):
-        smap = jax.shard_map(body, mesh=mesh, check_vma=False, **specs)
-    else:  # jax<=0.4.x: experimental home, check_vma was check_rep
-        from jax.experimental.shard_map import shard_map as _shard_map
-        smap = _shard_map(body, mesh=mesh, check_rep=False, **specs)
-    return smap(embs, queries)

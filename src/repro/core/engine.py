@@ -292,15 +292,13 @@ class MemoEngine:
         mc = self.mc
         budget = (None if mc.budget_mb is None
                   else int(mc.budget_mb * 1e6))
-        return MemoStore(
-            tuple(apm_shape), mc.embed_dim,
+        kw = dict(
             index_kind=mc.index_kind, budget_bytes=budget,
             capacity=capacity, interpret=self._interpret,
             device_slack=mc.device_slack,
             n_lists=(n_lists if n_lists is not None
                      else max(4, int(np.sqrt(max(1, capacity))))),
             codec=mc.apm_codec, apm_rank=mc.apm_rank,
-            device_index_kind=mc.device_index,
             cluster_crossover=mc.cluster_crossover,
             nprobe=mc.nprobe, n_clusters=mc.n_clusters,
             eviction=mc.eviction.kind, faults=self.faults,
@@ -308,6 +306,15 @@ class MemoEngine:
             capacity_budget_mb=mc.capacity.budget_mb,
             capacity_fsync=mc.capacity.fsync,
             capacity_stall_s=mc.capacity.stall_s)
+        if getattr(mc, "shards", 0):
+            from repro.core.shard import ShardedMemoStore
+            return ShardedMemoStore(
+                tuple(apm_shape), mc.embed_dim,
+                n_shards=mc.shards, shard_axis=mc.shard_axis,
+                hot_k=mc.shard_hot, route_nprobe=mc.shard_route_nprobe,
+                **kw)
+        return MemoStore(tuple(apm_shape), mc.embed_dim,
+                         device_index_kind=mc.device_index, **kw)
 
     # ------------------------------------------------------------------ build
     def build(self, key, batches: Sequence[dict], *, train_pairs=512,
@@ -686,6 +693,12 @@ class MemoEngine:
             # after a rebuild swaps in a new instance of the same class
             # (the class itself is part of the jit key via index_key)
             index = view.index
+            # sharded store (DESIGN.md §2.12): the index returns the
+            # winner's codec rows FROM its single-collective combine —
+            # the device arenas are position-indexed per shard, so a
+            # slot-id gather against them would be wrong (and a second
+            # cross-shard collective)
+            sharded = getattr(index, "is_sharded", False)
             f_memo = (attn_mod.gqa_apply_memo if kind == "attn"
                       else attn_mod.mla_apply_memo)
             f_attn = (attn_mod.gqa_apply if kind == "attn"
@@ -735,8 +748,13 @@ class MemoEngine:
                 # fused=True on the kernel path forces the one-matmul
                 # search prologue so memo_attention is the layer's ONLY
                 # Pallas dispatch (the norms cached in sargs keep it cheap)
-                d2, idx = index.search_device(emb, args=sargs,
-                                              fused=kernel_path)
+                if sharded:
+                    d2, idx, drows = index.search_fetch(
+                        emb, args=sargs, parts=db_parts)
+                else:
+                    drows = None
+                    d2, idx = index.search_device(emb, args=sargs,
+                                                  fused=kernel_path)
                 dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
                 sim = a * dist + b
                 hit = sim > thr
@@ -761,8 +779,9 @@ class MemoEngine:
                     the calibration length; padded-row gathers slice to
                     this bucket's length (parity with the select path's
                     host-side slice)."""
-                    rows = tuple(jnp.take(p, idx0, axis=0)
-                                 for p in db_parts)
+                    rows = (drows if sharded
+                            else tuple(jnp.take(p, idx0, axis=0)
+                                       for p in db_parts))
                     apm = codec.decode_rows(rows).astype(jnp.float32)
                     if apm.shape[-1] != S:
                         apm = apm[..., :S, :S]
@@ -779,20 +798,22 @@ class MemoEngine:
                                          else None))
                     if varlen:      # padded key positions mask per sequence
                         kw["lengths"] = qlen
-                    if codec_name == "int8":
+                    if codec_name == "int8" and not sharded:
                         # fused-dequant gather: int8 tiles + scale slivers,
                         # dequantized in the kernel's VMEM
                         out = memo_attention(
                             qq, kk, vv, db_parts[0], idx0,
                             hit.astype(jnp.int32), db_scales=db_parts[1],
                             **kw)
-                    elif codec_name == "f16":
+                    elif codec_name == "f16" and not sharded:
                         out = memo_attention(
                             qq, kk, vv, db_parts[0], idx0,
                             hit.astype(jnp.int32), **kw)
                     else:
-                        # factorized codecs: decode the B gathered rows
-                        # (not the DB) and feed them as a B-row database
+                        # factorized codecs — and ANY codec on the
+                        # sharded path, whose arenas are position-
+                        # indexed: decode the B gathered rows (not the
+                        # DB) and feed them as a B-row database
                         out = memo_attention(
                             qq, kk, vv, gather_apm(),
                             jnp.arange(B, dtype=jnp.int32),
@@ -1332,12 +1353,20 @@ class MemoEngine:
             pool, act = self.embedder.pool, self.embedder.act
             from repro.core.embedding import embed_apply
 
+            sharded = getattr(store.device_index, "is_sharded", False)
+
             def run(emb_p, x, sargs, db_parts, a, b):
                 emb = embed_apply(emb_p, x, pool, act)
-                d2, idx = store.device_index.search_device(emb, args=sargs)
+                if sharded:     # rows ride the combine (position-indexed
+                    d2, _, rows = store.device_index.search_fetch(
+                        emb, args=sargs, parts=db_parts)    # arenas)
+                else:
+                    d2, idx = store.device_index.search_device(
+                        emb, args=sargs)
+                    idx0 = idx[:, 0].astype(jnp.int32)
+                    rows = tuple(jnp.take(p, idx0, axis=0)
+                                 for p in db_parts)
                 dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
-                idx0 = idx[:, 0].astype(jnp.int32)
-                rows = tuple(jnp.take(p, idx0, axis=0) for p in db_parts)
                 return (a * dist + b,
                         store.codec.decode_rows(rows).astype(jnp.float32))
             fn = self._jit_cache[key] = jax.jit(run)

@@ -75,6 +75,10 @@ FAULT_POINTS: Dict[str, str] = {
                                  "(old manifest + journal survive)",
     "capacity.mmap_bitflip":    "CapacityTier.append: flip one arena byte "
                                 "after its row checksum was recorded",
+    "capacity.compact_crash":   "CapacityTier.compact: die after the new "
+                                "epoch's dense arenas are staged, before "
+                                "the manifest publishes (old epoch + "
+                                "journal survive; strays GC'd on reopen)",
 }
 
 
@@ -196,4 +200,5 @@ CHAOS_PRESETS: Dict[str, Dict[str, Dict]] = {
     "journal_torn":     {"capacity.journal_torn": {"p": 1.0}},
     "checkpoint_crash": {"capacity.checkpoint_crash": {"p": 1.0}},
     "mmap_bitflip":     {"capacity.mmap_bitflip": {"every": 2}},
+    "compact_crash":    {"capacity.compact_crash": {"p": 1.0}},
 }

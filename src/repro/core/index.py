@@ -10,7 +10,7 @@ and to SPMD, so we provide matmul-shaped indexes (DESIGN.md §2):
 * ``DeviceIndex`` — the serving tier: the embedding table is a device
                     array and search is traceable inside a jit (streaming
                     Pallas ``nn_search`` on TPU, one-matmul fallback on
-                    CPU/interpret, ``distributed_search`` under a mesh),
+                    CPU/interpret, ``shard.mesh_search`` under a mesh),
                     so the engine's embed→search→threshold→gather pipeline
                     never leaves the accelerator.
 * ``ClusteredDeviceIndex`` — the scale tier (DESIGN.md §2.6): an IVF
@@ -234,7 +234,7 @@ class DeviceIndex:
     * CPU/interpret — the ExactIndex one-matmul formulation (running the
                       kernel under the Pallas interpreter would be strictly
                       slower than XLA's fused matmul).
-    * mesh          — ``distributed_search``: per-shard local argmin + a
+    * mesh          — ``shard.mesh_search``: per-shard local argmin + a
                       small all-gather (the multi-host pod case).
     """
 
@@ -377,9 +377,9 @@ class DeviceIndex:
         q = jnp.asarray(q, jnp.float32)
         if k == 1:
             if self.mesh is not None:
-                from repro.core.database import distributed_search
-                d2, idx = distributed_search(t, q, self.mesh,
-                                             db_axis=self.db_axis)
+                from repro.core.shard import mesh_search
+                d2, idx = mesh_search(t, q, self.mesh,
+                                      db_axis=self.db_axis)
             elif self.use_kernel and not fused:
                 from repro.kernels.nn_search.ops import nn_search
                 d2, idx = nn_search(q, t, db_norms=norms,
@@ -453,7 +453,7 @@ class ClusteredDeviceIndex(DeviceIndex):
     must not flip. (The asymmetric exact-norm form was tried and
     rejected: its −2q·Δ error scales with ‖q‖.)
 
-    Under a mesh, search falls back to ``distributed_search`` over a
+    Under a mesh, search falls back to ``shard.mesh_search`` over a
     lazily-cached dequantized f32 replica (the clustered stages are a
     single-replica optimization; the pod path keeps its O(shards·B)
     collective).
@@ -794,9 +794,9 @@ class ClusteredDeviceIndex(DeviceIndex):
             t = (args if args is not None and not isinstance(args, tuple)
                  else (table if table is not None else self.table))
             if k == 1:
-                from repro.core.database import distributed_search
-                d2, idx = distributed_search(t, q, self.mesh,
-                                             db_axis=self.db_axis)
+                from repro.core.shard import mesh_search
+                d2, idx = mesh_search(t, q, self.mesh,
+                                      db_axis=self.db_axis)
                 return d2[:, None], idx[:, None]
             neg, idx = jax.lax.top_k(-_sq_dists(q, t), k)
             return -neg, idx.astype(jnp.int32)

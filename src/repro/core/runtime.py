@@ -174,6 +174,11 @@ class MemoServer:
             else checkpoint_every)
         self._applies_since_ckpt = 0
         self.n_checkpoints = 0
+        # background re-compaction (DESIGN.md §2.11): when the tier's
+        # retired-hole fraction crosses compact_ratio, the maintenance
+        # actor rewrites it densely right after a checkpoint
+        self.compact_ratio = engine.mc.capacity.compact_ratio
+        self.n_compactions = 0
         self.n_maint_shed = 0             # payloads dropped, never requests
         self.n_maint_retries = 0
         self.n_exact_batches = 0          # batches served in MEMO_DISABLED
@@ -349,6 +354,10 @@ class MemoServer:
                 self._applies_since_ckpt = 0
                 if store.checkpoint():
                     self.n_checkpoints += 1
+                if self.compact_ratio is not None \
+                        and store.compact_capacity(
+                            self.compact_ratio) is not None:
+                    self.n_compactions += 1
         self._note_disk()
 
     def _check_worker(self) -> None:

@@ -276,6 +276,7 @@ class MemoStore:
             budget_bytes=budget, faults=self._faults,
             fsync=self._capacity_fsync)
         self.capacity.on_retire = self._on_disk_retire
+        self.capacity.on_compact = self._on_disk_compact
         # a recovered manifest carries the calibration it was
         # checkpointed under — adopt it so a dir-load serves with the
         # sim map the entries were admitted against
@@ -296,6 +297,21 @@ class MemoStore:
             h = self._disk_to_host.pop(int(d), None)
             if h is not None:
                 self._host_to_disk.pop(h, None)
+
+    def _on_disk_compact(self, old_slots, new_slots) -> None:
+        """Tier callback: compaction renumbered every live disk slot —
+        rewrite the host↔disk maps so mirrored entries stay linked (a
+        stale map would alias the write-through dedup)."""
+        remap = {int(o): int(w) for o, w in zip(
+            np.asarray(old_slots).reshape(-1),
+            np.asarray(new_slots).reshape(-1))}
+        h2d, d2h = {}, {}
+        for h, d in self._host_to_disk.items():
+            w = remap.get(int(d))
+            if w is not None:
+                h2d[h] = w
+                d2h[w] = h
+        self._host_to_disk, self._disk_to_host = h2d, d2h
 
     def _capacity_op(self, fn, *args, **kwargs):
         """Run one tier op with the stall watchdog: an op slower than
@@ -438,6 +454,28 @@ class MemoStore:
             except Exception as e:      # noqa: BLE001 — degrade
                 self._capacity_fail(e)
                 return False
+
+    def compact_capacity(self, min_retired: float = 0.0) -> Optional[dict]:
+        """Re-compact the disk tier when at least ``min_retired`` of its
+        allocated slots are retired holes (the maintenance worker calls
+        this on the ``CapacitySpec.compact_ratio`` trigger). Returns the
+        tier's compaction report, or ``None`` when below the threshold /
+        tier detached. Failures detach the tier, never raise — the
+        crash-consistency contract is the tier's (epoch publish)."""
+        with self._lock:
+            if not self.capacity_ok:
+                return None
+            tier = self.capacity
+            if tier.retired_fraction < float(min_retired):
+                return None
+            try:
+                # deliberately not under the stall watchdog: rewriting
+                # every live row is legitimately proportional to the
+                # arena, not a hung-disk signal
+                return tier.compact()
+            except Exception as e:      # noqa: BLE001 — degrade
+                self._capacity_fail(e)
+                return None
 
     def reattach_capacity(self) -> bool:
         """Re-open the capacity tier after a disk fault (the
@@ -724,6 +762,80 @@ class MemoStore:
         with self._lock:
             return self._sync_locked(force_full)
 
+    def _need_full_sync_locked(self, n: int, force_full: bool) -> bool:
+        """Full-vs-delta decision — overridable (the sharded store adds
+        its own position-capacity criteria). Base: re-materialize when
+        forced, when the device tier doesn't exist yet, when the arena
+        outgrew the device allocation, or when the auto index kind
+        flipped across ``cluster_crossover``."""
+        return (force_full or self.device_db is None
+                or n > self.device_db.capacity
+                or self.device_index is None
+                or n > self.device_index.capacity
+                or self._device_index_kind(n)
+                != self._device_index_kind_of(self.device_index))
+
+    def _full_sync_device_locked(self, n: int) -> int:
+        """Re-materialize the whole device tier (DB + index + lengths)
+        with fresh slack; returns bytes shipped. Overridable — the
+        sharded store replaces the layout wholesale."""
+        cap = n + max(8, int(n * self.device_slack))
+        self.device_db = DeviceDB.from_host(self.db, capacity=cap)
+        kind = self._device_index_kind(n)
+        di = DEVICE_INDEXES.resolve(kind)(
+            self.embed_dim, capacity=cap, nprobe=self.nprobe,
+            n_clusters=self.n_clusters, interpret=self._interpret,
+            mesh=self._mesh)
+        di._registry_kind = kind
+        di.add(self._embs_host[:n])
+        if isinstance(di, ClusteredDeviceIndex):
+            # build eagerly: the k-means belongs on the sync (batch)
+            # boundary, not inside the first serving dispatch, and
+            # the full-sync receipt must include the shipped clusters
+            di.rebuild()
+        if isinstance(self.index, DeviceIndex):
+            # the device table IS the host-tier index: swap in the
+            # re-materialized one so both roles stay one object
+            self.index = di
+        self.device_index = di
+        lens = np.full((cap,), -1, np.int32)
+        lens[:n] = self._lens_host[:n]
+        self._dev_lens = jnp.asarray(lens)
+        return (self.device_db.transfer_bytes
+                + self.device_index.transfer_bytes + int(lens.nbytes))
+
+    def _delta_sync_device_locked(self, n: int,
+                                  slots: np.ndarray) -> int:
+        """Ship exactly the dirty ``slots`` (< n, sorted) as scatter
+        deltas; returns bytes shipped. Overridable — the sharded store
+        routes each slot to a shard-owned position instead."""
+        # ship the COMPRESSED rows: delta bytes shrink by the codec
+        # ratio, same as the resident arenas
+        shipped = self.device_db.update(slots, self.db.parts_at(slots))
+        b0 = self.device_index.transfer_bytes
+        # evicted slots go through remove(), not assign(): for the
+        # clustered index an assign() would append the tombstone row
+        # to the always-scored overflow buffer (and count toward the
+        # rebuild trigger); remove() tombstones in place
+        dead = slots[~self.db._live[slots]]
+        live = slots[self.db._live[slots]]
+        if live.size:
+            self.device_index.assign(live, self._embs_host[live])
+        if dead.size:
+            self.device_index.remove(dead)
+        shipped += self.device_index.transfer_bytes - b0
+        if self._dev_lens is None:      # device tier predates lengths
+            lens = np.full((self.device_db.capacity,), -1, np.int32)
+            lens[:n] = self._lens_host[:n]
+            self._dev_lens = jnp.asarray(lens)
+            shipped += int(lens.nbytes)
+        if slots.size:
+            sl, vals = pad_delta_pow2(slots, self._lens_host[slots])
+            self._dev_lens = self._dev_lens.at[jnp.asarray(sl)].set(
+                jnp.asarray(vals))
+            shipped += int(vals.nbytes + sl.size * 4)
+        return shipped
+
     def _sync_locked(self, force_full: bool) -> Dict[str, object]:
         if fire(self._faults, "store.sync_fail") is not None:
             # injected BEFORE any mutation: a retried sync starts clean
@@ -738,12 +850,7 @@ class MemoStore:
             if self._snapshot is None:
                 self.publish()
             return {"kind": "noop", "bytes": 0}
-        need_full = (force_full or self.device_db is None
-                     or n > self.device_db.capacity
-                     or self.device_index is None
-                     or n > self.device_index.capacity
-                     or self._device_index_kind(n)
-                     != self._device_index_kind_of(self.device_index))
+        need_full = self._need_full_sync_locked(n, force_full)
         # integrity gate on what is about to ship (DESIGN.md §2.9): a
         # full sync re-verifies every live entry, a delta verifies the
         # dirty rows in flight; mismatches are quarantined (tombstoned)
@@ -754,62 +861,14 @@ class MemoStore:
         if bad.size:
             self._quarantine_locked(bad)
         if need_full:
-            cap = n + max(8, int(n * self.device_slack))
-            self.device_db = DeviceDB.from_host(self.db, capacity=cap)
-            kind = self._device_index_kind(n)
-            di = DEVICE_INDEXES.resolve(kind)(
-                self.embed_dim, capacity=cap, nprobe=self.nprobe,
-                n_clusters=self.n_clusters, interpret=self._interpret,
-                mesh=self._mesh)
-            di._registry_kind = kind
-            di.add(self._embs_host[:n])
-            if isinstance(di, ClusteredDeviceIndex):
-                # build eagerly: the k-means belongs on the sync (batch)
-                # boundary, not inside the first serving dispatch, and
-                # the full-sync receipt must include the shipped clusters
-                di.rebuild()
-            if isinstance(self.index, DeviceIndex):
-                # the device table IS the host-tier index: swap in the
-                # re-materialized one so both roles stay one object
-                self.index = di
-            self.device_index = di
-            lens = np.full((cap,), -1, np.int32)
-            lens[:n] = self._lens_host[:n]
-            self._dev_lens = jnp.asarray(lens)
-            shipped = (self.device_db.transfer_bytes
-                       + self.device_index.transfer_bytes
-                       + int(lens.nbytes))
+            shipped = self._full_sync_device_locked(n)
             self.stats.n_full_syncs += 1
             self.stats.bytes_full += shipped
             kind = "full"
         else:
             slots = np.asarray(sorted(self._dirty), np.int64)
             slots = slots[slots < n]
-            # ship the COMPRESSED rows: delta bytes shrink by the codec
-            # ratio, same as the resident arenas
-            shipped = self.device_db.update(slots, self.db.parts_at(slots))
-            b0 = self.device_index.transfer_bytes
-            # evicted slots go through remove(), not assign(): for the
-            # clustered index an assign() would append the tombstone row
-            # to the always-scored overflow buffer (and count toward the
-            # rebuild trigger); remove() tombstones in place
-            dead = slots[~self.db._live[slots]]
-            live = slots[self.db._live[slots]]
-            if live.size:
-                self.device_index.assign(live, self._embs_host[live])
-            if dead.size:
-                self.device_index.remove(dead)
-            shipped += self.device_index.transfer_bytes - b0
-            if self._dev_lens is None:      # device tier predates lengths
-                lens = np.full((self.device_db.capacity,), -1, np.int32)
-                lens[:n] = self._lens_host[:n]
-                self._dev_lens = jnp.asarray(lens)
-                shipped += int(lens.nbytes)
-            if slots.size:
-                sl, vals = pad_delta_pow2(slots, self._lens_host[slots])
-                self._dev_lens = self._dev_lens.at[jnp.asarray(sl)].set(
-                    jnp.asarray(vals))
-                shipped += int(vals.nbytes + sl.size * 4)
+            shipped = self._delta_sync_device_locked(n, slots)
             self.stats.n_delta_syncs += 1
             self.stats.bytes_delta += shipped
             kind = "delta"

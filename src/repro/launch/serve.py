@@ -152,6 +152,16 @@ def main():
                          "--cluster-crossover entries")
     ap.add_argument("--cluster-crossover", type=int, default=4096)
     ap.add_argument("--nprobe", type=int, default=16)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="partition the device memo store over N mesh "
+                         "shards (0 = single-device store); run with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to shard a CPU host")
+    ap.add_argument("--shard-hot", type=int, default=32,
+                    help="replicated hot-entry set size per shard")
+    ap.add_argument("--shard-nprobe", type=int, default=None,
+                    help="centroid probes per query when routing to "
+                         "shards (default: the store picks)")
     ap.add_argument("--no-memo", action="store_true")
     ap.add_argument("--no-fast-path", action="store_true",
                     help="force the host-synchronous serving path "
@@ -220,7 +230,9 @@ def main():
         device_fast_path=False if args.no_fast_path else None,
         budget_mb=args.budget_mb if args.online else None,
         admit_every=args.admit_every,
-        recal_every=2 if args.online else None)
+        recal_every=2 if args.online else None,
+        shards=args.shards, shard_hot=args.shard_hot,
+        shard_route_nprobe=args.shard_nprobe)
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     t0 = time.perf_counter()
@@ -351,6 +363,13 @@ def main():
         else:
             print(f"[serve] overhead     embed {st.t_embed:.2f}s "
                   f"search {st.t_search:.2f}s fetch {st.t_fetch:.2f}s")
+    if getattr(store, "shard_stats", None) is not None:
+        ss = store.shard_stats()
+        print(f"[serve] shards       {ss['n_shards']} x "
+              f"{ss['positions_per_shard']} positions, occupancy "
+              f"{ss['occupancy']} (imbalance {ss['imbalance']:.2f}x), "
+              f"evictions {ss['n_shard_evictions']}, "
+              f"spills {ss['n_spills']}")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ _EXPORTS = {
     "EvictionPolicy": ("repro.memo.specs", "EvictionPolicy"),
     "RuntimeSpec": ("repro.memo.specs", "RuntimeSpec"),
     "CapacitySpec": ("repro.memo.specs", "CapacitySpec"),
+    "ShardSpec": ("repro.memo.specs", "ShardSpec"),
     "FLAT_FIELDS": ("repro.memo.specs", "FLAT_FIELDS"),
     # registries
     "register_codec": ("repro.core.registry", "register_codec"),

@@ -50,8 +50,8 @@ def _registries():
 
 __all__ = [
     "EmbedSpec", "IndexSpec", "CodecSpec", "AdmissionPolicy",
-    "EvictionPolicy", "RuntimeSpec", "CapacitySpec", "MemoSpec",
-    "MemoConfig", "FLAT_FIELDS",
+    "EvictionPolicy", "RuntimeSpec", "CapacitySpec", "ShardSpec",
+    "MemoSpec", "MemoConfig", "FLAT_FIELDS",
 ]
 
 
@@ -213,6 +213,10 @@ class CapacitySpec:
     stall_s: float = 5.0            # disk-op watchdog → DISK_DEGRADED
     fsync: bool = True              # fsync WAL frames + checkpoints (off:
                                     # survive crashes, not power loss)
+    # background re-compaction: when the retired fraction of the arenas
+    # exceeds this ratio, the maintenance worker rewrites them dense
+    # (returning bytes to the filesystem). None = never compact.
+    compact_ratio: Optional[float] = None
 
     def __post_init__(self):
         _require(self.budget_mb is None or float(self.budget_mb) > 0,
@@ -224,6 +228,34 @@ class CapacitySpec:
                  f"{self.checkpoint_every}")
         _require(float(self.stall_s) > 0,
                  f"capacity stall_s must be > 0: {self.stall_s}")
+        _require(self.compact_ratio is None
+                 or 0 < float(self.compact_ratio) <= 1,
+                 f"capacity compact_ratio must be None or in (0, 1]: "
+                 f"{self.compact_ratio}")
+
+
+@dataclass
+class ShardSpec:
+    """The sharded device tier (DESIGN.md §2.12): partition the memo
+    store's device arenas + index rows over a mesh axis, routed by
+    nearest centroid. ``shards=0`` (the default) keeps the single-host
+    store and every other field inert; ``shards=N`` requests an N-way
+    1-D mesh over the local devices (clamped to ``jax.device_count()``).
+    """
+    shards: int = 0                 # 0 = single-host store (no mesh)
+    axis: str = "store"             # mesh axis name for the store
+    hot: int = 32                   # replicated hot-set size (rows)
+    route_nprobe: Optional[int] = None  # centroids probed per query
+    #                                     (None = IndexSpec.nprobe)
+
+    def __post_init__(self):
+        _require(int(self.shards) >= 0,
+                 f"shards must be >= 0: {self.shards}")
+        _require(bool(self.axis), "shard axis must be a non-empty name")
+        _require(int(self.hot) >= 0,
+                 f"shard hot-set size must be >= 0: {self.hot}")
+        _require(self.route_nprobe is None or int(self.route_nprobe) >= 1,
+                 f"route_nprobe must be None or >= 1: {self.route_nprobe}")
 
 
 # old flat MemoConfig field → (component, field) — the single source of
@@ -267,6 +299,12 @@ FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
     "capacity_checkpoint_every": ("capacity", "checkpoint_every"),
     "capacity_stall_s": ("capacity", "stall_s"),
     "capacity_fsync": ("capacity", "fsync"),
+    "capacity_compact_ratio": ("capacity", "compact_ratio"),
+    # new in the sharded store (DESIGN.md §2.12)
+    "shards": ("shard", "shards"),
+    "shard_axis": ("shard", "axis"),
+    "shard_hot": ("shard", "hot"),
+    "shard_route_nprobe": ("shard", "route_nprobe"),
 }
 
 
@@ -285,13 +323,14 @@ class MemoSpec:
     eviction: EvictionPolicy = field(default_factory=EvictionPolicy)
     runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
     capacity: CapacitySpec = field(default_factory=CapacitySpec)
+    shard: ShardSpec = field(default_factory=ShardSpec)
 
     _COMPONENTS = ("embed", "index", "codec", "admission", "eviction",
-                   "runtime", "capacity")
+                   "runtime", "capacity", "shard")
     _COMPONENT_TYPES = {"embed": EmbedSpec, "index": IndexSpec,
                         "codec": CodecSpec, "admission": AdmissionPolicy,
                         "eviction": EvictionPolicy, "runtime": RuntimeSpec,
-                        "capacity": CapacitySpec}
+                        "capacity": CapacitySpec, "shard": ShardSpec}
 
     def __post_init__(self):
         # fail-fast on the likeliest migration mistake: passing a string

@@ -117,6 +117,45 @@ def batch_shardings(batch_tree, mesh: Mesh, dp_axes=("data",)):
     return jax.tree.map(one, batch_tree)
 
 
+# --- memo-store rules (DESIGN.md §2.12) ---------------------------------
+# The sharded memo tier partitions ROWS (positions) of every device-
+# resident leaf — embedding table, slot map, codec-part arenas — over one
+# mesh axis; routing state (centroids, owners) and the hot set replicate.
+# Expressed as logical rules so they go through the same `_spec_for`
+# legalization as model params (an indivisible row count falls back to
+# replicated instead of failing pjit).
+
+def memo_store_rules(axis: str = "store") -> Dict[str, object]:
+    """Logical-name → mesh-axis rules for the sharded memo store."""
+    return {
+        "memo_rows": axis,        # table/arena row (position) dim
+        "memo_part": None,        # trailing per-entry dims
+        "memo_repl": None,        # centroids / owners / hot set
+    }
+
+
+def memo_row_spec(mesh: Mesh, ndim: int, *, axis: str = "store",
+                  shape: Optional[Tuple[int, ...]] = None) -> P:
+    """PartitionSpec for one row-sharded memo leaf of rank ``ndim``:
+    dim 0 over ``axis`` (legalized against ``shape`` when given),
+    trailing dims replicated."""
+    names = ("memo_rows",) + ("memo_part",) * (ndim - 1)
+    return _spec_for(names, memo_store_rules(axis), mesh, shape)
+
+
+def memo_store_shardings(mesh: Mesh, abs_tree, *, axis: str = "store"):
+    """Row-sharded NamedShardings for a pytree of memo-store leaves
+    (arrays or ShapeDtypeStructs): the leading dim partitions over
+    ``axis``, everything else replicates. Leaves whose row count does
+    not divide the axis size legalize to replicated."""
+    def one(ab):
+        shape = tuple(ab.shape)
+        ndim = max(1, len(shape))
+        return NamedSharding(mesh, memo_row_spec(mesh, ndim, axis=axis,
+                                                 shape=shape))
+    return jax.tree.map(one, abs_tree)
+
+
 def cache_shardings(cache_tree, mesh: Mesh, dp_axes=("data",),
                     seq_axis="model"):
     """Decode-cache shardings: batch over dp when divisible, the long axis

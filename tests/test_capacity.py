@@ -350,6 +350,214 @@ def test_sigkill_at_random_points_recovers_clean(tmp_path):
     assert acked_rows > 0
 
 
+# -------------------------------------------- single-writer lock (ISSUE 9)
+
+def test_lockfile_refuses_live_second_writer(tmp_path):
+    """Two processes must never journal one dir: a subprocess opening a
+    dir we hold the lock on gets an actionable MemoStoreError naming the
+    owning pid and the lockfile."""
+    root = str(tmp_path / "t")
+    t = _tier(root)
+    code = textwrap.dedent(f"""\
+        from repro.core.capacity import CapacityTier
+        from repro.core.codec import get_codec
+        from repro.core.faults import MemoStoreError
+        try:
+            CapacityTier({root!r}, codec=get_codec("f16", {APM!r}),
+                         embed_dim={EMB})
+        except MemoStoreError as e:
+            print("CONFLICT", e)
+        else:
+            print("NO-CONFLICT")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=dict(os.environ, PYTHONPATH=SRC))
+    assert "CONFLICT" in r.stdout, r.stdout + r.stderr
+    assert str(os.getpid()) in r.stdout          # names the owner
+    assert "LOCK" in r.stdout                    # names the lockfile
+    t.close()
+    assert not os.path.exists(os.path.join(root, "LOCK"))
+
+
+def test_lockfile_stale_and_same_pid_reclaimed(tmp_path):
+    """A lock naming a dead pid (SIGKILL'd writer) or our own pid (a
+    same-process reopen) is reclaimed, not refused; garbage content
+    counts as stale."""
+    root = str(tmp_path / "t")
+    _tier(root).close()
+    for content in ["999999999\n", "not-a-pid", ""]:
+        with open(os.path.join(root, "LOCK"), "w") as f:
+            f.write(content)
+        t = _tier(root)
+        with open(os.path.join(root, "LOCK")) as f:
+            assert int(f.read()) == os.getpid()
+        t.close()
+    t = _tier(root)                  # same-pid double-open: takeover
+    t2 = _tier(root)
+    t2.close()
+
+
+# ------------------------------------------------ re-compaction (ISSUE 9)
+
+def test_compact_returns_bytes_and_preserves_rows(tmp_path):
+    rng = np.random.default_rng(0)
+    t = _tier(tmp_path / "t")
+    parts, embs, lens = _tier_rows(rng, t.codec, 20)
+    slots = t.append(parts, embs, lens)
+    t.retire(slots[5:15])
+    assert t.retired_fraction == pytest.approx(0.5)
+    keep = np.asarray([0, 1, 2, 3, 4, 15, 16, 17, 18, 19])
+    old_bytes = sum(os.path.getsize(p) for p in t._arena_paths())
+    rep = t.compact()
+    assert rep["epoch"] == 1 and rep["live"] == 10
+    assert rep["slots_reclaimed"] == 10 and rep["bytes_returned"] > 0
+    assert sum(os.path.getsize(p) for p in t._arena_paths()) < old_bytes
+    # dense renumbering: old live_slots[i] -> i, bytes intact
+    assert t.live_count == 10 and t._n == 10 and t.verify().size == 0
+    got, gembs, glens, _ = t.rows_at(np.arange(10))
+    for g, p in zip(got, parts):
+        assert g.tobytes() == np.ascontiguousarray(p[keep]).tobytes()
+    assert np.array_equal(gembs, embs[keep])
+    # epoch-0 files gone, reopen sees the new epoch
+    assert not os.path.exists(t._part_path(t.codec.parts[0], 0))
+    t.close()
+    t = _tier(tmp_path / "t")
+    assert t.epoch == 1 and t.live_count == 10 and t.verify().size == 0
+    t.close()
+
+
+def test_compact_crash_keeps_old_epoch_and_gcs_strays(tmp_path):
+    """``capacity.compact_crash`` fires after the new epoch is staged,
+    before the manifest publish: the tier must roll back in-process, and
+    a reopen must serve the OLD epoch and GC the stray files."""
+    rng = np.random.default_rng(1)
+    inj = FaultInjector()
+    t = _tier(tmp_path / "t", faults=inj)
+    parts, embs, lens = _tier_rows(rng, t.codec, 12)
+    slots = t.append(parts, embs, lens)
+    t.retire(slots[:6])
+    inj.arm("capacity.compact_crash", count=1)
+    with pytest.raises(OSError):
+        t.compact()
+    assert t.epoch == 0 and t.live_count == 6      # rolled back
+    strays = [f for f in os.listdir(str(tmp_path / "t")) if ".e1." in f]
+    assert strays                                  # staged files remain
+    t.close()
+    t = _tier(tmp_path / "t")
+    assert t.epoch == 0 and t.live_count == 6 and t.verify().size == 0
+    assert not [f for f in os.listdir(str(tmp_path / "t")) if ".e1." in f]
+    rep = t.compact()                              # disarmed: succeeds
+    assert rep["epoch"] == 1 and t.live_count == 6
+    t.close()
+
+
+def test_store_compact_capacity_remaps_disk_slots(tmp_path):
+    """Store-level trigger: compaction renumbers disk slots, so the
+    host↔disk write-through maps must be rewritten — demotion after a
+    compaction must still be free (no re-append)."""
+    rng = np.random.default_rng(2)
+    s = MemoStore(APM, EMB, capacity=16, capacity_dir=str(tmp_path / "t"))
+    apms, embs = _entries(rng, 8)
+    s.admit(apms, embs)
+    s.evict(4)                                     # demote 4 to disk
+    s.capacity.retire(np.asarray(
+        [s._host_to_disk[h] for h in list(s._host_to_disk)[:2]]))
+    assert s.compact_capacity(min_retired=0.9) is None   # below threshold
+    rep = s.compact_capacity(min_retired=0.1)
+    assert rep is not None and rep["live"] == 6
+    # maps now name the dense slots — and stay consistent both ways
+    assert all(0 <= d < 6 for d in s._host_to_disk.values())
+    for h, d in s._host_to_disk.items():
+        assert s._disk_to_host[d] == h
+    # demoting everything re-appends ONLY the two rows whose disk
+    # copies were retired — the six remapped mirrors are still free
+    before = s.capacity.n_appended
+    s.evict(8)
+    assert s.capacity.n_appended == before + 2
+    assert s.capacity.verify().size == 0
+
+
+def test_compact_ratio_spec_plumbing_and_idempotence(tmp_path):
+    """``CapacitySpec.compact_ratio`` validates and round-trips through
+    the flat view (the ``MemoServer._after_apply`` trigger reads it);
+    compaction below the threshold — or right after one — is a no-op."""
+    spec = MemoSpec.flat(capacity_compact_ratio=0.5)
+    assert spec.capacity.compact_ratio == 0.5
+    assert spec.capacity_compact_ratio == 0.5      # flat property
+    with pytest.raises(ValueError):
+        MemoSpec.flat(capacity_compact_ratio=1.5)
+    s = MemoStore(APM, EMB, capacity=16, capacity_dir=str(tmp_path / "t"))
+    rng = np.random.default_rng(3)
+    apms, embs = _entries(rng, 8)
+    s.admit(apms, embs)
+    s.capacity.retire(s.capacity.live_slots[:4])
+    assert s.capacity.retired_fraction >= 0.5
+    rep = s.compact_capacity(0.5)
+    assert rep is not None and s.capacity.n_compactions == 1
+    assert s.compact_capacity(0.5) is None         # nothing left to do
+
+
+_COMPACT_CHILD = textwrap.dedent("""\
+    import json, sys
+    import numpy as np
+    from repro.core.capacity import CapacityTier
+    from repro.core.codec import get_codec
+
+    root, shape, emb = (sys.argv[1], tuple(json.loads(sys.argv[2])),
+                        int(sys.argv[3]))
+    codec = get_codec("f16", shape)
+    t = CapacityTier(root, codec=codec, embed_dim=emb, capacity=8)
+    rng = np.random.default_rng(int(sys.argv[4]))
+    print("READY", flush=True)
+    while True:
+        apms = rng.random((4, *shape)).astype(np.float16)
+        slots = t.append(codec.encode(apms),
+                         rng.normal(size=(4, emb)).astype(np.float32),
+                         np.full(4, shape[-1], np.int32))
+        t.retire(slots[:2])
+        print("A", flush=True)   # acked: +2 live rows journal-durable
+        t.compact()              # SIGKILL may land anywhere in here
+""")
+
+
+def test_sigkill_mid_compaction_reopens_clean(tmp_path):
+    """Kill-harness round for compaction: a child that compacts after
+    every append/retire cycle is SIGKILL'd at random instants — every
+    reopen must verify clean, keep every acked live row, and leave
+    exactly one epoch's arena files on disk."""
+    root = str(tmp_path / "t")
+    rng = np.random.default_rng(0)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    acked_live = 0
+    for trial in range(3):
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _COMPACT_CHILD, root,
+             str(list(APM)), str(EMB), str(trial)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+        try:
+            assert proc.stdout.readline().strip() == b"READY", \
+                proc.stderr.read().decode()
+            time.sleep(float(rng.uniform(0.05, 0.35)))
+            proc.send_signal(signal.SIGKILL)
+            out, _ = proc.communicate(timeout=30)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+        acked_live += 2 * sum(1 for ln in out.splitlines()
+                              if ln.strip() == b"A")
+        t = _tier(root)                           # recovery on open
+        assert t.recovery is not None
+        assert t.verify().size == 0
+        assert t.live_count >= acked_live
+        # exactly one epoch's files survive the GC
+        suffixes = {f.split("part_apm")[-1]
+                    for f in os.listdir(root) if f.startswith("part_apm")}
+        assert len(suffixes) == 1
+        acked_live = t.live_count
+        t.close()
+    assert acked_live > 0
+
+
 # --------------------------------------- store: write-through / promotion
 
 def test_write_through_then_demotion_is_free(tmp_path):
@@ -577,6 +785,9 @@ def test_session_dir_reopens_after_sigkill(cap_sess, tmp_path):
     sess.store.checkpoint()
     d2 = str(tmp_path / "tier_copy")
     shutil.copytree(tier_dir, d2)
+    # the clone inherits the ORIGINAL owner's (live) lockfile — exactly
+    # the "delete the lockfile if it is wrong" case the error names
+    os.remove(os.path.join(d2, CapacityTier.LOCKFILE))
     shape = sess.store.apm_shape
     rng = np.random.default_rng(1)
     for trial in range(2):

@@ -245,7 +245,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from contextlib import nullcontext
-from repro.core.database import distributed_search
+from repro.core.shard import mesh_search
 from repro.kernels.nn_search.ref import nn_search_ref
 mesh_kw = {}
 if hasattr(jax.sharding, "AxisType"):
@@ -256,7 +256,7 @@ q = jax.random.normal(jax.random.PRNGKey(1), (17, 32))
 ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else nullcontext()
 with ctx:
     dbs = jax.device_put(db, NamedSharding(mesh, P("data", None)))
-    d, i = jax.jit(lambda a, b: distributed_search(a, b, mesh))(dbs, q)
+    d, i = jax.jit(lambda a, b: mesh_search(a, b, mesh))(dbs, q)
 dr, ir = nn_search_ref(q, db)
 np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
 np.testing.assert_allclose(np.asarray(d), np.asarray(dr), rtol=1e-4, atol=1e-4)

@@ -67,21 +67,23 @@ def test_ep_equivalence_multidevice():
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import contextlib
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_reduced
 from repro.configs.base import MoEConfig
+from repro.launch.mesh import make_host_mesh
 from repro.models import moe as moe_mod
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_host_mesh(4, 2)
 cfg = get_reduced("dbrx_132b").replace(
     moe=MoEConfig(n_experts=4, top_k=2, d_ff=64, capacity_factor=8.0,
                   dispatch_chunks=2))
 params = moe_mod.moe_init(jax.random.PRNGKey(1), cfg)
 x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, cfg.d_model)) * 0.5
 y_ref, _ = moe_mod.moe_ref(params, x, cfg)
-with jax.set_mesh(mesh):
+set_mesh = getattr(jax, "set_mesh", None)
+with (set_mesh(mesh) if set_mesh else contextlib.nullcontext()):
     xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
     y_ep, _ = jax.jit(lambda p, xx: moe_mod.moe_apply_ep(p, xx, cfg, mesh))(params, xs)
 np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep),
@@ -106,9 +108,11 @@ def test_capacity_drops_are_bounded():
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
     y_ref, _ = moe_mod.moe_ref(params, x, cfg)
     # single-device mesh exercise of the EP code path
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    from repro.launch.mesh import make_host_mesh
+    import contextlib
+    mesh = make_host_mesh(1, 1)
+    set_mesh = getattr(jax, "set_mesh", None)
+    with (set_mesh(mesh) if set_mesh else contextlib.nullcontext()):
         y_ep, _ = moe_mod.moe_apply_ep(params, x, cfg, mesh)
     assert np.isfinite(np.asarray(y_ep)).all()
     # dropped tokens produce zero expert output -> norm can only shrink
@@ -122,20 +126,22 @@ def test_ep_small_token_path_equivalence():
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import contextlib
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_reduced
 from repro.configs.base import MoEConfig
+from repro.launch.mesh import make_host_mesh
 from repro.models import moe as moe_mod
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_host_mesh(4, 2)
 cfg = get_reduced("dbrx_132b").replace(
     moe=MoEConfig(n_experts=4, top_k=2, d_ff=64, capacity_factor=8.0))
 params = moe_mod.moe_init(jax.random.PRNGKey(1), cfg)
 # T=6 tokens < 4*dp_size -> the small path triggers
 x = jax.random.normal(jax.random.PRNGKey(2), (6, cfg.d_model)) * 0.5
 y_ref, _ = moe_mod.moe_ref(params, x, cfg)
-with jax.set_mesh(mesh):
+set_mesh = getattr(jax, "set_mesh", None)
+with (set_mesh(mesh) if set_mesh else contextlib.nullcontext()):
     y_ep, _ = jax.jit(lambda p, xx: moe_mod.moe_apply_ep(p, xx, cfg, mesh))(params, x)
 np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep),
                            rtol=2e-4, atol=2e-4)

@@ -1,12 +1,16 @@
-"""Sharding rules: spec construction, divisibility legalization, conflicts."""
+"""Sharding rules: spec construction, divisibility legalization, conflicts,
+the memo-store row rules (ISSUE 9) and the decode-cache B=1 branch."""
 import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
-from repro.sharding.rules import _spec_for, logical_to_shardings, make_rules
+from repro.launch.mesh import abstract_mesh, make_host_mesh
+from repro.sharding.rules import (_spec_for, cache_shardings,
+                                  logical_to_shardings, make_rules,
+                                  memo_row_spec, memo_store_rules,
+                                  memo_store_shardings)
 
 
 @pytest.fixture(scope="module")
@@ -16,9 +20,7 @@ def mesh():
 
 def _mesh16():
     # abstract Mesh for rule math; no devices needed beyond host
-    import numpy as np
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh(data=16, model=16)
 
 
 def test_spec_basic(mesh):
@@ -86,3 +88,58 @@ def test_rules_overrides():
     cfg = get_config("qwen3_8b")
     r = make_rules(cfg, m, overrides={"ff": ("data", "model")})
     assert r["ff"] == ("data", "model")
+
+
+def _store_mesh8():
+    return abstract_mesh(store=8)
+
+
+def test_memo_store_rules_names_and_axis():
+    r = memo_store_rules("store")
+    assert r == {"memo_rows": "store", "memo_part": None,
+                 "memo_repl": None}
+    assert memo_store_rules("tier")["memo_rows"] == "tier"
+
+
+def test_memo_row_spec_shards_rows_legalizes_indivisible():
+    m = _store_mesh8()
+    # 64 rows over 8 shards: dim 0 sharded, trailing dims replicated
+    assert memo_row_spec(m, 3, shape=(64, 4, 4)) == P("store")
+    assert memo_row_spec(m, 1, shape=(64,)) == P("store")
+    # 60 % 8 != 0 -> the row axis legalizes to replicated, not a pjit
+    # error (same `_spec_for` divisibility contract as model params)
+    assert memo_row_spec(m, 2, shape=(60, 4)) == P()
+    # no shape: trust the caller (ShardedMemoStore sizes M * n_shards)
+    assert memo_row_spec(m, 2) == P("store")
+
+
+def test_memo_store_shardings_tree():
+    m = _store_mesh8()
+    tree = {
+        "table": jax.ShapeDtypeStruct((64, 16), jnp.float32),
+        "slot_at": jax.ShapeDtypeStruct((64,), jnp.int32),
+        "odd": jax.ShapeDtypeStruct((9, 16), jnp.float32),
+    }
+    sh = memo_store_shardings(m, tree, axis="store")
+    assert sh["table"].spec == P("store")
+    assert sh["slot_at"].spec == P("store")
+    assert sh["odd"].spec == P()          # 9 % 8 != 0: replicated
+
+
+def test_cache_shardings_b1_long_context():
+    """B=1 decode caches spread the sequence axis over (data, model)
+    when it divides the full product, over model alone when only that
+    divides, else replicate."""
+    m = _mesh16()                          # data=16, model=16 -> 256
+    def spec(B, S):
+        t = jnp.zeros((B, S, 2, 4))
+        return cache_shardings(
+            jax.eval_shape(lambda: t), m)  # ShapeDtypeStruct tree
+    assert spec(1, 512).spec == P(None, ("data", "model"), None, None)
+    assert spec(1, 48).spec == P(None, "model", None, None)  # 48 % 16 == 0
+    assert spec(1, 50).spec == P()         # divides neither
+    # divisible batch: dp over data, seq over model
+    assert spec(16, 512).spec == P("data", "model", None, None)
+    # rank-1 leaves replicate
+    one_d = cache_shardings(jax.eval_shape(lambda: jnp.zeros((7,))), m)
+    assert one_d.spec == P()
