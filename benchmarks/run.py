@@ -37,6 +37,7 @@ MODULES = [
     "serve_runtime",       # ISSUE 4: open-loop runtime, sync vs async maint
     "serve_faults",        # ISSUE 6: chaos classes, degradation + recovery
     "serve_sharded",       # ISSUE 9: 8-way sharded store vs single host
+    "serve_prefill",       # ISSUE 10: memoized prefill + KV decode handoff
 ]
 
 
@@ -115,6 +116,17 @@ def _normalized_latencies(doc):
         out["sharded/hit_gap"] = sh["hit_gap"]
     if (sh.get("sharded") or {}).get("imbalance") is not None:
         out["sharded/occupancy_imbalance"] = sh["sharded"]["imbalance"]
+    # prefill memoization (ISSUE 10): both absolute-ceiling gates —
+    # substituting a memoized prefill hit may cost at most 5% of greedy
+    # decode tokens vs the all-exact baseline, and every codec's
+    # prefill/decode |Δlogits| must stay inside the kernel-parity bounds
+    # (a failure count, so the ceiling is exactly zero)
+    pf = doc.get("serve_prefill") or {}
+    if pf.get("hit_gap") is not None:
+        out["prefill/hit_gap"] = pf["hit_gap"]
+    if pf.get("decode_parity_failures") is not None:
+        out["prefill/decode_parity_failures"] = float(
+            pf["decode_parity_failures"])
     return out
 
 
@@ -153,6 +165,12 @@ for _lvl in ("moderate", "aggressive"):
 # shard at most 2x the mean occupancy
 ABS_BOUNDS["sharded/hit_gap"] = 0.05
 ABS_BOUNDS["sharded/occupancy_imbalance"] = 2.0
+# prefill memoization (ISSUE 10): a memoized-prefill hit hands decode a
+# cache the backbone cannot tell from exact prefill's — zero per-codec
+# parity-bound violations, and at most 0.05 greedy-token gap vs the
+# all-exact baseline
+ABS_BOUNDS["prefill/hit_gap"] = 0.05
+ABS_BOUNDS["prefill/decode_parity_failures"] = 0.0
 
 
 def check_regress(new_doc, baseline_path, tol=0.10):
@@ -268,7 +286,8 @@ def main() -> None:
                            ("serve_compress", "serve_compress", "collect"),
                            ("serve_runtime", "serve_runtime", "collect"),
                            ("serve_faults", "serve_faults", "collect"),
-                           ("serve_sharded", "serve_sharded", "collect")]
+                           ("serve_sharded", "serve_sharded", "collect"),
+                           ("serve_prefill", "serve_prefill", "collect")]
         for doc_key, mod_name, fn_name in detail_sections:
             if not wanted(mod_name):
                 continue

@@ -1,0 +1,268 @@
+"""Prefill-memoization benchmark (ISSUE 10 / DESIGN.md §2.13).
+
+Per KV codec (f16 / int8 / lowrank), builds a prefill-enabled session
+over the reduced causal GPT-2 and serves a half-replay / half-novel
+prompt stream through BOTH prefill legs — ``prefill_exact`` and the
+memoized ``prefill`` — so the latency A/B is read at the workload's own
+hit rate. A pure-replay batch (self-hits: the decode cache comes from
+the stored KV entry, so any gap is codec quantization, not input drift)
+then drives the parity + throughput leg: teacher-forced greedy decode
+from both cache sets, recording max|Δlogits| at the prefill boundary
+and across decode steps, greedy-token agreement, and end-to-end
+prefill+decode tokens/s.
+
+Emitted into BENCH_serve.json as the ``serve_prefill`` section. Two
+hard gates ride ``--check-regress`` (benchmarks/run.py ABS_BOUNDS):
+
+- ``prefill/decode_parity_failures == 0`` — every codec's prefill and
+  decode |Δlogits| stays inside the same per-codec bounds the kernel
+  parity gates use (tests/test_prefill.py asserts the identical
+  numbers);
+- ``prefill/hit_gap <= 0.05`` — substituting memoized prefill may cost
+  at most 5% of greedy decode tokens vs the all-exact baseline.
+
+Standalone (the CI ``prefill-smoke`` job):
+    PYTHONPATH=src python -m benchmarks.serve_prefill --quick
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data import TemplateCorpus
+from repro.memo import MemoSession, MemoSpec, MemoStats
+from repro.models import build_model
+
+SEQ = 16
+BATCH = 8
+CALIB_BATCHES = 4
+CODECS = ("f16", "int8", "lowrank")
+# APM lowrank rank: softmax rows decay fast; rank >= 3*SEQ/4 keeps the
+# truncation error inside the prefill bound
+APM_RANK = (3 * SEQ) // 4
+# KV lowrank rank: K/V spectra decay much slower than softmax rows (see
+# core/prefill.py), so the parity leg runs the factorization at full
+# rank — the gate covers the SVD-encode/quantized-factor machinery
+# (int8 factor error only); truncation below full rank is a quality
+# knob, not a parity property
+KV_RANK = SEQ
+
+# per-codec |Δlogits| ceilings — the kernel-parity bounds
+# (tests/test_prefill.py asserts the same numbers): the prefill boundary
+# carries the APM codec's error, decode carries the KV codec's.
+BOUNDS = {
+    "f16":     {"prefill": 5e-3, "decode": 5e-3},
+    "int8":    {"prefill": 2e-2, "decode": 2e-2},
+    "lowrank": {"prefill": 1e-1, "decode": 5e-2},
+}
+
+
+def _build(codec: str):
+    """Prefill-enabled session over the reduced causal GPT-2; the KV
+    codec rides the APM codec ("auto": f16 base -> f16 KV, else int8)
+    except lowrank, which is requested explicitly with its rank."""
+    cfg = get_reduced("gpt2_small")
+    model = build_model(cfg, layer_loop="unroll")
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = TemplateCorpus(vocab=cfg.vocab, seq_len=SEQ, n_templates=8,
+                            slot_fraction=0.25, seed=3)
+    lowrank = codec == "lowrank"
+    spec = MemoSpec.flat(
+        threshold=0.6, mode="bucket", embed_steps=60,
+        apm_codec=codec, apm_rank=APM_RANK if lowrank else None,
+        prefill_enabled=True,
+        prefill_kv_codec="lowrank" if lowrank else "auto",
+        prefill_kv_rank=KV_RANK if lowrank else None)
+    rng = np.random.default_rng(17)
+    calib = [jnp.asarray(corpus.sample(BATCH, rng)[0])
+             for _ in range(CALIB_BATCHES)]
+    sess = MemoSession.build(model, params, spec,
+                             batches=[{"tokens": t} for t in calib],
+                             key=jax.random.PRNGKey(1))
+    return sess.engine, model, corpus, calib
+
+
+def _decode_loop(eng, model, logits, caches, steps, force=None):
+    """Greedy decode continuation; ``force`` teacher-forces the token
+    stream (parity legs) instead of self-feeding (timing legs). Returns
+    (per-step greedy picks, final logits trace)."""
+    picks, trace = [], []
+    for step in range(steps):
+        tok = jnp.argmax(logits, -1).reshape(-1)
+        picks.append(np.asarray(tok))
+        feed = force[step] if force is not None else tok
+        logits, caches = model.decode_step(
+            eng.params, jnp.asarray(feed)[:, None], caches,
+            jnp.int32(SEQ + step))
+        trace.append(logits)
+    jax.block_until_ready(logits)
+    return picks, trace
+
+
+def _codec_leg(codec: str, n_batches: int, decode_steps: int):
+    eng, model, corpus, calib = _build(codec)
+    rng = np.random.default_rng(29)
+    st = MemoStats()
+
+    # latency A/B on half-replay / half-novel traffic: both legs see the
+    # SAME batches, so the comparison is at the workload's own hit rate
+    lat_e, lat_m = [], []
+    for i in range(n_batches):
+        toks = (calib[(i // 2) % len(calib)] if i % 2 == 0
+                else jnp.asarray(corpus.sample(BATCH, rng)[0]))
+        batch = {"tokens": toks}
+        t0 = time.perf_counter()
+        le, _ = eng.prefill_exact(batch)
+        jax.block_until_ready(le)
+        lat_e.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        lm, _, st = eng.prefill(batch, stats=st)
+        jax.block_until_ready(lm)
+        lat_m.append(time.perf_counter() - t0)
+    hit_rate = st.memo_rate
+    exact_ms = float(np.median(lat_e[1:] or lat_e) * 1e3)
+    memo_ms = float(np.median(lat_m[1:] or lat_m) * 1e3)
+
+    # parity on a pure-replay batch (self-hits): teacher-forced on the
+    # exact leg's greedy tokens so one near-tie flip can't snowball the
+    # logits gap — this loop also compiles decode_step for the timed leg
+    replay = {"tokens": calib[0]}
+    h0, a0 = st.n_hits, st.n_layer_attempts
+    le, ce = eng.prefill_exact(replay)
+    lm, cm, st = eng.prefill(replay, stats=st)
+    replay_hits = st.n_hits - h0
+    replay_attempts = st.n_layer_attempts - a0
+    pf_dmax = float(jnp.max(jnp.abs(lm - le)))
+    picks_e, trace_e = _decode_loop(eng, model, le, ce, decode_steps)
+    picks_m, trace_m = _decode_loop(eng, model, lm, cm, decode_steps,
+                                    force=picks_e)
+    dec_dmax = max(float(jnp.max(jnp.abs(m - e)))
+                   for m, e in zip(trace_m, trace_e))
+    agree = sum(int((m == e).sum())
+                for m, e in zip(picks_m, picks_e))
+    total = decode_steps * BATCH
+
+    # end-to-end prefill+decode throughput per leg (greedy self-fed;
+    # everything is compiled by now, so the walls are steady-state)
+    def e2e(prefill_fn):
+        t0 = time.perf_counter()
+        out = prefill_fn(replay)
+        _decode_loop(eng, model, out[0], out[1], decode_steps)
+        return time.perf_counter() - t0
+
+    wall_e = e2e(eng.prefill_exact)
+    wall_m = e2e(lambda b: eng.prefill(b)[:2])
+    tok = BATCH * decode_steps
+
+    bounds = BOUNDS[codec]
+    return {
+        "exact_ms": exact_ms, "memo_ms": memo_ms,
+        "memo_over_exact": memo_ms / max(exact_ms, 1e-9),
+        "hit_rate": float(hit_rate),
+        "replay_hit_rate": replay_hits / max(1, replay_attempts),
+        "prefill_max_abs_diff": pf_dmax,
+        "decode_max_abs_diff": dec_dmax,
+        "bound_prefill": bounds["prefill"],
+        "bound_decode": bounds["decode"],
+        "parity_ok": bool(pf_dmax <= bounds["prefill"]
+                          and dec_dmax <= bounds["decode"]),
+        "greedy_agreement": agree / total,
+        "e2e_tok_s_exact": tok / max(wall_e, 1e-9),
+        "e2e_tok_s_memo": tok / max(wall_m, 1e-9),
+    }
+
+
+@functools.lru_cache(maxsize=2)
+def collect(quick: bool = False):
+    codecs = ("int8",) if quick else CODECS
+    n_batches = 4 if quick else 8
+    decode_steps = 4 if quick else 8
+    out = {"config": {"arch": "gpt2_small (reduced)", "seq": SEQ,
+                      "batch": BATCH, "n_batches": n_batches,
+                      "decode_steps": decode_steps,
+                      "apm_rank": APM_RANK, "kv_rank": KV_RANK,
+                      "quick": bool(quick),
+                      "backend": jax.default_backend()},
+           "codecs": {}}
+    for codec in codecs:
+        t0 = time.time()
+        leg = _codec_leg(codec, n_batches, decode_steps)
+        leg["wall_s"] = round(time.time() - t0, 2)
+        out["codecs"][codec] = leg
+    legs = out["codecs"].values()
+    out["hit_gap"] = max(1.0 - leg["greedy_agreement"] for leg in legs)
+    out["decode_parity_failures"] = sum(
+        0 if leg["parity_ok"] else 1 for leg in legs)
+    return out
+
+
+def run():
+    out = collect()
+    for codec, leg in out["codecs"].items():
+        yield (f"serve_prefill_{codec}", leg["memo_ms"] * 1e3,
+               f"exact={leg['exact_ms']:.1f}ms;"
+               f"memo={leg['memo_ms']:.1f}ms;"
+               f"hit={leg['hit_rate']:.3f};"
+               f"pf_diff={leg['prefill_max_abs_diff']:.2e};"
+               f"dec_diff={leg['decode_max_abs_diff']:.2e};"
+               f"agree={leg['greedy_agreement']:.3f};"
+               f"tok_s={leg['e2e_tok_s_memo']:.0f};"
+               f"parity={leg['parity_ok']}")
+    yield ("serve_prefill_gate", 0.0,
+           f"hit_gap={out['hit_gap']:.3f};"
+           f"parity_failures={out['decode_parity_failures']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="int8 only, 4 batches, 4 decode steps (the CI "
+                         "prefill-smoke size)")
+    args = ap.parse_args()
+    out = collect(quick=args.quick)
+    failures = []
+    for codec, leg in out["codecs"].items():
+        print(f"{codec:>8}: exact={leg['exact_ms']:.1f}ms "
+              f"memo={leg['memo_ms']:.1f}ms "
+              f"hit={leg['hit_rate']:.3f} "
+              f"replay_hit={leg['replay_hit_rate']:.3f} "
+              f"pf_diff={leg['prefill_max_abs_diff']:.2e}"
+              f"<={leg['bound_prefill']:.0e} "
+              f"dec_diff={leg['decode_max_abs_diff']:.2e}"
+              f"<={leg['bound_decode']:.0e} "
+              f"agree={leg['greedy_agreement']:.3f} "
+              f"tok/s={leg['e2e_tok_s_memo']:.0f}"
+              + ("" if leg["parity_ok"] else "   <-- FAIL"))
+        if not leg["parity_ok"]:
+            failures.append(
+                f"{codec}: |Δlogits| prefill "
+                f"{leg['prefill_max_abs_diff']:.2e} "
+                f"(bound {leg['bound_prefill']:.0e}) / decode "
+                f"{leg['decode_max_abs_diff']:.2e} "
+                f"(bound {leg['bound_decode']:.0e})")
+        if leg["replay_hit_rate"] < 0.5:
+            failures.append(f"{codec}: replay hit rate "
+                            f"{leg['replay_hit_rate']:.3f} < 0.5 — the "
+                            f"parity leg barely exercised the memo path")
+    if out["hit_gap"] > 0.05:
+        failures.append(f"hit_gap {out['hit_gap']:.3f} > 0.05")
+    print(f"{'gate':>8}: hit_gap={out['hit_gap']:.3f} "
+          f"parity_failures={out['decode_parity_failures']}")
+    if failures:
+        print("\nPREFILL FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nprefill memoization: decode parity within per-codec bounds, "
+          "hit gap within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -262,6 +262,38 @@ def _unpack_record(payload: bytes) -> Tuple[str, Dict[str, np.ndarray]]:
         return str(data["__kind__"]), arrays
 
 
+def replay_journal(path: str
+                   ) -> Tuple[List[Tuple[str, Dict[str, np.ndarray]]], bool]:
+    """Read a journal file without opening it for append: all intact
+    records since the last truncate → ``(records, torn_tail)``. Never
+    raises on framing damage — a bad frame ends the replay (everything
+    after it is unreachable by design) — and never touches the
+    directory, so a read-only opener can replay a LIVE writer's WAL."""
+    try:
+        with open(str(path), "rb") as f:
+            blob = f.read()
+    except OSError:
+        return [], False
+    records, off = [], 0
+    while True:
+        if off == len(blob):
+            return records, False
+        hdr = blob[off: off + _FRAME_HDR.size]
+        if len(hdr) < _FRAME_HDR.size:
+            return records, True
+        magic, plen, pcrc = _FRAME_HDR.unpack(hdr)
+        payload = blob[off + _FRAME_HDR.size:
+                       off + _FRAME_HDR.size + plen]
+        if magic != _FRAME_MAGIC or len(payload) != plen \
+                or zlib.crc32(payload) != pcrc:
+            return records, True
+        try:
+            records.append(_unpack_record(payload))
+        except Exception:
+            return records, True
+        off += _FRAME_HDR.size + plen
+
+
 class Journal:
     """Append-only CRC-framed redo log. ``append`` fsyncs before
     returning (the WAL ordering contract: a record is durable before the
@@ -312,29 +344,7 @@ class Journal:
         torn_tail)``. Never raises on framing damage: a bad frame ends
         the replay (everything after it is unreachable by design)."""
         self._f.flush()
-        try:
-            with open(self.path, "rb") as f:
-                blob = f.read()
-        except OSError:
-            return [], False
-        records, off = [], 0
-        while True:
-            if off == len(blob):
-                return records, False
-            hdr = blob[off: off + _FRAME_HDR.size]
-            if len(hdr) < _FRAME_HDR.size:
-                return records, True
-            magic, plen, pcrc = _FRAME_HDR.unpack(hdr)
-            payload = blob[off + _FRAME_HDR.size:
-                           off + _FRAME_HDR.size + plen]
-            if magic != _FRAME_MAGIC or len(payload) != plen \
-                    or zlib.crc32(payload) != pcrc:
-                return records, True
-            try:
-                records.append(_unpack_record(payload))
-            except Exception:
-                return records, True
-            off += _FRAME_HDR.size + plen
+        return replay_journal(self.path)
 
     def truncate(self) -> None:
         """Drop every record (checkpoint absorbed them)."""
@@ -379,6 +389,15 @@ class CapacityTier:
     row, retire mismatches, then checkpoint — so the post-recovery tier
     always verifies clean. The recovery report lands in
     ``self.recovery``.
+
+    ``read_only=True`` (or ``CapacityTier.open(..., read_only=True)``)
+    is the cross-process read-sharing leg (ROADMAP item 4): it BYPASSES
+    the ``LOCK`` pidfile — a live writer may keep journaling — maps the
+    arenas ``mode='r'`` (shared pages, zero-copy), and replays the WAL
+    into an in-memory overlay instead of the arenas, so un-checkpointed
+    appends are visible without writing a byte anywhere: no lock, no
+    journal handle, no checkpoint, no arena growth. Every mutator
+    raises ``MemoStoreError``.
     """
 
     MANIFEST = "MANIFEST.m3"
@@ -389,17 +408,20 @@ class CapacityTier:
                  capacity: int = 64,
                  budget_bytes: Optional[int] = None,
                  faults: Optional[FaultInjector] = None,
-                 fsync: bool = True):
+                 fsync: bool = True, read_only: bool = False):
         self.root = str(root)
         self.codec = codec
         self.embed_dim = int(embed_dim)
         self.budget_bytes = budget_bytes
         self._faults = faults
         self._fsync = fsync
-        os.makedirs(self.root, exist_ok=True)
+        self.read_only = bool(read_only)
+        if not self.read_only:
+            os.makedirs(self.root, exist_ok=True)
         self._lock_path = os.path.join(self.root, self.LOCKFILE)
         self._lock_held = False
-        self._acquire_lock()
+        if not self.read_only:
+            self._acquire_lock()
         self.recovery: Optional[dict] = None
         self.n_appended = 0
         self.n_retired = 0
@@ -407,9 +429,21 @@ class CapacityTier:
         self.n_compactions = 0
         self._parts: List[np.memmap] = []
         self._embs: Optional[np.memmap] = None
+        # read-only WAL overlay: slot → (part rows, emb row); empty (and
+        # never consulted past a dict probe) in writer mode
+        self._overlay: Dict[int, Tuple[Tuple[np.ndarray, ...],
+                                       np.ndarray]] = {}
+        self.journal: Optional[Journal] = None
         try:
             manifest = os.path.join(self.root, self.MANIFEST)
-            if os.path.exists(manifest):
+            if self.read_only:
+                if not os.path.exists(manifest):
+                    raise MemoStoreError(
+                        f"cannot open capacity tier {self.root!r} "
+                        f"read-only: no manifest (the tier was never "
+                        f"checkpointed, or the path is wrong)")
+                self._open_read_only(manifest)
+            elif os.path.exists(manifest):
                 self._recover(manifest)
             else:
                 self._init_state(max(1, int(capacity)))
@@ -421,6 +455,21 @@ class CapacityTier:
         except BaseException:
             self._release_lock()
             raise
+
+    @classmethod
+    def open(cls, root: str, *, codec, embed_dim: int,
+             read_only: bool = False, **kw) -> "CapacityTier":
+        """Open an existing tier directory. ``read_only=True`` shares it
+        with a live writer (see the class docstring); ``False`` is the
+        normal single-writer recovery path."""
+        return cls(root, codec=codec, embed_dim=embed_dim,
+                   read_only=read_only, **kw)
+
+    def _require_writable(self, op: str) -> None:
+        if self.read_only:
+            raise MemoStoreError(
+                f"capacity tier {self.root!r} was opened read_only: "
+                f"{op} would mutate it (open a writer instance instead)")
 
     # ----------------------------------------------------- single-writer
     def _acquire_lock(self) -> None:
@@ -536,7 +585,34 @@ class CapacityTier:
         self._embs = self._map_file(self._embs_path(),
                                     (capacity, self.embed_dim), np.float32)
 
+    def _map_file_ro(self, path: str, shape: Tuple[int, ...], dtype
+                     ) -> np.memmap:
+        """Read-only arena map: never creates or grows the file — a
+        short/missing arena is the writer's bug (or the wrong dir), not
+        something a reader may repair."""
+        nbytes = max(1, int(np.prod(shape, dtype=np.int64))
+                     * np.dtype(dtype).itemsize)
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            size = -1
+        if size < nbytes:
+            raise MemoStoreError(
+                f"capacity arena {path!r} is missing or shorter than its "
+                f"manifest says ({size} < {nbytes} bytes)")
+        return np.memmap(path, dtype=dtype, mode="r", shape=shape)
+
+    def _map_arenas_ro(self, capacity: int) -> None:
+        self._parts = [
+            self._map_file_ro(self._part_path(p), (capacity,) + p.shape,
+                              p.dtype)
+            for p in self.codec.parts]
+        self._embs = self._map_file_ro(
+            self._embs_path(), (capacity, self.embed_dim), np.float32)
+
     def _flush_arenas(self) -> None:
+        if self.read_only:      # nothing dirty; 'r'-mode flush may raise
+            return
         for m in self._parts:
             m.flush()
         if self._embs is not None:
@@ -589,6 +665,7 @@ class CapacityTier:
         fault fires here: with a ``stall_s`` rider it sleeps (the
         promotion-stall failure mode), without one it raises OSError
         before any state mutates."""
+        self._require_writable("append")
         hit = fire(self._faults, "capacity.disk_write_io")
         if hit is not None:
             if "stall_s" in hit:
@@ -631,6 +708,7 @@ class CapacityTier:
 
     def retire(self, slots: Sequence[int]) -> None:
         """Durably drop rows (quarantine or disk-budget eviction)."""
+        self._require_writable("retire")
         slots = np.asarray(slots, np.int64).reshape(-1)
         slots = slots[(slots >= 0) & (slots < self._n)]
         slots = slots[self._live[slots]]
@@ -687,6 +765,7 @@ class CapacityTier:
         files. Old slot ``live_slots[i]`` becomes new slot ``i``; the
         ``on_compact(old_slots, new_slots)`` callback (fired after the
         publish) lets the owner remap its host↔disk slot tables."""
+        self._require_writable("compact")
         old_epoch = self.epoch
         old_paths = self._arena_paths(old_epoch)
         old_bytes = sum(os.path.getsize(p) for p in old_paths
@@ -770,11 +849,24 @@ class CapacityTier:
             Tuple[np.ndarray, ...], np.ndarray, np.ndarray,
             Tuple[np.ndarray, ...]]:
         """Raw encoded rows → ``(parts, embs, lens, csums)`` (copies —
-        the caller re-verifies the CRCs before promoting)."""
+        the caller re-verifies the CRCs before promoting). Read-only
+        instances serve WAL-overlay rows over the mapped arena bytes
+        (a live writer's un-checkpointed appends; possibly past the
+        arena's mapped capacity)."""
         slots = np.asarray(slots, np.int64).reshape(-1)
-        parts = tuple(np.asarray(a[slots]).copy() for a in self._parts)
-        embs = np.asarray(self._embs[slots]).copy()
-        return (parts, embs, self._lens[slots].copy(),
+        # overlay slots may exceed the mapped capacity — clamp the arena
+        # gather (those rows are overwritten from the overlay below)
+        safe = np.clip(slots, 0, self.capacity - 1)
+        parts = [np.asarray(a[safe]).copy() for a in self._parts]
+        embs = np.asarray(self._embs[safe]).copy()
+        if self._overlay:
+            for j, s in enumerate(slots):
+                row = self._overlay.get(int(s))
+                if row is not None:
+                    for p, pr in zip(parts, row[0]):
+                        p[j] = pr
+                    embs[j] = row[1]
+        return (tuple(parts), embs, self._lens[slots].copy(),
                 tuple(c[slots].copy() for c in self._csums))
 
     def verify(self, slots: Optional[Sequence[int]] = None) -> np.ndarray:
@@ -788,9 +880,12 @@ class CapacityTier:
             slots = slots[self._live[slots]]
         if slots.size == 0:
             return np.zeros(0, np.int64)
+        # rows_at (not a raw arena gather) so overlay rows verify against
+        # their journaled bytes rather than the writer's arena state
+        parts, _, _, csums = self.rows_at(slots)
         bad = np.zeros(slots.shape[0], bool)
-        for csum, arena in zip(self._csums, self._parts):
-            bad |= self._crc_rows(np.asarray(arena[slots])) != csum[slots]
+        for rows, csum in zip(parts, csums):
+            bad |= self._crc_rows(rows) != csum
         return slots[bad].astype(np.int64)
 
     def search(self, queries: np.ndarray, k: int = 1
@@ -805,7 +900,13 @@ class CapacityTier:
         if live.size == 0:
             return (np.full((q.shape[0], k), np.inf, np.float32),
                     np.full((q.shape[0], k), -1, np.int64))
-        embs = np.asarray(self._embs[live])
+        embs = np.asarray(self._embs[np.clip(live, 0,
+                                             self.capacity - 1)]).copy()
+        if self._overlay:
+            for j, s in enumerate(live):
+                row = self._overlay.get(int(s))
+                if row is not None:
+                    embs[j] = row[1]
         d2 = (np.sum(q * q, -1, keepdims=True)
               - 2.0 * q @ embs.T + np.sum(embs * embs, -1)[None, :])
         k = min(k, live.size)
@@ -824,6 +925,7 @@ class CapacityTier:
         journal — the WAL absorb point. ``capacity.checkpoint_crash``
         fires between the manifest temp write and its publish, leaving
         the OLD manifest + the intact journal (still recoverable)."""
+        self._require_writable("checkpoint")
         if extra_meta is not None:
             self.extra_meta = dict(extra_meta)
         self._flush_arenas()
@@ -904,6 +1006,79 @@ class CapacityTier:
         self.checkpoint()
         self._gc_stray_epochs()
 
+    def _grow_state_to(self, need: int) -> None:
+        """Read-only bookkeeping growth: a live writer's WAL can name
+        slots past the manifest's capacity (it grew its arenas after the
+        last checkpoint). Those rows live in the overlay, so only the
+        in-memory bookkeeping arrays grow — the mapped arenas (and
+        ``self.capacity``, which describes them) stay untouched."""
+        if need <= self._live.shape[0]:
+            return
+        new_cap = max(2 * self._live.shape[0], int(need))
+        for name, fill in (("_live", 0), ("_lens", -1), ("_reuse", 0)):
+            old = getattr(self, name)
+            fresh = np.full(new_cap, fill, old.dtype)
+            fresh[: self._n] = old[: self._n]
+            setattr(self, name, fresh)
+        self._live = self._live.astype(bool)
+        self._csums = [
+            np.concatenate([c, np.zeros(new_cap - c.shape[0], np.uint32)])
+            for c in self._csums]
+
+    def _open_read_only(self, manifest: str) -> None:
+        """Recovery's read-only twin: manifest + journal replay, but the
+        replayed rows land in ``self._overlay`` (the arenas belong to
+        the writer) and nothing is swept, retired or checkpointed — a
+        reader reports what it sees, it never repairs."""
+        meta, arrays = read_format3(manifest, verify=True)
+        n = int(arrays["n"])
+        cap = max(1, int(meta.get("capacity", n or 1)), n)
+        self._init_state(cap)
+        self.epoch = int(meta.get("epoch", 0))
+        self._n = n
+        self._live[:n] = arrays["live"]
+        self._lens[:n] = arrays["lens"]
+        self._reuse[:n] = arrays["reuse"]
+        self._free = [int(s) for s in arrays["free"]]
+        for i, spec in enumerate(self.codec.parts):
+            saved = arrays.get(f"csum_{spec.name}")
+            if saved is None:
+                raise MemoStoreError(
+                    f"capacity manifest {manifest!r} was written for a "
+                    f"different codec (missing csum_{spec.name})")
+            self._csums[i][:n] = saved
+        self.extra_meta = dict(meta.get("extra") or {})
+        self._map_arenas_ro(self.capacity)
+        records, torn = replay_journal(
+            os.path.join(self.root, self.JOURNAL))
+        for kind, rec in records:
+            slots = np.asarray(rec["slots"], np.int64).reshape(-1)
+            if kind == "retire":
+                self._apply_retire(slots)
+                for s in slots:
+                    self._overlay.pop(int(s), None)
+                continue
+            top = int(slots.max()) + 1 if slots.size else 0
+            self._grow_state_to(top)
+            self._n = max(self._n, top)
+            taken = set(int(s) for s in slots)
+            self._free = [s for s in self._free if s not in taken]
+            for j, s in enumerate(slots):
+                self._overlay[int(s)] = (
+                    tuple(np.asarray(rec[f"part_{spec.name}"][j])
+                          for spec in self.codec.parts),
+                    np.asarray(rec["embs"][j], np.float32))
+            for c, spec in zip(self._csums, self.codec.parts):
+                c[slots] = np.asarray(rec[f"csum_{spec.name}"], np.uint32)
+            self._lens[slots] = np.asarray(rec["lens"], np.int32)
+            self._live[slots] = True
+            self._reuse[slots] = 0
+        self.recovery = {"n_replayed": len(records),
+                         "torn_tail": bool(torn),
+                         "read_only": True,
+                         "overlay_rows": len(self._overlay),
+                         "live_after": self.live_count}
+
     def flush(self) -> None:
         self._flush_arenas()
 
@@ -913,7 +1088,8 @@ class CapacityTier:
         except (OSError, ValueError):
             pass
         try:
-            self.journal.close()
+            if self.journal is not None:
+                self.journal.close()
         finally:
             self._release_lock()
 

@@ -94,7 +94,11 @@ class ApmCodec:
         """Hashable identity for jit-cache keys."""
         return (self.name, self.apm_shape)
 
-    def encode(self, apms: np.ndarray) -> Tuple[np.ndarray, ...]:
+    def encode(self, apms: np.ndarray, aux=None) -> Tuple[np.ndarray, ...]:
+        """Encode a batch of APMs into per-part rows. ``aux`` carries
+        side-channel payload for codecs whose entries hold more than the
+        APM (the prefill KV codec, ``core/prefill.py``); plain APM codecs
+        ignore it."""
         raise NotImplementedError
 
     def decode(self, parts) -> np.ndarray:
@@ -120,7 +124,7 @@ class F16Codec(ApmCodec):
     def parts(self):
         return (PartSpec("apm", self.apm_shape, self.dtype),)
 
-    def encode(self, apms):
+    def encode(self, apms, aux=None):
         return (np.asarray(apms, self.dtype),)
 
     def decode(self, parts):
@@ -141,7 +145,7 @@ class Int8Codec(ApmCodec):
         return (PartSpec("codes", self.apm_shape, np.dtype(np.int8)),
                 PartSpec("scales", (h, l), np.dtype(np.float16)))
 
-    def encode(self, apms):
+    def encode(self, apms, aux=None):
         return _quantize_rows(np.asarray(apms, np.float32))
 
     def decode(self, parts):
@@ -190,7 +194,7 @@ class LowRankCodec(ApmCodec):
                 PartSpec("v", (h, l, r), np.dtype(np.int8)),
                 PartSpec("vs", (h, l), np.dtype(np.float16)))
 
-    def encode(self, apms):
+    def encode(self, apms, aux=None):
         x = np.asarray(apms, np.float32)
         u, s, vt = np.linalg.svd(x)                    # batched over (B, H)
         r = self.rank

@@ -193,8 +193,10 @@ class AttentionDB:
             bad |= self._crc_rows(arena[slots]) != csum[slots]
         return slots[bad].astype(np.int64)
 
-    def add(self, apms: np.ndarray) -> np.ndarray:
+    def add(self, apms: np.ndarray, aux=None) -> np.ndarray:
         """apms: (B, H, L, L). Appends at the arena tail; returns indices.
+        ``aux`` is the codec's side-channel payload (KV planes for the
+        prefill codec; plain APM codecs ignore it).
 
         Growth is geometric but tight: the arena doubles (amortized O(1)
         appends) or jumps straight to the requested size, whichever is
@@ -202,7 +204,7 @@ class AttentionDB:
         b = apms.shape[0]
         self._grow_to(self._n + b)
         idx = np.arange(self._n, self._n + b)
-        parts = self.codec.encode(np.asarray(apms, self.dtype))
+        parts = self.codec.encode(np.asarray(apms, self.dtype), aux)
         for a, p in zip(self._arenas, parts):
             a[idx] = p
         self._record_checksums(idx, parts)
@@ -210,24 +212,28 @@ class AttentionDB:
         self._n += b
         return idx
 
-    def put(self, apms: np.ndarray) -> np.ndarray:
+    def put(self, apms: np.ndarray, aux=None) -> np.ndarray:
         """Admit entries, recycling released slots first (LIFO) and
         appending the remainder — the arena never compacts, so live slot
         ids are stable across admissions/evictions."""
         apms = np.asarray(apms, self.dtype)
         b = apms.shape[0]
+        if aux is not None:
+            aux = np.asarray(aux)
         n_reuse = min(b, len(self._free))
         slots = np.asarray([self._free.pop() for _ in range(n_reuse)],
                            np.int64)
         if n_reuse:
-            parts = self.codec.encode(apms[:n_reuse])
+            parts = self.codec.encode(
+                apms[:n_reuse], None if aux is None else aux[:n_reuse])
             for a, p in zip(self._arenas, parts):
                 a[slots] = p
             self._record_checksums(slots, parts)
             self.reuse_counts[slots] = 0
             self._live[slots] = True
         if b > n_reuse:
-            slots = np.concatenate([slots, self.add(apms[n_reuse:])])
+            slots = np.concatenate([slots, self.add(
+                apms[n_reuse:], None if aux is None else aux[n_reuse:])])
         return slots
 
     def put_parts(self, parts: Sequence[np.ndarray],
@@ -263,10 +269,11 @@ class AttentionDB:
         self._live[slots] = True
         return slots
 
-    def overwrite(self, slots: Sequence[int], apms: np.ndarray) -> None:
+    def overwrite(self, slots: Sequence[int], apms: np.ndarray,
+                  aux=None) -> None:
         """In-place update of existing slots (no allocation, no id churn)."""
         slots = np.asarray(slots).reshape(-1)
-        parts = self.codec.encode(np.asarray(apms, self.dtype))
+        parts = self.codec.encode(np.asarray(apms, self.dtype), aux)
         for a, p in zip(self._arenas, parts):
             a[slots] = p
         self._record_checksums(slots, parts)

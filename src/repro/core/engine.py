@@ -31,6 +31,7 @@ from repro.core.database import AttentionDB, DeviceDB
 from repro.core.embedding import Embedder, train_embedder
 from repro.core.faults import FaultInjector
 from repro.core.index import DeviceIndex
+from repro.core.prefill import PrefillCodec, stack_kv, unstack_kv_rows
 from repro.core.selective import LayerProfile, PerfModel, timeit_median
 from repro.core.similarity import similarity_score
 from repro.core.store import MemoStore, StoreSnapshot
@@ -171,6 +172,12 @@ class PreparedBatch:
     #                                      serves against, end to end
     t0: float = 0.0
     pend: list = field(default_factory=list)
+    # prefill serving (DESIGN.md §2.13): per-layer decode-cache templates
+    # split from model.init_caches, and the caches each layer produced
+    prefill: bool = False
+    cache_len: int = 0
+    cache_tpls: Optional[dict] = None
+    caches_by_li: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -181,8 +188,9 @@ class MaintenancePayload:
     to the background worker (async mode, overlapped with batch t+1's
     device compute)."""
     reuse_slots: Optional[np.ndarray] = None        # device-tier hits
-    admissions: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = \
-        field(default_factory=list)                 # (apms, embs, lens)
+    admissions: List[Tuple] = field(default_factory=list)
+    #   (apms, embs, lens, kv) — kv is the stacked (B, 2, S, D) K/V plane
+    #   under prefill capture, None for APM-only admissions
     generation: int = -1        # the store generation the batch served
     #                             against (failure-report context)
 
@@ -292,13 +300,23 @@ class MemoEngine:
         mc = self.mc
         budget = (None if mc.budget_mb is None
                   else int(mc.budget_mb * 1e6))
+        codec = mc.apm_codec
+        if mc.prefill.enabled:
+            # prefill memoization (DESIGN.md §2.13): wrap the APM codec so
+            # every entry carries per-layer K/V parts — the SAME store,
+            # arenas, sync, capacity tier and save format serve both
+            from repro.core.codec import get_codec
+            base = get_codec(codec, tuple(apm_shape), rank=mc.apm_rank)
+            codec = PrefillCodec(
+                base, kv_dim=self.cfg.n_kv_heads * self.cfg.head_dim,
+                kv_codec=mc.prefill.kv_codec, kv_rank=mc.prefill.kv_rank)
         kw = dict(
             index_kind=mc.index_kind, budget_bytes=budget,
             capacity=capacity, interpret=self._interpret,
             device_slack=mc.device_slack,
             n_lists=(n_lists if n_lists is not None
                      else max(4, int(np.sqrt(max(1, capacity))))),
-            codec=mc.apm_codec, apm_rank=mc.apm_rank,
+            codec=codec, apm_rank=mc.apm_rank,
             cluster_crossover=mc.cluster_crossover,
             nprobe=mc.nprobe, n_clusters=mc.n_clusters,
             eviction=mc.eviction.kind, faults=self.faults,
@@ -312,6 +330,7 @@ class MemoEngine:
                 tuple(apm_shape), mc.embed_dim,
                 n_shards=mc.shards, shard_axis=mc.shard_axis,
                 hot_k=mc.shard_hot, route_nprobe=mc.shard_route_nprobe,
+                refresh_spills=mc.shard_refresh_spills,
                 **kw)
         return MemoStore(tuple(apm_shape), mc.embed_dim,
                          device_index_kind=mc.device_index, **kw)
@@ -320,18 +339,32 @@ class MemoEngine:
     def build(self, key, batches: Sequence[dict], *, train_pairs=512,
               verbose=False):
         """Populate the attention + index databases from a calibration
-        corpus and train the embedding model."""
-        hiddens, apms = [], []
+        corpus and train the embedding model. With prefill memoization
+        enabled, every calibration entry also stores the layer's post-RoPE
+        K/V (recomputed from the captured attention input — the capture
+        dict's ``hidden`` IS the normed x that ``_qkv`` consumes), so the
+        first epoch is immediately servable for prefill."""
+        prefill = self.mc.prefill.enabled
+        if prefill:
+            self._check_prefill_supported()
+        lps = ({li: lp for li, _, lp in self._iter_layers()}
+               if prefill else None)
+        hiddens, apms, kvs = [], [], []
         for batch in batches:
             _, caps = self.model.classify(self.params, batch, capture=True) \
                 if self.cfg.n_classes else self.model.forward(
                     self.params, batch, capture=True)[:2]
             for li in self.layers:
                 if li in caps:
-                    hiddens.append(np.asarray(caps[li]["hidden"]))
+                    hid = np.asarray(caps[li]["hidden"])
+                    hiddens.append(hid)
                     apms.append(np.asarray(caps[li]["apm"], np.float16))
+                    if prefill:
+                        kvs.append(np.asarray(self._kv_probe(
+                            lps[li], jnp.asarray(hid))))
         hiddens = np.concatenate(hiddens, 0)      # (N, L, H)
         apms = np.concatenate(apms, 0)            # (N, heads, L, L)
+        kv = np.concatenate(kvs, 0) if prefill else None
         n, L, H = hiddens.shape
 
         self.store = self._make_store(apms.shape[1:], capacity=n)
@@ -347,7 +380,7 @@ class MemoEngine:
             print(f"embedder loss {hist[0]:.4f} -> {hist[-1]:.4f}")
 
         embs = np.asarray(self._embed(jnp.asarray(hiddens)))
-        self.store.admit(apms, embs)      # calibration corpus = first epoch
+        self.store.admit(apms, embs, kv=kv)   # calibration = first epoch
         self._calibrate(hiddens, apms)
         # materialize the serving tier only when the fast path can reach
         # it (select-mode engines would duplicate the arena for nothing);
@@ -519,7 +552,8 @@ class MemoEngine:
     # ------------------------------------- step-wise fast-path executor
     def prepare_batch(self, batch, *, threshold: Optional[float] = None,
                       active_layers: Optional[Sequence[int]] = None,
-                      sync_store: bool = True) -> PreparedBatch:
+                      sync_store: bool = True,
+                      prefill: bool = False) -> PreparedBatch:
         """Stage one device-resident batch (DESIGN.md §2.7): freeze the
         policy inputs (threshold, active layers, admission sampling), read
         the store snapshot the WHOLE batch will serve against, and run the
@@ -529,7 +563,13 @@ class MemoEngine:
 
         ``sync_store=False`` is the async-maintenance contract: the
         serving thread never mutates the store — it reads the latest
-        atomically-published snapshot and leaves sync to the worker."""
+        atomically-published snapshot and leaves sync to the worker.
+
+        ``prefill=True`` stages a memoized causal prefill (DESIGN.md
+        §2.13): the batch additionally carries per-layer decode-cache
+        templates, memoized layers run ``_layer_fused_prefill`` (a hit
+        materializes the decode cache from the stored KV entry), and
+        ``finalize`` returns ``(last_logits, caches)``."""
         if not self._use_fast_path():
             raise RuntimeError(
                 "prepare_batch drives the device fast path; build() the "
@@ -541,7 +581,7 @@ class MemoEngine:
         thr = self.mc.threshold if threshold is None else float(threshold)
         active = set(self.layers if active_layers is None
                      else active_layers)
-        capture = self._capture_now(True)
+        capture = self._capture_now(True, prefill=prefill)
         self._serve_batches += 1
         if sync_store:
             self.store.sync()     # generation-counted: no-op unless stale
@@ -551,6 +591,28 @@ class MemoEngine:
             view = self.store.snapshot
         B, S = tokens.shape[0], tokens.shape[1]
         n_valid = int(batch.get("n_valid", B))
+        cache_len, cache_tpls = 0, None
+        if prefill:
+            if not self.mc.prefill.enabled:
+                raise RuntimeError(
+                    "prefill serving needs PrefillSpec(enabled=True) at "
+                    "build time — the store must carry KV-bearing entries")
+            if not isinstance(self.store.codec, PrefillCodec):
+                raise RuntimeError(
+                    "this store's entries carry no KV parts; rebuild (or "
+                    "re-save) it with prefill_enabled=True")
+            self._check_prefill_supported()
+            cache_len = self._prefill_cache_len(S)
+            cache_tpls = self._split_caches(
+                self.model.init_caches(B, cache_len))
+            for li in sorted(set(self.layers) & active):
+                cl = bb.cache_len_from(cache_tpls[li])
+                if cl < S:
+                    raise ValueError(
+                        f"layer {li} decode cache holds {cl} slots < "
+                        f"prompt length {S} (sliding windows shorter "
+                        f"than the prompt cannot replay a stored "
+                        f"prefix)")
         t0 = time.perf_counter()
         key = ("prolog", lengths is not None)
         prolog = self._jit_cache.get(key)
@@ -574,7 +636,8 @@ class MemoEngine:
             tokens=tokens, h=h, positions=positions, kpad=kpad,
             lengths_dev=len_dev, lengths=lengths,
             n_valid=n_valid, thr=thr, active=active, capture=capture,
-            view=view, t0=t0)
+            view=view, t0=t0, prefill=prefill, cache_len=cache_len,
+            cache_tpls=cache_tpls)
 
     def run_layers(self, prep: PreparedBatch) -> PreparedBatch:
         """The device-resident serving loop (DESIGN.md §2): every layer is
@@ -587,6 +650,27 @@ class MemoEngine:
         are STAGED ON DEVICE the same way — the loop never blocks."""
         thr_dev = jnp.float32(prep.thr)
         h = prep.h
+        if prep.prefill:
+            # memoized causal prefill: memoized layers hand back the
+            # layer's decode cache alongside h (hits from the stored KV
+            # entry, misses from the freshly computed K/V); every other
+            # layer runs the backbone's exact prefill step
+            for li, kind, lp in self._iter_layers():
+                if li in prep.active and kind == "attn":
+                    h, ck, cv, *rest = self._layer_fused_prefill(
+                        lp, h, li, thr_dev, prep.positions,
+                        view=prep.view, cache_tpl=prep.cache_tpls[li],
+                        kpad=prep.kpad, qlen=prep.lengths_dev,
+                        capture=prep.capture)
+                    prep.caches_by_li[li] = {"k": ck, "v": cv}
+                    prep.pend.append((li, *rest))
+                else:
+                    h, c = self._layer_plain_prefill(
+                        lp, h, kind, li, prep.positions,
+                        prep.cache_tpls[li], kpad=prep.kpad)
+                    prep.caches_by_li[li] = c
+            prep.h = h
+            return prep
         for li, kind, lp in self._iter_layers():
             if li in prep.active and kind in ("attn", "mla"):
                 h, *rest = self._layer_fused(
@@ -608,16 +692,30 @@ class MemoEngine:
         decides WHERE it runs (inline vs the maintenance worker)."""
         st = stats or MemoStats()
         cfg = self.cfg
-        key = ("head", prep.kpad is not None)
-        head = self._jit_cache.get(key)
-        if head is None:
-            def head(params, h, kpad):
-                return (bb.classify_from_hidden(params, h, cfg, kpad=kpad)
-                        if cfg.n_classes
-                        else bb.logits_from_hidden(params, h, cfg))
-            head = self._jit_cache[key] = jax.jit(head)
-        out = jax.block_until_ready(
-            head(self.params, prep.h, prep.kpad))           # ONE barrier
+        if prep.prefill:
+            # the prefill head byte-mirrors Model.prefill (last-position
+            # logits), so exact-vs-memoized parity compares like for like
+            headpf = self._jit_cache.get("headpf")
+            if headpf is None:
+                def headpf(params, h):
+                    return bb.logits_from_hidden(
+                        params, h[:, -1:], cfg)[:, 0]
+                headpf = self._jit_cache["headpf"] = jax.jit(headpf)
+            logits = jax.block_until_ready(
+                headpf(self.params, prep.h))                # ONE barrier
+            out = (logits, self._merge_caches(prep.caches_by_li))
+        else:
+            key = ("head", prep.kpad is not None)
+            head = self._jit_cache.get(key)
+            if head is None:
+                def head(params, h, kpad):
+                    return (bb.classify_from_hidden(params, h, cfg,
+                                                    kpad=kpad)
+                            if cfg.n_classes
+                            else bb.logits_from_hidden(params, h, cfg))
+                head = self._jit_cache[key] = jax.jit(head)
+            out = jax.block_until_ready(
+                head(self.params, prep.h, prep.kpad))       # ONE barrier
         dt = time.perf_counter() - prep.t0
         st.n_inputs += prep.n_valid
         st.t_total += dt
@@ -863,12 +961,332 @@ class MemoEngine:
                   jnp.float32(view.sim_a), jnp.float32(view.sim_b),
                   positions, qlen, kpad)
 
-    def _capture_now(self, use_memo: bool) -> bool:
+    def _layer_fused_prefill(self, lp, h, li, thr_dev, positions, view,
+                             cache_tpl, kpad=None, qlen=None,
+                             capture: bool = False):
+        """The fused memoized-prefill layer (DESIGN.md §2.13): ONE jitted
+        dispatch extending ``_layer_fused`` with the KV leg. The gather
+        decodes the entry's KV suffix next to its APM; hit quanta skip
+        Q/K projection + QKᵀ + softmax via the memo-only attention AND
+        take their decode cache straight from the stored KV; miss quanta
+        run exact attention and cache their freshly computed K/V. Both
+        legs zero-pad the cache to ``cache_len`` — the same convention
+        as ``gqa_prefill_cache`` — so a hit's cache and an exact prefill
+        cache differ only by the KV codec's quantization. Returns
+        (h', k_cache, v_cache, sims, hits, slots[, embs, apms, kvs]).
+
+        Kernel-mode engines also land here for prefill batches:
+        memo_attention produces attention outputs only (it cannot hand
+        K/V back), so prefill always uses the bucketed-quanta
+        formulation."""
+        cfg = self.cfg
+        varlen = qlen is not None
+        Sc = bb.cache_len_from(cache_tpl)
+        cdt = jax.tree.leaves(cache_tpl)[0].dtype
+        key = ("fusedpf", li if cfg.moe else 0, h.shape,
+               self.mc.device_quanta, capture, view.codec_key,
+               view.index_key, varlen, Sc, cdt)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            pool, act = self.embedder.pool, self.embedder.act
+            from repro.core.embedding import embed_apply
+            codec = self.store.codec
+            index = view.index
+            sharded = getattr(index, "is_sharded", False)
+            B = h.shape[0]
+            nq = (self.mc.device_quanta
+                  if (1 < self.mc.device_quanta <= B
+                      and B % self.mc.device_quanta == 0) else 1)
+            n_kv, dh = cfg.n_kv_heads, cfg.head_dim
+            arena_len = self.store.apm_shape[-1]
+
+            def true_kv(lp, xs, pos, kp):
+                """Exact post-RoPE K/V of a (sub-)batch, padded rows
+                zeroed so a served miss cache and an admitted entry both
+                follow the stored-KV convention (zeros past the true
+                length)."""
+                _, k, v = attn_mod._qkv(lp["mix"], xs, cfg, pos)
+                if kp is not None:
+                    m = kp[:, :, None, None].astype(k.dtype)
+                    k, v = k * m, v * m
+                return k.astype(jnp.float32), v.astype(jnp.float32)
+
+            def bucketed(lp, xs, apm, mk, mv, hit, pos, kp, size):
+                def all_hit(ops):
+                    xs, apm, mk, mv, hit, pos, kp = ops
+                    y = attn_mod.gqa_apply_memo(
+                        lp["mix"], xs, cfg, apm.astype(jnp.float32))
+                    return y, mk, mv
+
+                def all_miss(ops):
+                    xs, apm, mk, mv, hit, pos, kp = ops
+                    y, _ = attn_mod.gqa_apply(
+                        lp["mix"], xs, cfg, positions=pos,
+                        mask_kind="causal", window=cfg.sliding_window,
+                        kpad=kp)
+                    k, v = true_kv(lp, xs, pos, kp)
+                    return y, k, v
+
+                def mixed(ops):
+                    xs, apm, mk, mv, hit, pos, kp = ops
+                    y, _ = attn_mod.gqa_apply(
+                        lp["mix"], xs, cfg, positions=pos,
+                        mask_kind="causal", window=cfg.sliding_window,
+                        kpad=kp, memo=attn_mod.Memo(apm=apm, hit=hit))
+                    k, v = true_kv(lp, xs, pos, kp)
+                    m = hit[:, None, None, None]
+                    return y, jnp.where(m, mk, k), jnp.where(m, mv, v)
+
+                n_hit = jnp.sum(hit.astype(jnp.int32))
+                return jax.lax.cond(
+                    n_hit == size, all_hit,
+                    lambda ops: jax.lax.cond(n_hit == 0, all_miss, mixed,
+                                             ops),
+                    (xs, apm, mk, mv, hit, pos, kp))
+
+            def run(lp, emb_p, sargs, db_parts, ent_lens, h, thr, a, b,
+                    positions, qlen, kpad):
+                x = bb.norm_apply(lp["norm1"], h, cfg.norm)
+                emb = embed_apply(emb_p, x, pool, act, lengths=qlen,
+                                  full_len=arena_len)
+                if sharded:
+                    d2, idx, drows = index.search_fetch(
+                        emb, args=sargs, parts=db_parts)
+                else:
+                    drows = None
+                    d2, idx = index.search_device(emb, args=sargs)
+                dist = jnp.sqrt(jnp.maximum(d2[:, 0], 0.0))
+                sim = a * dist + b
+                hit = sim > thr
+                idx0 = idx[:, 0].astype(jnp.int32)
+                S = x.shape[1]
+                # the length gate (see _layer_fused) — doubly load-
+                # bearing here: a replayed KV prefix is only valid at
+                # the length it was captured at
+                hit = hit & (jnp.take(ent_lens, idx0)
+                             == (qlen if varlen else S))
+                rows = (drows if sharded
+                        else tuple(jnp.take(p, idx0, axis=0)
+                                   for p in db_parts))
+                apm = codec.decode_rows(rows).astype(jnp.float32)
+                if apm.shape[-1] != S:
+                    apm = apm[..., :S, :S]
+                kv = codec.decode_kv_rows(rows).astype(jnp.float32)
+                mk, mv = unstack_kv_rows(kv[:, :, :S], n_kv, dh)
+                if nq == 1:
+                    y, k_new, v_new = bucketed(
+                        lp, x, apm, mk, mv, hit, positions, kpad, B)
+                else:
+                    order = jnp.argsort(jnp.logical_not(hit))
+                    inv = jnp.argsort(order)
+                    qs = B // nq
+
+                    def take(arr):
+                        return (None if arr is None
+                                else jnp.take(arr, order, 0))
+                    x_s, apm_s, mk_s, mv_s = map(take, (x, apm, mk, mv))
+                    hit_s, pos_s, kp_s = map(take, (hit, positions, kpad))
+                    ys, ks, vs = [], [], []
+                    for g in range(nq):
+                        sl = slice(g * qs, (g + 1) * qs)
+                        yq, kq, vq = bucketed(
+                            lp, x_s[sl], apm_s[sl], mk_s[sl], mv_s[sl],
+                            hit_s[sl], pos_s[sl],
+                            None if kp_s is None else kp_s[sl], qs)
+                        ys.append(yq)
+                        ks.append(kq)
+                        vs.append(vq)
+                    y = jnp.take(jnp.concatenate(ys, 0), inv, 0)
+                    k_new = jnp.take(jnp.concatenate(ks, 0), inv, 0)
+                    v_new = jnp.take(jnp.concatenate(vs, 0), inv, 0)
+                pad = ((0, 0), (0, Sc - S), (0, 0), (0, 0))
+                ck = jnp.pad(k_new, pad).astype(cdt)
+                cv = jnp.pad(v_new, pad).astype(cdt)
+                out = (self._chan_tail(lp, h + y, li), ck, cv,
+                       sim, hit, idx0)
+                if capture:
+                    # miss capture: the true APM + KV, computed exactly
+                    # like the miss path (an admitted entry replays
+                    # bit-for-bit); only these outputs are consumed, so
+                    # XLA dead-code-eliminates the probe's APM·V
+                    _, apm_cap = attn_mod.gqa_apply(
+                        lp["mix"], x, cfg, positions=positions,
+                        mask_kind="causal", window=cfg.sliding_window,
+                        kpad=kpad, return_apm=True)
+                    kc, vc = true_kv(lp, x, positions, kpad)
+                    kv_cap = jnp.stack(
+                        [kc.reshape(B, S, -1), vc.reshape(B, S, -1)],
+                        1).astype(jnp.float16)
+                    out = out + (emb, apm_cap.astype(jnp.float16), kv_cap)
+                return out
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, self.embedder.params, view.search_args,
+                  view.db_parts, view.lengths, h, thr_dev,
+                  jnp.float32(view.sim_a), jnp.float32(view.sim_b),
+                  positions, qlen, kpad)
+
+    def _layer_plain_prefill(self, lp, h, kind, li, positions, cache,
+                             kpad=None):
+        """Non-memoized layers of a prefill batch: the backbone's exact
+        prefill step (attention + cache build for attn/mla, recurrent
+        state for the linear mixers) as one jitted dispatch."""
+        key = ("plainpf", kind, li if self.cfg.moe else 0, h.shape,
+               kpad is not None, bb.cache_len_from(cache))
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            def run(lp, h, positions, cache, kpad):
+                out, c, _, _ = bb._layer_apply(
+                    lp, h, cfg, kind, li, mode="prefill",
+                    positions=positions, pos=None, cache=cache,
+                    kpad=kpad)
+                return out, c
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn(lp, h, positions, cache, kpad)
+
+    # ------------------------------------------------------- prefill API
+    def prefill(self, batch, *, threshold: Optional[float] = None,
+                active_layers: Optional[Sequence[int]] = None,
+                stats: Optional[MemoStats] = None):
+        """Memoized causal prefill (DESIGN.md §2.13). Returns
+        (last-token logits (B, V), decode caches, stats): a hit skips
+        the layer's attention AND materializes that layer's decode cache
+        from the stored KV entry; a miss runs exact prefill and (under
+        admission sampling) captures APM + KV. Decode continues via
+        ``self.model.decode_step`` on the returned caches."""
+        st = stats or MemoStats()
+        prep = self.prepare_batch(batch, threshold=threshold,
+                                  active_layers=active_layers,
+                                  prefill=True)
+        self.run_layers(prep)
+        (logits, caches), st, payload = self.finalize(prep, stats=st)
+        self.apply_maintenance(payload, stats=st)
+        return logits, caches, st
+
+    def prefill_exact(self, batch, *, cache_len: Optional[int] = None):
+        """Exact (memo-free) prefill: the degraded-mode leg the
+        MemoServer falls back to, and the parity reference the prefill
+        benchmark asserts against. Returns (logits (B, V), caches)."""
+        tokens = jnp.asarray(batch["tokens"])
+        Sc = (int(cache_len) if cache_len
+              else self._prefill_cache_len(int(tokens.shape[1])))
+        key = ("pfexact", Sc)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            model = self.model
+
+            def run(params, tokens):
+                return model.prefill(params, {"tokens": tokens},
+                                     cache_len=Sc)
+            fn = self._jit_cache[key] = jax.jit(run)
+        return fn(self.params, tokens)
+
+    def _capture_now(self, use_memo: bool, prefill: bool = False) -> bool:
         """Admission sampling: capture misses on every Nth served batch
-        (``admit_every``) when online admission is enabled."""
+        (``admit_every``) when online admission is enabled. With prefill
+        memoization on, ONLY prefill batches capture — an APM-only
+        admission would store zero KV planes and a later prefill hit
+        would replay an empty decode cache."""
+        if self.mc.prefill.enabled and not prefill:
+            return False
         return (use_memo and self.mc.admit and self.store is not None
                 and not self.is_encdec
                 and self._serve_batches % max(1, self.mc.admit_every) == 0)
+
+    # --------------------------------------------------- prefill serving
+    def _check_prefill_supported(self):
+        """Prefill memoization preconditions (DESIGN.md §2.13). The
+        causal requirement IS the mask-kind gate: every stored entry was
+        captured under the causal prefill mask, and a causal-only engine
+        can never replay one against a bidirectional query."""
+        if self.is_encdec:
+            raise ValueError(
+                "prefill memoization needs a decoder-only model (enc-dec "
+                "hands no decode cache back from its encoder)")
+        if not self.cfg.causal:
+            raise ValueError(
+                "prefill memoization requires a causal model: stored "
+                "entries are causal-prefill states and may only be "
+                "replayed under the same mask kind")
+        bad = sorted(li for li, kind, _ in self._iter_layers()
+                     if li in self.layers and kind != "attn")
+        if bad:
+            raise ValueError(
+                f"prefill memoization serves GQA 'attn' layers only "
+                f"(MLA caches latents, not K/V); memoized layers {bad} "
+                f"are a different mixer kind")
+
+    def _prefill_cache_len(self, S: int) -> int:
+        """Decode-cache length for a prompt of length ``S``:
+        ``prefill_cache_len`` if set, else 2·S headroom."""
+        cl = self.mc.prefill.cache_len
+        Sc = int(cl) if cl else 2 * S
+        if Sc < S:
+            raise ValueError(
+                f"prefill_cache_len={Sc} is shorter than the prompt "
+                f"({S}): the decode cache must hold the whole prefix")
+        return Sc
+
+    def _kv_probe(self, lp, x):
+        """Post-RoPE K/V of one captured block, stacked into the stored
+        (B, 2, S, D) plane — the KV side-channel for build-time prefill
+        admission. Positions run from 0 (prefill is absolute), so the
+        stored K drops into a decode cache verbatim."""
+        key = ("kv_probe", x.shape)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            def run(lp, x):
+                B, S = x.shape[0], x.shape[1]
+                positions = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32), (B, S))
+                _, k, v = attn_mod._qkv(lp["mix"], x, cfg, positions)
+                return jnp.stack([k.reshape(B, S, -1),
+                                  v.reshape(B, S, -1)],
+                                 1).astype(jnp.float16)
+            fn = self._jit_cache[key] = jax.jit(run)
+        return fn(lp, x)
+
+    def _split_caches(self, caches) -> dict:
+        """Flatten a ``model.init_caches`` pytree into {layer_idx: cache}
+        — the per-layer view the step-wise prefill executor works in.
+        Scan segments carry a leading reps axis; slicing it off here and
+        re-stacking in ``_merge_caches`` mirrors exactly what the
+        backbone's unroll branch does."""
+        out = {}
+        for si, seg in enumerate(bb.scan_plan(self.cfg)):
+            grp = caches[f"seg{si}"]
+            if seg.kind == "single":
+                for u in range(len(seg.unit)):
+                    out[seg.start + u] = grp[f"l{u}"]
+            else:
+                for r in range(seg.reps):
+                    rep = jax.tree.map(lambda a: a[r], grp)
+                    for u in range(len(seg.unit)):
+                        out[seg.start + r * len(seg.unit) + u] = rep[f"l{u}"]
+        return out
+
+    def _merge_caches(self, by_li: dict):
+        """Inverse of ``_split_caches``: {layer_idx: cache} → the segment
+        pytree ``model.decode_step`` consumes."""
+        caches = {}
+        for si, seg in enumerate(bb.scan_plan(self.cfg)):
+            if seg.kind == "single":
+                caches[f"seg{si}"] = {
+                    f"l{u}": by_li[seg.start + u]
+                    for u in range(len(seg.unit))}
+            else:
+                groups = [
+                    {f"l{u}": by_li[seg.start + r * len(seg.unit) + u]
+                     for u in range(len(seg.unit))}
+                    for r in range(seg.reps)]
+                caches[f"seg{si}"] = jax.tree.map(
+                    lambda *a: jnp.stack(a), *groups)
+        return caches
 
     def _drain_stats(self, prep: PreparedBatch,
                      st: MemoStats) -> MaintenancePayload:
@@ -902,21 +1320,26 @@ class MemoEngine:
         if prep.capture and len(pend[0]) > 4:
             embs = np.asarray(jnp.stack([p[4] for p in pend]))[:, :nv]
             apms = np.asarray(jnp.stack([p[5] for p in pend]))[:, :nv]
+            # prefill capture stages the KV plane at pend[6]
+            kvs = (np.asarray(jnp.stack([p[6] for p in pend]))[:, :nv]
+                   if len(pend[0]) > 6 else None)
             lens = None if prep.lengths is None else prep.lengths[:nv]
             for l in range(embs.shape[0]):
                 miss = ~hits[l]
                 if miss.any():
                     out.admissions.append(self._stage_capture(
                         apms[l][miss], embs[l][miss],
-                        None if lens is None else lens[miss]))
+                        None if lens is None else lens[miss],
+                        None if kvs is None else kvs[l][miss]))
         return out
 
-    def _stage_capture(self, apms, embs, lens):
+    def _stage_capture(self, apms, embs, lens, kv=None):
         """Normalize one captured miss block for admission: pad the APMs
-        to the arena (calibration) length and zero the pad-query rows, so
-        a stored entry is identical no matter which bucket captured it —
-        only its true length matters (the length gate guarantees it is
-        only ever replayed at that length)."""
+        (and the KV plane, when prefill capture staged one) to the arena
+        (calibration) length and zero the pad-query rows, so a stored
+        entry is identical no matter which bucket captured it — only its
+        true length matters (the length gate guarantees it is only ever
+        replayed at that length)."""
         S_max = self.store.apm_shape[-1]
         B, H, S = apms.shape[:3]
         if lens is None:
@@ -929,10 +1352,17 @@ class MemoEngine:
             padded = np.zeros((B, H, S_max, S_max), apms.dtype)
             padded[:, :, :S, :S] = apms
             apms = padded
+            if kv is not None:
+                pk = np.zeros(kv.shape[:2] + (S_max, kv.shape[-1]),
+                              kv.dtype)
+                pk[:, :, :S] = kv
+                kv = pk
         if (lens < S_max).any():
             row_ok = np.arange(S_max)[None, :] < lens[:, None]
             apms = apms * row_ok[:, None, :, None].astype(apms.dtype)
-        return apms, embs, lens
+            if kv is not None:
+                kv = kv * row_ok[:, None, :, None].astype(kv.dtype)
+        return apms, embs, lens, kv
 
     def apply_maintenance(self, payload: Optional[MaintenancePayload],
                           stats: Optional[MemoStats] = None) -> None:
@@ -975,9 +1405,13 @@ class MemoEngine:
         if not self._pending_admissions:
             return
         pend, self._pending_admissions = self._pending_admissions, []
-        apms = np.concatenate([a for a, _, _ in pend], 0)
-        embs = np.concatenate([e for _, e, _ in pend], 0)
-        lens = np.concatenate([l for _, _, l in pend], 0)
+        apms = np.concatenate([p[0] for p in pend], 0)
+        embs = np.concatenate([p[1] for p in pend], 0)
+        lens = np.concatenate([p[2] for p in pend], 0)
+        # KV planes ride along iff every staged block carries one (APM-
+        # only and prefill captures never mix: _capture_now gates them)
+        kv = (np.concatenate([p[3] for p in pend], 0)
+              if all(p[3] is not None for p in pend) else None)
         cspec = self.mc.capacity
         if (apms.shape[0] and cspec.promote
                 and self.store.capacity is not None):
@@ -991,8 +1425,9 @@ class MemoEngine:
             if promoted.any():
                 keep = ~promoted
                 apms, embs, lens = apms[keep], embs[keep], lens[keep]
+                kv = kv[keep] if kv is not None else None
         if apms.shape[0]:
-            slots = self.store.admit(apms, embs, lens)
+            slots = self.store.admit(apms, embs, lens, kv=kv)
             st.add_admitted(int(slots.size))
             self.store.sync()
             self._flush_count += 1

@@ -54,6 +54,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -85,16 +86,21 @@ class Request:
     tokens: np.ndarray          # (length,) int32
     arrival: float              # runtime-clock seconds (scheduled arrival)
     enqueue: float              # when it actually entered its bucket queue
+    prefill: bool = False       # memoized-prefill request (DESIGN.md §2.13)
 
 
 @dataclass
 class Completion:
     rid: int
-    logits: np.ndarray          # unpadded: (n_classes,) or (length, vocab)
+    logits: np.ndarray          # unpadded: (n_classes,) or (length, vocab);
+    #                             prefill requests: (vocab,) last-token row
     latency: float              # completion − arrival (queue + compute)
     length: int
     bucket: int
     batch_rows: int             # real rows in the batch that served it
+    caches: Optional[dict] = None   # prefill only: this request's decode
+    #                                 caches (batch row 0), ready for
+    #                                 model.decode_step / gqa_decode
 
 
 def pow2_buckets(max_len: int, n: int = 3, min_len: int = 8
@@ -144,7 +150,12 @@ class MemoServer:
         self.max_delay = float(max_delay)
         self.batch_quantum = max(1, int(batch_quantum))
         self.async_maintenance = bool(async_maintenance)
-        self._queues: Dict[int, deque] = {b: deque() for b in self.buckets}
+        # queues are keyed (bucket, prefill-kind): a batch must be
+        # homogeneous — classify/LM batches and prefill batches run
+        # different engine legs (finalize returns (logits, caches) for
+        # prefill) and therefore never mix rows
+        self._queues: Dict[Tuple[int, bool], deque] = {
+            (b, pf): deque() for b in self.buckets for pf in (False, True)}
         self._rid = 0
         self._t0 = time.perf_counter()
         # global stats: per-batch MemoStats are merged in (serving thread)
@@ -219,34 +230,45 @@ class MemoServer:
         raise ValueError(f"request length {length} exceeds the largest "
                          f"bucket {self.buckets[-1]}")
 
-    def submit(self, tokens, arrival: Optional[float] = None) -> int:
+    def submit(self, tokens, arrival: Optional[float] = None,
+               prefill: bool = False) -> int:
         """Enqueue one request; returns its id. ``arrival`` defaults to
         now — open-loop drivers pass the scheduled arrival time so queue
-        delay is charged to the server, not the generator."""
+        delay is charged to the server, not the generator.
+
+        ``prefill=True`` requests the memoized-prefill leg (DESIGN.md
+        §2.13): the completion's ``logits`` is the last-token row and
+        its ``caches`` carries this request's decode caches."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.size == 0:
             raise ValueError("empty request")
+        if prefill and not self.engine.mc.prefill.enabled:
+            raise RuntimeError("prefill request on a server whose engine "
+                               "has prefill disabled (set prefill_enabled "
+                               "in the MemoSpec)")
         now = self._now()
         rid, self._rid = self._rid, self._rid + 1
         req = Request(rid=rid, tokens=tokens,
                       arrival=now if arrival is None else float(arrival),
-                      enqueue=now)
-        self._queues[self.bucket_for(tokens.size)].append(req)
+                      enqueue=now, prefill=bool(prefill))
+        self._queues[(self.bucket_for(tokens.size), bool(prefill))
+                     ].append(req)
         return rid
 
-    def _ready_bucket(self, now: float, flush: bool) -> Optional[int]:
+    def _ready_bucket(self, now: float, flush: bool
+                      ) -> Optional[Tuple[int, bool]]:
         """Batching policy: a bucket is ready when full or when its head
         request has waited past ``max_delay``; among ready buckets the
         oldest head wins (head-of-line fairness across buckets)."""
         best, best_t = None, None
-        for b, q in self._queues.items():
+        for key, q in self._queues.items():
             if not q:
                 continue
             head_wait = now - q[0].enqueue
             if flush or len(q) >= self.max_batch \
                     or head_wait >= self.max_delay:
                 if best is None or q[0].enqueue < best_t:
-                    best, best_t = b, q[0].enqueue
+                    best, best_t = key, q[0].enqueue
         return best
 
     def _pad_rows(self, n: int) -> int:
@@ -262,15 +284,15 @@ class MemoServer:
         """Assemble and serve at most one batch. Returns completions
         (empty when no bucket is ready)."""
         now = self._now()
-        b = self._ready_bucket(now, flush)
-        if b is None:
+        key = self._ready_bucket(now, flush)
+        if key is None:
             return []
-        q = self._queues[b]
+        q = self._queues[key]
         reqs = [q.popleft() for _ in range(min(len(q), self.max_batch))]
-        return self._execute(b, reqs)
+        return self._execute(key[0], reqs, prefill=key[1])
 
-    def _execute(self, bucket: int, reqs: List[Request]
-                 ) -> List[Completion]:
+    def _execute(self, bucket: int, reqs: List[Request],
+                 prefill: bool = False) -> List[Completion]:
         eng = self.engine
         n = len(reqs)
         rows = self._pad_rows(n)
@@ -291,11 +313,15 @@ class MemoServer:
         if self.health is Health.MEMO_DISABLED:
             # the bottom of the degradation ladder: exact attention via
             # the engine's no-memo path — logits bit-identical to
-            # ``infer(use_memo=False)``, no store reads, no maintenance
-            out, st = eng.infer(batch, stats=st, use_memo=False)
+            # ``infer(use_memo=False)`` / ``prefill_exact``, no store
+            # reads, no maintenance
+            if prefill:
+                out = eng.prefill_exact(batch)
+            else:
+                out, st = eng.infer(batch, stats=st, use_memo=False)
             self.n_exact_batches += 1
         else:
-            prep = eng.prepare_batch(batch,
+            prep = eng.prepare_batch(batch, prefill=prefill,
                                      sync_store=not self.async_maintenance)
             eng.run_layers(prep)
             out, st, payload = eng.finalize(prep, stats=st)
@@ -310,8 +336,26 @@ class MemoServer:
         self.stats.merge(st)
         self.n_batches += 1
         done = self._now()
-        out_np = np.asarray(out)
         comps = []
+        if prefill:
+            logits_all, caches = out
+            out_np = np.asarray(logits_all)          # (rows, vocab)
+            by_li = eng._split_caches(caches)
+            for i, r in enumerate(reqs):
+                # per-request decode caches: slice batch row i out of
+                # every cache leaf, then re-merge into the segment
+                # pytree model.decode_step consumes (slicing the merged
+                # tree directly would hit scan segments' leading reps
+                # axis instead of the batch axis)
+                c_i = eng._merge_caches({
+                    li: jax.tree.map(lambda a, i=i: a[i: i + 1], c)
+                    for li, c in by_li.items()})
+                comps.append(Completion(
+                    rid=r.rid, logits=out_np[i], latency=done - r.arrival,
+                    length=int(r.tokens.size), bucket=bucket,
+                    batch_rows=n, caches=c_i))
+            return comps
+        out_np = np.asarray(out)
         for i, r in enumerate(reqs):
             logits = (out_np[i] if out_np.ndim == 2
                       else out_np[i, : r.tokens.size])
@@ -612,25 +656,30 @@ class MemoServer:
         # parity 0 captures (when admission is on), parity 1 does not
         parities = ([0, 1] if eng.mc.admit and eng.mc.admit_every > 1
                     else [0])
+        kinds = [False] + ([True] if eng.mc.prefill.enabled else [])
         try:
             for b in self.buckets:
                 for rows in sizes:
                     for parity in parities:
-                        eng._serve_batches = parity
-                        toks = np.zeros((rows, b), np.int32)
-                        lens = np.full((rows,), max(1, b // 2), np.int32)
-                        batch = {"tokens": jnp.asarray(toks),
-                                 "lengths": lens, "n_valid": rows}
-                        prep = eng.prepare_batch(batch, sync_store=False)
-                        eng.run_layers(prep)
-                        eng.finalize(prep, stats=MemoStats())
+                        for pf in kinds:
+                            eng._serve_batches = parity
+                            toks = np.zeros((rows, b), np.int32)
+                            lens = np.full((rows,), max(1, b // 2),
+                                           np.int32)
+                            batch = {"tokens": jnp.asarray(toks),
+                                     "lengths": lens, "n_valid": rows}
+                            prep = eng.prepare_batch(batch, prefill=pf,
+                                                     sync_store=False)
+                            eng.run_layers(prep)
+                            eng.finalize(prep, stats=MemoStats())
         finally:
             eng._serve_batches = serve_counter
 
     # --------------------------------------------------------- open loop
-    def run(self, workload: Sequence[Tuple[float, np.ndarray]],
+    def run(self, workload: Sequence[Tuple],
             ) -> List[Completion]:
         """Serve an open-loop trace: ``workload`` is [(arrival_s, tokens)]
+        — or [(arrival_s, tokens, prefill)] to mix in prefill requests —
         on the runtime clock starting now. Arrivals are injected by
         schedule regardless of server progress (queueing delay is the
         server's problem — that is the open-loop point); returns one
@@ -641,7 +690,10 @@ class MemoServer:
         while i < len(wl) or self.queued:
             now = self._now() - base
             while i < len(wl) and wl[i][0] <= now:
-                self.submit(wl[i][1], arrival=base + wl[i][0])
+                item = wl[i]
+                self.submit(item[1], arrival=base + item[0],
+                            prefill=bool(item[2]) if len(item) > 2
+                            else False)
                 i += 1
             got = self.step(flush=i >= len(wl))
             if got:

@@ -408,7 +408,8 @@ class ShardedMemoStore(MemoStore):
 
     def __init__(self, apm_shape, embed_dim, *, n_shards: int = 0,
                  shard_axis: str = "store", hot_k: int = 32,
-                 route_nprobe: Optional[int] = None, mesh=None, **kw):
+                 route_nprobe: Optional[int] = None,
+                 refresh_spills: int = 0, mesh=None, **kw):
         if kw.get("index_kind") == "device":
             raise MemoStoreError(
                 "ShardedMemoStore needs a host-tier index separate from "
@@ -441,6 +442,12 @@ class ShardedMemoStore(MemoStore):
         self.shard_snapshots: Tuple[ShardSnapshot, ...] = ()
         self.n_shard_evictions = 0
         self.n_spills = 0
+        # routing-drift repair (ROADMAP item 1): after this many delta-
+        # sync spills since the last centroid fit, recompute centroids
+        # from the current embedding table (0 disables)
+        self.refresh_spills = max(0, int(refresh_spills))
+        self._spills_since_refresh = 0
+        self.n_centroid_refreshes = 0
 
     # -------------------------------------------------------- accounting
     def shard_occupancy(self) -> np.ndarray:
@@ -462,6 +469,7 @@ class ShardedMemoStore(MemoStore):
             "hot_k": self.hot_k,
             "n_shard_evictions": self.n_shard_evictions,
             "n_spills": self.n_spills,
+            "n_centroid_refreshes": self.n_centroid_refreshes,
         }
 
     @property
@@ -617,6 +625,7 @@ class ShardedMemoStore(MemoStore):
                    + di.transfer_bytes + int(lens.nbytes))
         shipped += self._refresh_hot_locked()
         self._shard_gens += 1
+        self._spills_since_refresh = 0    # fresh fit: drift clock restarts
         return shipped
 
     def _delta_sync_device_locked(self, n: int,
@@ -639,6 +648,11 @@ class ShardedMemoStore(MemoStore):
                     continue    # evicted below by an earlier shard sweep
                 p = int(p)
                 if not self._shard_free[p]:
+                    # placement pressure: the routed shard is full while
+                    # the sync proceeds — whether resolved by eviction or
+                    # by spilling, it is the drift signal the centroid
+                    # refresh triggers on
+                    self._spills_since_refresh += 1
                     for v in self._evict_shard_locked(p, 1):
                         touched.add(int(v))
                         self._free_position_locked(int(v), killed)
@@ -677,8 +691,63 @@ class ShardedMemoStore(MemoStore):
             shipped += int(vals.nbytes + sl.size * 4)
         for sh in {pos // M for pos in write_pos + killed}:
             self._shard_gens[sh] += 1
+        if self.refresh_spills \
+                and self._spills_since_refresh >= self.refresh_spills:
+            shipped += self._refresh_centroids_locked()
         shipped += self._refresh_hot_locked()
         return shipped
+
+    def _refresh_centroids_locked(self) -> int:
+        """Lightweight routing-drift repair between full syncs (ROADMAP
+        item 1): when enough delta-sync admissions spilled off their
+        preferred shard, the centroid fit no longer describes the
+        embedding distribution. Re-run k-means over the RESIDENT rows'
+        current embeddings and re-derive each centroid's owner by
+        majority vote of its assigned rows' resident shard — no row
+        moves, no arena traffic; only the tiny replicated routing state
+        ships. Future admissions then route to where the data actually
+        lives, so the spill rate decays instead of compounding. Runs
+        under the store lock on the maintenance cadence (off-thread
+        under the MemoServer)."""
+        self._spills_since_refresh = 0
+        M = self._pos_per_shard
+        if M == 0 or not self._slot_pos or self.device_index is None:
+            return 0
+        n = len(self.db)
+        if n == 0:
+            return 0
+        resident = np.asarray(sorted(self._slot_pos), np.int64)
+        resident = resident[resident < n]
+        resident = resident[self.db.live_mask[resident]]
+        if resident.size == 0:
+            return 0
+        # keep the centroid count (and therefore the search_args shapes)
+        # fixed: k-means may clamp k below C on tiny stores — pad back
+        # with TOMBSTONE rows, which are never the nearest probe
+        C = int(self._centroids_host.shape[0])
+        cents, assign = _kmeans(self._embs_host[resident], C, iters=5,
+                                seed=1 + self.n_centroid_refreshes)
+        row_shard = np.asarray(
+            [self._slot_pos[int(s)] // M for s in resident], np.int64)
+        c_eff = int(cents.shape[0])
+        owner = np.zeros(C, np.int32)
+        for c in range(c_eff):
+            m = assign == c
+            if np.any(m):
+                owner[c] = np.int32(np.bincount(
+                    row_shard[m], minlength=self.n_shards).argmax())
+            elif c < self._owner_host.shape[0]:
+                owner[c] = self._owner_host[c]
+        if c_eff < C:
+            pad = np.full((C - c_eff, self.embed_dim), TOMBSTONE,
+                          np.float32)
+            cents = np.concatenate([np.asarray(cents, np.float32), pad])
+        self._centroids_host = np.asarray(cents, np.float32)
+        self._owner_host = owner
+        self.device_index.set_centroids(self._centroids_host,
+                                        self._owner_host)
+        self.n_centroid_refreshes += 1
+        return int(self._centroids_host.nbytes + owner.nbytes)
 
     def _refresh_hot_locked(self) -> int:
         """Rebuild the replicated hot set: the top ``hot_k`` live slots

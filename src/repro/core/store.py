@@ -548,20 +548,24 @@ class MemoStore:
         lens[:cap] = self._lens_host
         self._lens_host = lens
 
-    def admit(self, apms, embs, lengths=None) -> np.ndarray:
+    def admit(self, apms, embs, lengths=None, kv=None) -> np.ndarray:
         """Online admission under the byte budget. apms: (B, H, L, L),
         embs: (B, embed_dim), lengths: optional (B,) true sequence lengths
-        (defaults to the arena length — fixed-length corpora). Returns the
-        assigned arena slots (recycled free slots first, then fresh
-        appends). When the budget would be exceeded the CLOCK evicts cold
-        entries first; if the batch alone exceeds the whole budget only
-        its newest entries are kept."""
+        (defaults to the arena length — fixed-length corpora), kv: the
+        codec's side-channel payload (the (B, 2, S, D) KV planes under a
+        prefill codec — DESIGN.md §2.13; plain APM codecs ignore it).
+        Returns the assigned arena slots (recycled free slots first, then
+        fresh appends). When the budget would be exceeded the CLOCK evicts
+        cold entries first; if the batch alone exceeds the whole budget
+        only its newest entries are kept."""
         with self._lock:
-            return self._admit_locked(apms, embs, lengths)
+            return self._admit_locked(apms, embs, lengths, kv)
 
-    def _admit_locked(self, apms, embs, lengths) -> np.ndarray:
+    def _admit_locked(self, apms, embs, lengths, kv=None) -> np.ndarray:
         apms = np.asarray(apms, self.db.dtype)
         embs = np.asarray(embs, np.float32)
+        if kv is not None:
+            kv = np.asarray(kv)
         lengths = (np.full(apms.shape[0], self.default_len, np.int32)
                    if lengths is None
                    else np.asarray(lengths, np.int32).reshape(-1))
@@ -573,11 +577,13 @@ class MemoStore:
             if n_new > cap:
                 apms, embs = apms[-cap:], embs[-cap:]
                 lengths = lengths[-cap:]
+                if kv is not None:
+                    kv = kv[-cap:]
                 n_new = cap
             over = self.live_count + n_new - cap
             if over > 0:
                 self.evict(over)
-        slots = self.db.put(apms)
+        slots = self.db.put(apms, aux=kv)
         self._ensure_emb_capacity(int(slots.max()) + 1)
         self._embs_host[slots] = embs
         self._lens_host[slots] = lengths

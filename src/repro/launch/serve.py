@@ -3,6 +3,7 @@
     python -m repro.launch.serve --arch bert_base --reduced --requests 64
     python -m repro.launch.serve --arch gpt2_small --reduced --no-memo
     python -m repro.launch.serve --arch bert_base --reduced --online
+    python -m repro.launch.serve --arch gpt2_small --reduced --prefill
 
 ``--online`` demonstrates the MemoStore lifecycle (DESIGN.md §2.5) under
 drifting traffic: the request stream switches template corpus mid-run
@@ -54,6 +55,67 @@ def _run_phase(eng, corpus, n_batches, batch_size, st):
         times.append((time.perf_counter() - t0) * 1e3)
         rates.append((st.n_hits - h0) / max(1, st.n_layer_attempts - a0))
     return rates, times, st
+
+
+def _serve_prefill(eng, model, corpus, args, calib):
+    """Prefill-memoization A/B (DESIGN.md §2.13): per batch, time exact
+    prefill vs memoized prefill, then decode greedily from BOTH cache
+    sets and report parity — a hit must hand back a decode cache the
+    backbone cannot tell apart from the one exact prefill built."""
+    st = MemoStats()
+    lat_memo, lat_exact = [], []
+    n_batches = max(1, args.requests // args.batch)
+    for _ in range(n_batches):
+        batch = {"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
+        t0 = time.perf_counter()
+        logits_e, _ = eng.prefill_exact(batch)
+        jax.block_until_ready(logits_e)
+        lat_exact.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        logits_m, _, st = eng.prefill(batch, stats=st)
+        jax.block_until_ready(logits_m)
+        lat_memo.append(time.perf_counter() - t0)
+
+    p = np.median(lat_exact[1:] or lat_exact) * 1e3
+    m = np.median(lat_memo[1:] or lat_memo) * 1e3
+    print(f"[prefill] exact        {p:8.1f} ms/batch")
+    print(f"[prefill] memoized     {m:8.1f} ms/batch  "
+          f"({(1 - m / p) * 100:+.1f}% latency)")
+    print(f"[prefill] memo rate    {st.memo_rate*100:8.1f}%  "
+          f"(hits {st.n_hits}/{st.n_layer_attempts})")
+
+    # decode parity on a REPLAY of an admitted calibration batch
+    # (self-hits): on a hit the decode cache comes from the stored KV
+    # entry, so the gap below is pure codec quantization — parity on the
+    # novel traffic above would fold in input drift and say nothing
+    # about KV fidelity. Both legs are fed the exact leg's tokens
+    # (teacher forcing) so one divergent step can't snowball the logits
+    # gap; agreement counts how often the memoized leg would have
+    # picked the same token anyway.
+    replay = calib[0]
+    h0, a0 = st.n_hits, st.n_layer_attempts
+    le, ce = eng.prefill_exact(replay)
+    lm, cm, st = eng.prefill(replay, stats=st)
+    print(f"[prefill] replay hits  {st.n_hits - h0}"
+          f"/{st.n_layer_attempts - a0}")
+    dmax, agree, total = 0.0, 0, 0
+    t0 = time.perf_counter()
+    for step in range(args.decode_steps):
+        tm = jnp.argmax(lm, -1).reshape(-1)
+        te = jnp.argmax(le, -1).reshape(-1)
+        agree += int((tm == te).sum())
+        total += int(te.shape[0])
+        pos = jnp.int32(args.seq + step)
+        lm, cm = model.decode_step(eng.params, te[:, None], cm, pos)
+        le, ce = model.decode_step(eng.params, te[:, None], ce, pos)
+        dmax = max(dmax, float(jnp.max(jnp.abs(lm - le))))
+    jax.block_until_ready(lm)
+    dt = time.perf_counter() - t0
+    print(f"[prefill] decode       {args.decode_steps} steps x "
+          f"{args.batch} rows in {dt*1e3:.1f} ms "
+          f"({args.decode_steps * args.batch / dt:.0f} tok/s)")
+    print(f"[prefill] parity       max|Δlogits| {dmax:.2e}, greedy "
+          f"agreement {agree}/{total}")
 
 
 def _serve_online(eng, corpus, args):
@@ -162,6 +224,21 @@ def main():
     ap.add_argument("--shard-nprobe", type=int, default=None,
                     help="centroid probes per query when routing to "
                          "shards (default: the store picks)")
+    ap.add_argument("--prefill", action="store_true",
+                    help="memoized causal prefill (DESIGN.md §2.13): "
+                         "serve prefill requests whose hits replay the "
+                         "stored KV entry into a decode cache, and A/B "
+                         "latency + decode parity vs exact prefill "
+                         "(needs a causal arch, e.g. --arch gpt2_small)")
+    ap.add_argument("--decode-steps", type=int, default=8,
+                    help="--prefill: greedy decode continuation length "
+                         "for the parity check")
+    ap.add_argument("--kv-codec", default="auto",
+                    choices=["auto", "f16", "int8", "lowrank"],
+                    help="--prefill: stored-KV codec (auto follows the "
+                         "APM codec: f16 base -> f16 KV, else int8)")
+    ap.add_argument("--kv-rank", type=int, default=None,
+                    help="--prefill: lowrank KV codec rank")
     ap.add_argument("--no-memo", action="store_true")
     ap.add_argument("--no-fast-path", action="store_true",
                     help="force the host-synchronous serving path "
@@ -196,6 +273,14 @@ def main():
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
+    if args.prefill:
+        if args.online or args.varlen:
+            raise SystemExit("--prefill is its own serving leg; drop "
+                             "--online/--varlen")
+        if not cfg.causal:
+            raise SystemExit(
+                f"--prefill needs a causal (decoder-only) arch; "
+                f"{args.arch!r} is bidirectional — try --arch gpt2_small")
     if args.online and not cfg.n_classes:
         cfg = cfg.replace(n_classes=4)
     model = build_model(cfg, layer_loop="unroll")
@@ -232,7 +317,9 @@ def main():
         admit_every=args.admit_every,
         recal_every=2 if args.online else None,
         shards=args.shards, shard_hot=args.shard_hot,
-        shard_route_nprobe=args.shard_nprobe)
+        shard_route_nprobe=args.shard_nprobe,
+        **({"prefill_enabled": True, "prefill_kv_codec": args.kv_codec,
+            "prefill_kv_rank": args.kv_rank} if args.prefill else {}))
     calib = [{"tokens": jnp.asarray(corpus.sample(args.batch)[0])}
              for _ in range(args.calib_batches)]
     t0 = time.perf_counter()
@@ -275,6 +362,12 @@ def main():
             _autotune_threshold(eng, corpus, args, "serve")
         sess.save(args.save_store)
         print(f"[serve] session saved -> {args.save_store}")
+
+    if args.prefill:
+        if args.threshold is None:
+            _autotune_threshold(eng, corpus, args, "prefill")
+        _serve_prefill(eng, model, corpus, args, calib)
+        return
 
     if args.online:
         if args.threshold is None:

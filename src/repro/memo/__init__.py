@@ -46,6 +46,7 @@ _EXPORTS = {
     "RuntimeSpec": ("repro.memo.specs", "RuntimeSpec"),
     "CapacitySpec": ("repro.memo.specs", "CapacitySpec"),
     "ShardSpec": ("repro.memo.specs", "ShardSpec"),
+    "PrefillSpec": ("repro.memo.specs", "PrefillSpec"),
     "FLAT_FIELDS": ("repro.memo.specs", "FLAT_FIELDS"),
     # registries
     "register_codec": ("repro.core.registry", "register_codec"),

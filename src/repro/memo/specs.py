@@ -51,7 +51,7 @@ def _registries():
 __all__ = [
     "EmbedSpec", "IndexSpec", "CodecSpec", "AdmissionPolicy",
     "EvictionPolicy", "RuntimeSpec", "CapacitySpec", "ShardSpec",
-    "MemoSpec", "MemoConfig", "FLAT_FIELDS",
+    "PrefillSpec", "MemoSpec", "MemoConfig", "FLAT_FIELDS",
 ]
 
 
@@ -247,6 +247,12 @@ class ShardSpec:
     hot: int = 32                   # replicated hot-set size (rows)
     route_nprobe: Optional[int] = None  # centroids probed per query
     #                                     (None = IndexSpec.nprobe)
+    # drift repair between full syncs: when a delta sync has spilled
+    # this many rows off their routed shard since the last centroid
+    # (re)fit, the maintenance worker refits the routing centroids from
+    # the current embedding table (rows do NOT move — ownership follows
+    # where they actually live). 0 = wait for the next full sync.
+    refresh_spills: int = 0
 
     def __post_init__(self):
         _require(int(self.shards) >= 0,
@@ -256,6 +262,36 @@ class ShardSpec:
                  f"shard hot-set size must be >= 0: {self.hot}")
         _require(self.route_nprobe is None or int(self.route_nprobe) >= 1,
                  f"route_nprobe must be None or >= 1: {self.route_nprobe}")
+        _require(int(self.refresh_spills) >= 0,
+                 f"refresh_spills must be >= 0: {self.refresh_spills}")
+
+
+@dataclass
+class PrefillSpec:
+    """Memoized causal prefill (AttnCache; DESIGN.md §2.13): extend each
+    memo entry from "APM only" to "APM + per-layer K/V", so a prefill
+    hit skips the layer's attention AND materializes that layer's decode
+    cache from the stored entry. ``enabled=False`` (the default) keeps
+    the classic APM-only entry layout and every other field inert."""
+    enabled: bool = False
+    # decode-cache length handed back by a memoized prefill (None =
+    # 2x the prompt length; set it explicitly when you intend to
+    # decode further than the prompt's own length)
+    cache_len: Optional[int] = None
+    # stored-KV wire format: "auto" follows the APM codec (f16 → f16,
+    # int8/lowrank → int8 per-row symmetric), or force f16|int8|lowrank
+    kv_codec: str = "auto"
+    # lowrank KV rank (None = max(4, S//8), mirroring the APM codec)
+    kv_rank: Optional[int] = None
+
+    def __post_init__(self):
+        _require(self.cache_len is None or int(self.cache_len) >= 1,
+                 f"prefill cache_len must be None or >= 1: {self.cache_len}")
+        _require(self.kv_codec in ("auto", "f16", "int8", "lowrank"),
+                 f"prefill kv_codec must be auto|f16|int8|lowrank: "
+                 f"{self.kv_codec!r}")
+        _require(self.kv_rank is None or int(self.kv_rank) >= 1,
+                 f"prefill kv_rank must be None or >= 1: {self.kv_rank}")
 
 
 # old flat MemoConfig field → (component, field) — the single source of
@@ -305,6 +341,12 @@ FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
     "shard_axis": ("shard", "axis"),
     "shard_hot": ("shard", "hot"),
     "shard_route_nprobe": ("shard", "route_nprobe"),
+    "shard_refresh_spills": ("shard", "refresh_spills"),
+    # new in prefill memoization (DESIGN.md §2.13)
+    "prefill_enabled": ("prefill", "enabled"),
+    "prefill_cache_len": ("prefill", "cache_len"),
+    "prefill_kv_codec": ("prefill", "kv_codec"),
+    "prefill_kv_rank": ("prefill", "kv_rank"),
 }
 
 
@@ -324,13 +366,15 @@ class MemoSpec:
     runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
     capacity: CapacitySpec = field(default_factory=CapacitySpec)
     shard: ShardSpec = field(default_factory=ShardSpec)
+    prefill: PrefillSpec = field(default_factory=PrefillSpec)
 
     _COMPONENTS = ("embed", "index", "codec", "admission", "eviction",
-                   "runtime", "capacity", "shard")
+                   "runtime", "capacity", "shard", "prefill")
     _COMPONENT_TYPES = {"embed": EmbedSpec, "index": IndexSpec,
                         "codec": CodecSpec, "admission": AdmissionPolicy,
                         "eviction": EvictionPolicy, "runtime": RuntimeSpec,
-                        "capacity": CapacitySpec, "shard": ShardSpec}
+                        "capacity": CapacitySpec, "shard": ShardSpec,
+                        "prefill": PrefillSpec}
 
     def __post_init__(self):
         # fail-fast on the likeliest migration mistake: passing a string

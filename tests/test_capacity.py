@@ -847,6 +847,100 @@ def test_launch_server_rejects_unknown_fault(monkeypatch, capsys):
     assert "invalid choice" in err and "disk_write_io" in err
 
 
+# ---------------------------------- read-only opener (ISSUE 10 satellite)
+
+def _rows_digest(tier):
+    """Order-stable CRC over every live row's parts + embs + lens —
+    computed identically by writer and reader to prove byte parity."""
+    import zlib
+    parts, embs, lens, _ = tier.rows_at(tier.live_slots)
+    crc = 0
+    for p in parts:
+        crc = zlib.crc32(np.ascontiguousarray(p).tobytes(), crc)
+    crc = zlib.crc32(np.ascontiguousarray(embs).tobytes(), crc)
+    return zlib.crc32(np.ascontiguousarray(lens).tobytes(), crc)
+
+
+def test_read_only_open_against_live_writer(tmp_path):
+    """Cross-process read sharing (ROADMAP item 4): while THIS process
+    holds the writer open (LOCK held, journal live), a subprocess opens
+    the same directory with ``read_only=True`` — bypassing the pidfile,
+    mapping the arenas ``mode='r'``, and replaying the writer's
+    un-checkpointed WAL tail into the overlay. The reader sees every
+    row byte-identically (checkpointed AND journal-only), verifies
+    clean, searches, and every mutator raises MemoStoreError; the
+    writer keeps working afterwards."""
+    rng = np.random.default_rng(11)
+    root = str(tmp_path / "tier")
+    t = _tier(root, capacity=4)
+    parts, embs, lens = _tier_rows(rng, t.codec, 6)
+    t.append(parts, embs, lens)
+    t.checkpoint()
+    p2, e2, l2 = _tier_rows(rng, t.codec, 2)
+    t.append(p2, e2, l2)          # journal-only: overlay rows for readers
+    code = textwrap.dedent(f"""\
+        import os, sys, zlib
+        import numpy as np
+        from repro.core.capacity import CapacityTier
+        from repro.core.codec import get_codec
+        from repro.core.faults import MemoStoreError
+
+        root = {root!r}
+        assert os.path.exists(os.path.join(root, "LOCK"))  # writer alive
+        t = CapacityTier.open(root, codec=get_codec("f16", (2, 4, 4)),
+                              embed_dim=8, read_only=True)
+        assert t.read_only and t.recovery["read_only"]
+        assert t.journal is None                 # no WAL handle, ever
+        bad = t.verify()
+        assert bad.size == 0, bad
+        sl = t.live_slots
+        parts, embs, lens, _ = t.rows_at(sl)
+        crc = 0
+        for p in parts:
+            crc = zlib.crc32(np.ascontiguousarray(p).tobytes(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(embs).tobytes(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(lens).tobytes(), crc)
+        _, got = t.search(embs, k=1)             # overlay rows searchable
+        assert (got[:, 0] == sl).all(), got[:, 0]
+        for op in (lambda: t.append(parts, embs, lens),
+                   lambda: t.retire([int(sl[0])]),
+                   lambda: t.checkpoint(),
+                   lambda: t.compact()):
+            try:
+                op()
+            except MemoStoreError as e:
+                assert "read_only" in str(e), e
+            else:
+                sys.exit("mutator did not raise on a read-only tier")
+        t.close()
+        print("RO-OK", t.live_count, t.recovery["overlay_rows"], crc)
+        """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
+    assert "RO-OK" in out.stdout, out.stderr[-3000:]
+    _, live, overlay, crc = out.stdout.split()
+    assert int(live) == 8
+    assert int(overlay) == 2      # exactly the un-checkpointed appends
+    assert int(crc) == _rows_digest(t)           # byte parity with writer
+    # the reader changed nothing: the writer's lock, journal and arenas
+    # all still work
+    p3, e3, l3 = _tier_rows(rng, t.codec, 1)
+    t.append(p3, e3, l3)
+    t.checkpoint()
+    assert t.live_count == 9
+    assert t.verify().size == 0
+    t.close()
+
+
+def test_read_only_open_requires_manifest(tmp_path):
+    """A directory that was never checkpointed has nothing to map."""
+    with pytest.raises(MemoStoreError, match="read-only"):
+        CapacityTier.open(str(tmp_path / "nope"),
+                          codec=get_codec("f16", APM), embed_dim=EMB,
+                          read_only=True)
+
+
 # ------------------------------------------------------------ spec plumbing
 
 def test_capacity_spec_flat_roundtrip_and_validation(tmp_path):

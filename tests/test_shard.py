@@ -251,6 +251,67 @@ def test_engine_sharded_matches_select(sharded_engine, thr):
         assert st.memo_rate == 0.0
 
 
+# ---------------------------------- centroid refresh (ISSUE 10 satellite)
+
+def test_centroid_refresh_trigger_and_fixed_shapes():
+    """Routing-drift repair between full syncs (ROADMAP item 1): once
+    the spill counter crosses ``refresh_spills``, the NEXT delta sync
+    refits centroids from the resident embeddings in place — fixed
+    centroid count (no search_args retrace), no row movement, counter
+    reset — and routed search still resolves every entry. Pressure
+    itself needs a full preferred shard while others have room, which
+    the clamped 1-shard mesh cannot produce; the 8-way subprocess test
+    drives that end-to-end, so here the drift clock is primed directly
+    to pin down the trigger + refresh mechanics."""
+    rng = np.random.default_rng(5)
+    s = _mk(refresh_spills=2)
+    apms, embs = _entries(rng, 10)
+    slots = s.admit(apms, embs)
+    s.sync(force_full=True)
+    shape0 = s._centroids_host.shape
+    assert s.n_centroid_refreshes == 0
+    pos0 = dict(s._slot_pos)
+    s._spills_since_refresh = 2          # primed past the threshold
+    a2, e2 = _entries(rng, 2)
+    e2[:, 0] += 120.0                    # clear of the first batch
+    new = s.admit(a2, e2)
+    s.sync()
+    assert s.n_centroid_refreshes == 1
+    assert s._spills_since_refresh == 0  # fresh fit restarts the clock
+    assert s.shard_stats()["n_centroid_refreshes"] == 1
+    # the refresh ships only the tiny replicated routing state: the
+    # centroid table keeps its shape and no resident row moved
+    assert s._centroids_host.shape == shape0
+    assert all(s._slot_pos.get(k) == v for k, v in pos0.items()
+               if k in s._slot_pos)
+    q = np.concatenate([embs, e2])
+    _, idx = s.device_index.search(q)
+    np.testing.assert_array_equal(idx[:, 0], np.concatenate([slots, new]))
+    # a full sync refits from scratch and restarts the drift clock
+    s._spills_since_refresh = 1
+    s.sync(force_full=True)
+    assert s._spills_since_refresh == 0
+    assert s.n_centroid_refreshes == 1   # full sync is not a "refresh"
+
+
+def test_centroid_refresh_disabled_by_default():
+    """``refresh_spills=0`` (the default) never refreshes between full
+    syncs no matter how much placement pressure accumulates."""
+    rng = np.random.default_rng(6)
+    s = _mk()
+    assert s.refresh_spills == 0
+    apms, embs = _entries(rng, 6)
+    s.admit(apms, embs)
+    s.sync(force_full=True)
+    s._spills_since_refresh = 10 ** 6
+    a2, e2 = _entries(rng, 2)
+    e2[:, 0] += 120.0
+    s.admit(a2, e2)
+    s.sync()
+    assert s.n_centroid_refreshes == 0
+    assert s.shard_stats()["n_centroid_refreshes"] == 0
+
+
 # ---------------------------------------------------------- 8-way mesh
 
 _MESH8_CODE = r"""
@@ -268,10 +329,12 @@ embs = rng.normal(0, 0.01, (N, DIM)).astype(np.float32)
 embs[:, 0] += 10.0 * np.arange(1, N + 1)
 
 s = ShardedMemoStore(APM, DIM, n_shards=8, capacity=16, hot_k=4,
-                     route_nprobe=2, index_kind="exact", codec="f16")
+                     route_nprobe=2, index_kind="exact", codec="f16",
+                     refresh_spills=6)
 assert s.n_shards == 8, s.n_shards
 slots = s.admit(apms, embs)
 s.sync(force_full=True)
+C0 = s._centroids_host.shape[0]
 st = s.shard_stats()
 occ = np.asarray(st["occupancy"])
 assert occ.sum() == N, occ
@@ -318,8 +381,16 @@ assert s.n_shard_evictions + s.n_spills > 0, \
 occ2 = s.shard_occupancy()
 live = int(s.db.live_mask[: len(s.db)].sum())
 assert occ2.sum() == live, (occ2.tolist(), live)
+# the same pressure is the drift signal: it crossed refresh_spills=6,
+# so a delta-sync centroid refresh re-fit routing to the RESIDENT
+# distribution (fixed C — no search_args retrace) without moving rows
+assert s.n_centroid_refreshes >= 1, s._spills_since_refresh
+assert s.shard_stats()["n_centroid_refreshes"] == s.n_centroid_refreshes
+assert s._centroids_host.shape[0] == C0, (s._centroids_host.shape, C0)
+d3, idx3 = s.device_index.search(eb[:8])   # post-refresh routing works
+assert np.asarray(d3)[:, 0].max() < 1.0, np.asarray(d3)[:, 0]
 print("SHARD8-OK", st["imbalance"], bumped, s.n_shard_evictions,
-      s.n_spills)
+      s.n_spills, s.n_centroid_refreshes)
 """
 
 
